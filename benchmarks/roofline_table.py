@@ -1,0 +1,107 @@
+"""§Roofline table generator: reads experiments/dryrun/*.json artifacts and
+emits the per-(arch × shape × mesh) three-term roofline markdown."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+__all__ = ["load", "format_table", "summarize"]
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR, tag: str = "") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag:
+            if len(parts) < 3 or not parts[2].endswith(f"-{tag}"):
+                continue
+        elif len(parts) >= 3 and "-" in parts[2]:
+            continue  # tagged (hillclimb) artifact, not a baseline
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def _note(rec: Dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    roof = rec.get("roofline", {})
+    dom = roof.get("dominant", "")
+    kind = rec.get("kind", "")
+    if dom == "compute_s":
+        if roof.get("useful_flops_ratio", 1) < 0.6:
+            return "cut recompute: relax remat / drop the duplicate fwd"
+        return "compute-bound at high useful-FLOPs: already near the right wall"
+    if dom == "memory_s":
+        if kind == "decode":
+            return "decode reads whole KV/state per token: shrink cache dtype (int8 KV) or batch more tokens per weight pass"
+        return "fuse/avoid materialized intermediates; bigger microbatches amortize weight traffic"
+    if dom == "collective_s":
+        return "reshard to cut gather/scatter volume (e.g. no-SP, or 2D-shard the embedding), overlap via async collectives"
+    return ""
+
+
+def format_table(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant | MF/HLO | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r.get("mesh", ""), r.get("arch", ""), r.get("shape", ""))):
+        if r.get("status") != "ok":
+            out.append(
+                f"| {r.get('arch')} | {r.get('shape')} | {r.get('mesh')} | — | — | — | "
+                f"{r.get('status', '?')} | — | — | |"
+            )
+            continue
+        roof = r["roofline"]
+        out.append(
+            "| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {x:.4f} | {dom} | "
+            "{uf:.2f} | {rf:.2f} | {note} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=roof["compute_s"], m=roof["memory_s"], x=roof["collective_s"],
+                dom=roof["dominant"].replace("_s", ""),
+                uf=roof.get("useful_flops_ratio", float("nan")),
+                rf=roof.get("roofline_fraction", float("nan")),
+                note=_note(r),
+            )
+        )
+    return "\n".join(out)
+
+
+def summarize(rows: List[Dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skip = [r for r in rows if str(r.get("status", "")).startswith("SKIP")]
+    fail = [r for r in rows if r not in ok and r not in skip]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        d = r["roofline"]["dominant"]
+        doms[d] = doms.get(d, 0) + 1
+    lines = [
+        f"cells ok={len(ok)} skipped={len(skip)} failed={len(fail)}",
+        "dominant-term histogram: "
+        + ", ".join(f"{k.replace('_s', '')}={v}" for k, v in sorted(doms.items())),
+    ]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"].get("roofline_fraction", 9e9))
+        most_coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+        lines.append(
+            f"worst roofline fraction: {worst['arch']}×{worst['shape']}×{worst['mesh']}"
+            f" ({worst['roofline'].get('roofline_fraction', 0):.3f})"
+        )
+        lines.append(
+            f"most collective-bound: {most_coll['arch']}×{most_coll['shape']}×{most_coll['mesh']}"
+            f" ({most_coll['roofline']['collective_s']:.4f}s)"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = load()
+    print(format_table(rows))
+    print()
+    print(summarize(rows))

@@ -1,0 +1,85 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Runs every paper-table benchmark plus the framework benches, prints the
+tables, and mirrors them under experiments/bench/ for EXPERIMENTS.md.
+Pass --fast (default) or --full for the larger Table II scale factor;
+--skip-train skips the CPU train-throughput bench.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def _section(title: str) -> None:
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="large Table II scale")
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    artifacts = {}
+
+    _section("Table I — moving dataframes into a user function (paper Table I)")
+    from benchmarks import table1_data_movement as t1
+
+    r1 = t1.run()
+    print(t1.format_table(r1))
+    artifacts["table1"] = r1
+
+    _section("Table II — bytes processed: result vs scan vs differential (paper Table II)")
+    from benchmarks import table2_cache_bytes as t2
+
+    r2 = t2.run(fast=not args.full)
+    print(t2.format_table(r2))
+    artifacts["table2"] = r2
+
+    _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
+    from benchmarks import kernel_bench as kb
+
+    r3 = kb.run()
+    print(kb.format_table(r3))
+    artifacts["kernels"] = r3
+
+    if not args.skip_train:
+        _section("Train-step throughput, reduced configs (CPU smoke)")
+        from benchmarks import train_bench as tb
+
+        r4 = tb.run()
+        print(tb.format_table(r4))
+        artifacts["train"] = r4
+
+    _section("Roofline summaries (from dry-run artifacts)")
+    from benchmarks import roofline_table as rt
+
+    for label, d in (
+        ("baseline (paper-faithful substrate)", rt.DRYRUN_DIR),
+        ("optimized (post §Perf iterations)",
+         os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun_final")),
+    ):
+        rows = rt.load(d)
+        if rows:
+            print(f"-- {label}:")
+            print(rt.summarize(rows))
+            artifacts[f"roofline_{label.split()[0]}"] = rt.summarize(rows)
+        else:
+            print(f"-- {label}: no artifacts (run: python -m repro.launch.dryrun)")
+    print("\n(full tables: experiments/roofline_baseline.md, "
+          "experiments/roofline_optimized.md)")
+
+    with open(os.path.join(OUT_DIR, "bench_results.json"), "w") as f:
+        json.dump(artifacts, f, indent=1, default=str)
+    print(f"\nartifacts -> {os.path.abspath(OUT_DIR)}/bench_results.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Batched serving example: continuous batching over mixed requests.
+
+Loads a reduced mixtral-family MoE model, submits a burst of requests with
+different prompt lengths / sampling settings, and drains the engine —
+printing per-request latency and the engine's batching efficiency.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.models.registry import get_config, get_model
+from repro.serve import GenerateRequest, ServeEngine
+
+
+def main():
+    cfg = get_config("mixtral-8x22b").reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    print(f"model: reduced mixtral family ({cfg.num_experts} experts, "
+          f"top-{cfg.experts_per_token}), vocab {cfg.vocab_size}")
+
+    eng = ServeEngine(api, params, slots=4, max_context=128)
+    rng = np.random.default_rng(0)
+
+    reqs = []
+    for i in range(10):
+        plen = int(rng.integers(4, 40))
+        reqs.append(
+            GenerateRequest(
+                prompt=rng.integers(1, cfg.vocab_size, size=plen).astype(np.int32),
+                max_new_tokens=int(rng.integers(8, 24)),
+                temperature=0.0 if i % 2 == 0 else 0.8,
+                top_k=0 if i % 2 == 0 else 20,
+            )
+        )
+    t0 = time.perf_counter()
+    rids = [eng.submit(r) for r in reqs]
+    results = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+
+    total_new = sum(len(results[r].tokens) for r in rids)
+    print(f"\n{len(reqs)} requests, 4 slots, {eng.decode_steps} decode steps, "
+          f"{eng.prefills} prefills")
+    print(f"generated {total_new} tokens in {wall:.2f}s "
+          f"({total_new/wall:.1f} tok/s on CPU)")
+    print(f"batching efficiency: {total_new/max(eng.decode_steps*4,1):.0%} "
+          f"of slot-steps produced a token\n")
+    for r in rids[:5]:
+        res = results[r]
+        print(f"req {res.req_id}: prompt {res.prompt_len:>2} -> "
+              f"{len(res.tokens):>2} new tokens, {res.wall_s:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

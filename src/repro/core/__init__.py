@@ -1,0 +1,33 @@
+"""The paper's primary contribution: declarative scan abstractions and the
+differential columnar cache (FaaS and Furious, §II–§III), plus the scan
+planner/executor that realizes logical dataframes from object storage.
+"""
+
+from repro.core.intervals import Interval, IntervalSet
+from repro.core.columnar import ChunkedTable, Table, concat_tables, read_ipc, write_ipc
+from repro.core.scan import Scan, fragments_overlapping, read_window, scan_cost_bytes
+from repro.core.cache import CacheElement, CachePlan, DifferentialCache
+from repro.core.baselines import NoCache, ScanCache
+from repro.core.planner import ResultCachingExecutor, ScanExecutor, ScanReport
+
+__all__ = [
+    "Interval",
+    "IntervalSet",
+    "Table",
+    "ChunkedTable",
+    "concat_tables",
+    "read_ipc",
+    "write_ipc",
+    "Scan",
+    "fragments_overlapping",
+    "read_window",
+    "scan_cost_bytes",
+    "CacheElement",
+    "CachePlan",
+    "DifferentialCache",
+    "ScanCache",
+    "NoCache",
+    "ScanExecutor",
+    "ResultCachingExecutor",
+    "ScanReport",
+]

@@ -1,0 +1,78 @@
+"""Synthetic token corpora as lakehouse tables.
+
+Rows: ``pos`` (global token position — the table's sort key, so windows of
+token positions are exactly the cache's filter intervals), ``token``
+(int32 id), ``doc_id`` (document boundary marker for packing/masking).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.columnar import Table
+from repro.lake.catalog import Catalog
+
+__all__ = ["write_token_corpus", "CORPUS_SCHEMA"]
+
+CORPUS_SCHEMA = {"pos": "<i8", "token": "<i4", "doc_id": "<i4"}
+
+
+def write_token_corpus(
+    catalog: Catalog,
+    table: str,  # "namespace.name"
+    num_tokens: int,
+    vocab_size: int,
+    *,
+    seed: int = 0,
+    mean_doc_len: int = 512,
+    eos_id: int = 0,
+    start_pos: int = 0,
+) -> None:
+    """Create (if needed) and append a synthetic corpus.
+
+    Markov-ish token stream (mixture of a per-doc bigram walk and uniform
+    noise) so a model trained on it has learnable structure — losses in the
+    e2e example must go down, not just run.
+    """
+    ns, name = table.rsplit(".", 1)
+    try:
+        catalog.table(table)
+    except KeyError:
+        catalog.create_table(ns, name, CORPUS_SCHEMA, "pos")
+
+    rng = np.random.default_rng(seed)
+    tokens = np.empty(num_tokens, np.int32)
+    doc_ids = np.empty(num_tokens, np.int32)
+    i = 0
+    doc = 0
+    while i < num_tokens:
+        L = int(rng.geometric(1.0 / mean_doc_len))
+        L = min(max(2, L), num_tokens - i)  # last doc may be short
+        # bigram walk: next = (prev * a + b) mod V with doc-specific (a, b)
+        a = int(rng.integers(2, 64))
+        b = int(rng.integers(1, vocab_size))
+        t = np.empty(L, np.int64)
+        t[0] = rng.integers(1, vocab_size)
+        for j in range(1, L):
+            if rng.random() < 0.1:
+                t[j] = rng.integers(1, vocab_size)
+            else:
+                t[j] = (t[j - 1] * a + b) % (vocab_size - 1) + 1
+        t[-1] = eos_id
+        tokens[i : i + L] = t.astype(np.int32)
+        doc_ids[i : i + L] = doc
+        i += L
+        doc += 1
+
+    catalog.append(
+        table,
+        Table(
+            {
+                "pos": np.arange(start_pos, start_pos + num_tokens, dtype=np.int64),
+                "token": tokens,
+                "doc_id": doc_ids,
+            }
+        ),
+    )

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel is a subpackage with ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle).  Validated with interpret=True on CPU; compiled on TPU.
+
+Paper mapping (see DESIGN.md §5):
+- fragment_gather — device-side assembly of differentially-cached
+  fragments into a dense block (paper Fig. 4 bottom row).
+- dequant — decode-once economics of the columnar cache (paper Table I).
+- flash_attention — the downstream consumer's prefill/train hot spot.
+- mamba2_ssd — SSD scan for the mamba2/zamba2 architectures.
+"""
+
+from repro.kernels.dequant import dequant, dequant_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.fragment_gather import fragment_gather, gather_ref
+from repro.kernels.mamba2_ssd import ssd, ssd_ref_chunked, ssd_ref_sequential
+
+__all__ = [
+    "dequant", "dequant_ref",
+    "flash_attention", "attention_ref",
+    "fragment_gather", "gather_ref",
+    "ssd", "ssd_ref_chunked", "ssd_ref_sequential",
+]

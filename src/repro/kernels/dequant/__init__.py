@@ -1,0 +1,4 @@
+from repro.kernels.dequant.ops import dequant
+from repro.kernels.dequant.ref import dequant_ref
+
+__all__ = ["dequant", "dequant_ref"]

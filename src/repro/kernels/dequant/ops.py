@@ -1,0 +1,41 @@
+"""jit'd wrapper for the dequantize kernel (pads to tile multiples)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dequant.kernel import dequant_call
+
+__all__ = ["dequant"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "row_block", "col_block", "interpret")
+)
+def dequant(
+    x: jax.Array,  # (R, C) int8
+    scale: jax.Array,  # (C,) f32
+    *,
+    out_dtype=jnp.bfloat16,
+    row_block: int = 256,
+    col_block: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _auto_interpret() if interpret is None else interpret
+    R, C = x.shape
+    rb, cb = min(row_block, R), min(col_block, C)
+    Rp, Cp = -(-R // rb) * rb, -(-C // cb) * cb
+    xp = jnp.pad(x, ((0, Rp - R), (0, Cp - C)))
+    sp = jnp.pad(scale, (0, Cp - C))
+    out = dequant_call(
+        xp, sp, out_dtype=out_dtype, row_block=rb, col_block=cb, interpret=interpret
+    )
+    return out[:R, :C]

@@ -1,0 +1,12 @@
+"""Oracle: jnp dequantize."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dequant_ref"]
+
+
+def dequant_ref(x: jax.Array, scale: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    return (x.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]).astype(out_dtype)

@@ -1,0 +1,167 @@
+"""Blocked online-softmax (flash) attention — Pallas TPU kernel.
+
+TPU-native design notes (vs. the CUDA flash-attention formulation):
+
+- The grid is ``(B, KV_heads, nQ, nK)`` with the KV-block dimension
+  innermost: TPU grids execute **sequentially** per core, so the online
+  softmax carry (m, l, acc) lives in VMEM *scratch* that persists across
+  the nK steps — no atomics, no shared-memory tree reduction, which is
+  how the warp-level CUDA algorithm maps onto a systolic machine.
+- GQA is handled by folding the query-head *group* dim G = H/KV into the
+  q block: one kernel instance attends a (G, QB, hd) query tile against a
+  (KB, hd) KV tile, so the MXU sees [G·QB, hd] × [hd, KB] matmuls — all
+  dims multiples of the 128 lane width for the production configs.
+- Causal + sliding-window masking is positional arithmetic on block
+  offsets; fully-masked KV blocks are skipped with ``pl.when`` (the DMA
+  still streams the block in; on real hardware a grid-level skip via
+  ``pltpu.PrefetchScalarGridSpec`` could elide that too, noted in
+  DESIGN.md).
+- fp32 accumulation throughout; inputs/outputs bf16 or f32.
+
+Padding contract: the wrapper pads S up to a block multiple. Padded KEY
+positions are masked by the causal test (their kpos exceeds every real
+qpos); padded QUERY rows produce garbage that the wrapper slices off —
+their l term is 0, guarded in the final normalization.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+_NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref,  # (1, 1, G, QB, hd)
+    k_ref,  # (1, 1, KB, hd)
+    v_ref,  # (1, 1, KB, hd)
+    o_ref,  # (1, 1, G, QB, hd)
+    m_scr,  # (G, QB)        f32 scratch: running max
+    l_scr,  # (G, QB)        f32 scratch: running denominator
+    acc_scr,  # (G, QB, hd)  f32 scratch: running numerator
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    q_block: int,
+    k_block: int,
+    kv_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * q_block
+    k_start = ik * k_block
+
+    # block-level reachability: skip KV blocks entirely in the masked
+    # future (causal) or entirely behind the sliding window
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + q_block - 1
+    if window > 0:
+        reachable = jnp.logical_and(
+            reachable, k_start + k_block - 1 > q_start - window
+        )
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, QB, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (KB, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (KB, hd)
+
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G, QB, KB)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, k_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, k_block), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None], s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))  # (G, QB)
+        p = jnp.exp(s - m_new[..., None])  # (G, QB, KB)
+        # kill contributions of fully-masked rows (exp(-inf - -inf) traps)
+        p = jnp.where(mask[None], p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # padded / fully-masked query rows
+        o_ref[0, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q: jax.Array,  # (B, KV, G, S, hd)
+    k: jax.Array,  # (B, KV, S, hd)
+    v: jax.Array,  # (B, KV, S, hd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    k_block: int = 512,
+    kv_len: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    B, KV, G, S, hd = q.shape
+    assert k.shape == (B, KV, S, hd) and v.shape == (B, KV, S, hd)
+    assert S % q_block == 0 and S % k_block == 0, (S, q_block, k_block)
+    nq, nk = S // q_block, S // k_block
+    kv_len = S if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        q_block=q_block,
+        k_block=k_block,
+        kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, q_block, hd), lambda b, h, iq, ik: (b, h, 0, iq, 0)),
+            pl.BlockSpec((1, 1, k_block, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, k_block, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, q_block, hd), lambda b, h, iq, ik: (b, h, 0, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, q_block), jnp.float32),
+            pltpu.VMEM((G, q_block), jnp.float32),
+            pltpu.VMEM((G, q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""jit'd public wrapper: model-layout (B, S, H, hd) GQA flash attention.
+
+Handles: GQA head folding (H = KV × G), padding S to the block size,
+block-size clamping for short sequences, and interpret-mode selection
+(interpret on CPU/GPU hosts; compiled on real TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "q_block", "k_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hd)
+    *,
+    scale: Optional[float] = None,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    k_block: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = hd**-0.5 if scale is None else scale
+    interpret = _auto_interpret() if interpret is None else interpret
+
+    qb = min(q_block, S)
+    kb = min(k_block, S)
+    S_pad = -(-S // max(qb, kb)) * max(qb, kb)
+    # (B,S,H,hd) -> (B,KV,G,S,hd); (B,S,KV,hd) -> (B,KV,S,hd)
+    qk = jnp.moveaxis(q.reshape(B, S, KV, G, hd), 1, 3)
+    kk = jnp.moveaxis(k, 1, 2)
+    vk = jnp.moveaxis(v, 1, 2)
+    if S_pad != S:
+        qk = jnp.pad(qk, ((0, 0), (0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        kk = jnp.pad(kk, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+        vk = jnp.pad(vk, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+    out = flash_attention_call(
+        qk, kk, vk,
+        scale=scale, causal=causal, window=window,
+        q_block=qb, k_block=kb, kv_len=S, interpret=interpret,
+    )
+    out = jnp.moveaxis(out, 3, 1)[:, :S]  # (B,S,KV,G,hd)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,4 @@
+from repro.kernels.fragment_gather.ops import fragment_gather
+from repro.kernels.fragment_gather.ref import gather_ref
+
+__all__ = ["fragment_gather", "gather_ref"]

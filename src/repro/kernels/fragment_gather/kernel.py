@@ -1,0 +1,77 @@
+"""Fragment row-gather — Pallas TPU kernel (the paper's Fig. 4, on-device).
+
+Paper tie-in: the differential cache assembles a logical dataframe from
+*fragments* — some rows from cached Arrow buffers, some from a fresh
+residual scan.  On the TPU host that assembly is zero-copy (numpy views);
+on the **device** the token block handed to ``train_step`` must be a dense
+``(rows, cols)`` array in HBM.  This kernel performs that materialization:
+``out[i, :] = src[idx[i], :]`` where ``idx`` encodes the fragment layout
+(runs of consecutive source rows, one run per fragment).
+
+TPU-native design:
+- ``pltpu.PrefetchScalarGridSpec``: the row-index vector is *scalar-
+  prefetched* — it parameterizes the input ``BlockSpec``'s index_map, so
+  the DMA engine streams exactly the requested source row-tile per grid
+  step.  This is the TPU analogue of a gather: address generation moves
+  into the block-index computation, not per-element loads (no CUDA-style
+  per-thread pointer chasing).
+- The column dimension is tiled (CB multiple of 128 lanes); rows move in
+  tiles of RB rows (sublane-aligned, RB=8 default), with the constraint
+  that indices are *block-aligned runs*: ``idx`` is given per row-tile,
+  pointing at the source row-tile.  The ops.py wrapper converts an
+  arbitrary per-row index vector into this form when possible (fragment
+  runs are naturally contiguous) and falls back to RB=1 otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fragment_gather_call"]
+
+
+def _gather_kernel(idx_ref, src_ref, o_ref):
+    # the interesting work happened in the index_map; the body is a copy
+    # (and the place a fused transform — e.g. dequant — plugs in)
+    o_ref[...] = src_ref[...]
+
+
+def fragment_gather_call(
+    src: jax.Array,  # (Ns, C) source rows (concatenated fragment buffers)
+    block_idx: jax.Array,  # (nR,) int32: source row-TILE index per output row-tile
+    *,
+    row_block: int,
+    col_block: int = 512,
+    out_rows: int,
+    interpret: bool = True,
+) -> jax.Array:
+    Ns, C = src.shape
+    assert out_rows % row_block == 0
+    assert Ns % row_block == 0, "source padded to row-tile multiple by ops.py"
+    cb = min(col_block, C)
+    assert C % cb == 0, "columns padded to lane multiple by ops.py"
+    nR = out_rows // row_block
+    nC = C // cb
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nR, nC),
+            in_specs=[
+                pl.BlockSpec(
+                    (row_block, cb), lambda i, j, idx: (idx[i], j)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (row_block, cb), lambda i, j, idx: (i, j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((out_rows, C), src.dtype),
+        interpret=interpret,
+    )(block_idx, src)

@@ -1,0 +1,75 @@
+"""jit'd wrapper: arbitrary row-index gather via the tiled Pallas kernel.
+
+Converts a per-row index vector into the kernel's block-run form:
+if every RB-aligned group of indices is a contiguous run starting at an
+RB-aligned source row (the common case — fragments are contiguous row
+ranges), rows move in (RB, CB) tiles; otherwise falls back to RB=1
+(row-granular DMA, still lane-tiled in columns).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fragment_gather.kernel import fragment_gather_call
+
+__all__ = ["fragment_gather"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def fragment_gather(
+    src: jax.Array,  # (Ns, C)
+    row_idx,  # (R,) int — host-known fragment layout (numpy or list)
+    *,
+    row_block: int = 8,
+    col_block: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    interpret = _auto_interpret() if interpret is None else interpret
+    row_idx = np.asarray(row_idx, np.int32)
+    R = int(row_idx.shape[0])
+    Ns, C = src.shape
+
+    # try RB-tiled: indices in each RB group contiguous AND tile-aligned
+    rb = row_block
+    ok = R % rb == 0
+    if ok:
+        grouped = row_idx.reshape(-1, rb)
+        runs = (grouped == grouped[:, :1] + np.arange(rb, dtype=np.int32)).all()
+        aligned = (grouped[:, 0] % rb == 0).all()
+        ok = bool(runs and aligned)
+    if not ok:
+        rb = 1
+
+    block_idx = jnp.asarray(row_idx.reshape(-1, rb)[:, 0] // rb, jnp.int32)
+    out_rows = R if R % rb == 0 else R  # R % 1 == 0 always in fallback
+
+    cb = min(col_block, C) if C >= 128 else C
+    src_p = _pad_axis(_pad_axis(src, 0, rb), 1, cb)
+    out = fragment_gather_call(
+        src_p,
+        block_idx,
+        row_block=rb,
+        col_block=cb,
+        out_rows=out_rows,
+        interpret=interpret,
+    )
+    return out[:R, :C]

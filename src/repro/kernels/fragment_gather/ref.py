@@ -1,0 +1,13 @@
+"""Oracle: plain jnp row gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gather_ref"]
+
+
+def gather_ref(src: jax.Array, row_idx: jax.Array) -> jax.Array:
+    """out[i] = src[row_idx[i]] — (R,) indices over (Ns, C) rows."""
+    return jnp.take(src, row_idx, axis=0)

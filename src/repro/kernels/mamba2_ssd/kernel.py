@@ -1,0 +1,142 @@
+"""Chunked state-space-duality (Mamba2 SSD) scan — Pallas TPU kernel.
+
+Mapping arXiv:2405.21060 §6 onto the TPU memory hierarchy:
+
+- Grid ``(B, nH, nC)`` with the **chunk** dimension innermost: TPU grid
+  steps run sequentially, so the inter-chunk recurrent state ``h``
+  (HB, P, N) lives in VMEM scratch and flows across chunk steps — the
+  lax.scan of the pure-JAX formulation becomes the grid walk itself,
+  with zero HBM round-trips for the state.
+- Per chunk, the three SSD terms are dense MXU matmuls on VMEM tiles:
+    intra:  (C·Bᵀ ⊙ L) · (dt·x)      — (Q,Q) scores × (Q, HB·P)
+    state:  Bᵀ · (w ⊙ x)             — contribution of this chunk
+    inter:  C · h_prev               — carry-in applied to this chunk
+- Heads are blocked (HB per step) so the decay tensor (Q, Q, HB) and the
+  state (HB, P, N) stay inside VMEM for production sizes
+  (Q=256, HB=8, P=64, N=128 ⇒ ~4.5 MB fp32 working set).
+- All decay arithmetic in fp32; masking is applied inside the exponent
+  (exp of +big in the dead triangle would overflow).
+
+Single B/C group (G=1), matching the assigned mamba2/zamba2 configs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_kernel", "ssd_call"]
+
+
+def ssd_kernel(
+    x_ref,  # (1, Q, HB, P)
+    dt_ref,  # (1, Q, HB)      fp32, softplus'ed
+    A_ref,  # (HB,)            fp32, negative
+    B_ref,  # (1, Q, N)
+    C_ref,  # (1, Q, N)
+    y_ref,  # (1, Q, HB, P)   out
+    hout_ref,  # (1, HB, P, N) out: final state
+    h_scr,  # (HB, P, N)       f32 scratch: running inter-chunk state
+    *,
+    chunk: int,
+):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+    Q = chunk
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, HB, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q, HB)
+    A = A_ref[...].astype(jnp.float32)  # (HB,)
+    Bm = B_ref[0].astype(jnp.float32)  # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)  # (Q, N)
+
+    dA = dt * A[None, :]  # (Q, HB), negative
+    dA_cs = jnp.cumsum(dA, axis=0)  # inclusive cumsum within chunk
+    dA_sum = dA_cs[-1]  # (HB,)
+
+    # ---- intra-chunk: (C·Bᵀ ⊙ L) @ (dt ⊙ x)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    )
+    diff = dA_cs[:, None, :] - dA_cs[None, :, :]  # (Q, Q, HB)
+    diff = jnp.where(tri[:, :, None], diff, -jnp.inf)
+    M = scores[:, :, None] * jnp.exp(diff)  # (Q, Q, HB)
+    dx = dt[:, :, None] * x  # (Q, HB, P)
+    # y_intra[q,h,p] = Σ_t M[q,t,h]·dx[t,h,p]  — batched matmul over h
+    y_intra = jnp.einsum("qth,thp->qhp", M, dx, preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk: y_inter[q,h,p] = exp(dA_cs[q,h]) Σ_n C[q,n] h_prev[h,p,n]
+    h_prev = h_scr[...]  # (HB, P, N)
+    y_inter = jnp.einsum(
+        "qn,hpn->qhp", Cm, h_prev, preferred_element_type=jnp.float32
+    ) * jnp.exp(dA_cs)[:, :, None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # ---- state update: h = exp(dA_sum)·h_prev + Σ_t exp(dA_sum − dA_cs[t]) dt_t B_t ⊗ x_t
+    w = dt * jnp.exp(dA_sum[None, :] - dA_cs)  # (Q, HB)
+    s_chunk = jnp.einsum(
+        "tn,thp->hpn", Bm, (w[:, :, None] * x), preferred_element_type=jnp.float32
+    )
+    h_scr[...] = h_prev * jnp.exp(dA_sum)[:, None, None] + s_chunk
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_scr[...].astype(hout_ref.dtype)
+
+
+def ssd_call(
+    xh: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) fp32
+    A: jax.Array,  # (H,) fp32 negative
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    head_block: int = 8,
+    interpret: bool = True,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N) fp32)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    HB = min(head_block, H)
+    assert S % Q == 0, (S, Q)
+    assert H % HB == 0, (H, HB)
+    nc, nh = S // Q, H // HB
+
+    kernel = functools.partial(ssd_kernel, chunk=Q)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, HB, P), lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((1, Q, HB), lambda b, ih, ic: (b, ic, ih)),
+            pl.BlockSpec((HB,), lambda b, ih, ic: (ih,)),
+            pl.BlockSpec((1, Q, N), lambda b, ih, ic: (b, ic, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, ih, ic: (b, ic, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, Q, HB, P), lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((1, HB, P, N), lambda b, ih, ic: (b, ih, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, S, H, P), xh.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((HB, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt.astype(jnp.float32), A.astype(jnp.float32), Bm, Cm)
+    return y, h

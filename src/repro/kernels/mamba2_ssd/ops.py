@@ -1,0 +1,50 @@
+"""jit'd wrapper for the SSD Pallas kernel, model-layout compatible with
+``repro.models.ssm.ssd_chunked`` (drop-in fast path)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_ssd.kernel import ssd_call
+
+__all__ = ["ssd"]
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd(
+    xh: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    head_block: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    interpret = _auto_interpret() if interpret is None else interpret
+    B, S, H, P = xh.shape
+    Q = min(chunk, S)
+    S_pad = -(-S // Q) * Q
+    if S_pad != S:
+        # pad with dt=0 ⇒ exp(0)=1 decay, zero input: state passes through
+        pad = S_pad - S
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    hb = head_block
+    while H % hb:
+        hb -= 1
+    y, h = ssd_call(
+        xh, dt, A, Bm, Cm, chunk=Q, head_block=hb, interpret=interpret
+    )
+    return y[:, :S], h

@@ -1,0 +1,57 @@
+"""Oracles for the SSD kernel.
+
+Two independent references:
+- ``ssd_ref_sequential`` — the O(S) per-token recurrence, the ground truth
+  definition of the SSM (slow, test sizes only).
+- ``ssd_ref_chunked`` — the pure-jnp chunked formulation from
+  ``repro.models.ssm.ssd_chunked`` (the production XLA path).
+
+The kernel must match BOTH (and they must match each other), which guards
+against a shared bug in the chunked math.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+__all__ = ["ssd_ref_sequential", "ssd_ref_chunked"]
+
+
+def ssd_ref_chunked(xh, dt, A, Bm, Cm, chunk: int = 256):
+    return ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+
+
+def ssd_ref_sequential(
+    xh: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dt_t.astype(f32) * A.astype(f32))  # (B,H)
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", b_t.astype(f32), dt_t.astype(f32), x_t.astype(f32))
+        h = h * decay[:, :, None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(f32))
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), f32)
+    xs = (
+        jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h_final

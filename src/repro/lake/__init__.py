@@ -1,0 +1,19 @@
+"""Lakehouse substrate: simulated object storage, immutable columnar
+fragments (the Parquet analogue), and an Iceberg-style catalog with
+snapshot isolation and atomic commits."""
+
+from repro.lake.s3sim import ObjectStore, StoreStats, LatencyModel
+from repro.lake.fragments import FragmentMeta, write_fragment, read_fragment_columns
+from repro.lake.catalog import Catalog, TableMeta, Snapshot
+
+__all__ = [
+    "ObjectStore",
+    "StoreStats",
+    "LatencyModel",
+    "FragmentMeta",
+    "write_fragment",
+    "read_fragment_columns",
+    "Catalog",
+    "TableMeta",
+    "Snapshot",
+]

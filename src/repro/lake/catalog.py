@@ -1,0 +1,279 @@
+"""Iceberg-style catalog: namespaces → tables → immutable snapshot chains.
+
+Semantics reproduced from the paper's requirements:
+
+- **Immutable data files**: a commit never mutates a fragment, it publishes a
+  new :class:`Snapshot` referencing a (possibly different) fragment set.  This
+  is what makes cache invalidation "free" — cache elements pin fragment ids and
+  simply stop matching when a snapshot drops those fragments.
+- **Snapshot isolation / time travel**: scans name a snapshot id ("running
+  today's code on last Friday's rows"); concurrent readers are never affected
+  by commits.
+- **Atomic commits with optimistic concurrency**: the table pointer advances by
+  compare-and-swap on the expected parent snapshot; losers retry.
+
+Metadata lives in the object store as write-once JSON blobs plus one
+atomically-replaced pointer file per table (the Iceberg "version hint").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import uuid
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.columnar import Table
+from repro.lake.fragments import FragmentMeta, write_fragment
+from repro.lake.s3sim import ObjectStore
+
+__all__ = ["Snapshot", "TableMeta", "Catalog", "CommitConflict"]
+
+
+class CommitConflict(RuntimeError):
+    """Raised when an optimistic commit loses the race."""
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    snapshot_id: str
+    parent_id: Optional[str]
+    sequence: int
+    fragments: Tuple[FragmentMeta, ...]
+    operation: str  # "append" | "overwrite" | "create"
+
+    @property
+    def fragment_ids(self) -> frozenset:
+        return frozenset(f.fragment_id for f in self.fragments)
+
+    def live_fragments(self) -> Tuple[FragmentMeta, ...]:
+        return self.fragments
+
+    def to_json(self) -> dict:
+        return {
+            "snapshot_id": self.snapshot_id,
+            "parent_id": self.parent_id,
+            "sequence": self.sequence,
+            "operation": self.operation,
+            "fragments": [f.to_json() for f in self.fragments],
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Snapshot":
+        return Snapshot(
+            snapshot_id=d["snapshot_id"],
+            parent_id=d["parent_id"],
+            sequence=d["sequence"],
+            operation=d["operation"],
+            fragments=tuple(FragmentMeta.from_json(f) for f in d["fragments"]),
+        )
+
+
+@dataclass
+class TableMeta:
+    namespace: str
+    name: str
+    schema: Dict[str, str]  # column -> dtype str
+    sort_key: str
+
+    @property
+    def full_name(self) -> str:
+        return f"{self.namespace}.{self.name}"
+
+
+class Catalog:
+    """The control-plane metadata service."""
+
+    def __init__(self, store: ObjectStore, rows_per_fragment: int = 1 << 16):
+        self.store = store
+        self.rows_per_fragment = rows_per_fragment
+        self._lock = threading.Lock()
+        # pointer files live OUTSIDE the write-once store (they must be
+        # replaceable); everything else is immutable blobs inside it.
+        self._meta_dir = os.path.join(store.root, "_catalog")
+        os.makedirs(self._meta_dir, exist_ok=True)
+        self._snapshots: Dict[str, Snapshot] = {}  # id -> snapshot (cache)
+        self._tables: Dict[str, TableMeta] = {}
+
+    # -- pointer management --------------------------------------------------
+    def _ptr_path(self, full_name: str) -> str:
+        return os.path.join(self._meta_dir, f"{full_name}.ptr.json")
+
+    def _read_ptr(self, full_name: str) -> Optional[dict]:
+        path = self._ptr_path(full_name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def _write_ptr(self, full_name: str, ptr: dict) -> None:
+        path = self._ptr_path(full_name)
+        tmp = f"{path}.{uuid.uuid4().hex}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(ptr, f)
+        os.replace(tmp, path)  # atomic pointer swap
+
+    # -- table lifecycle -------------------------------------------------------
+    def create_table(
+        self,
+        namespace: str,
+        name: str,
+        schema: Dict[str, str],
+        sort_key: str,
+    ) -> TableMeta:
+        if sort_key not in schema:
+            raise ValueError(f"sort key {sort_key!r} not in schema")
+        meta = TableMeta(namespace, name, dict(schema), sort_key)
+        full = meta.full_name
+        with self._lock:
+            if self._read_ptr(full) is not None:
+                raise FileExistsError(f"table {full} exists")
+            root = Snapshot(
+                snapshot_id=uuid.uuid4().hex[:16],
+                parent_id=None,
+                sequence=0,
+                fragments=(),
+                operation="create",
+            )
+            self._persist_snapshot(full, root)
+            self._write_ptr(
+                full,
+                {
+                    "schema": meta.schema,
+                    "sort_key": sort_key,
+                    "current_snapshot": root.snapshot_id,
+                },
+            )
+            self._tables[full] = meta
+        return meta
+
+    def table(self, full_name: str) -> TableMeta:
+        if full_name not in self._tables:
+            ptr = self._read_ptr(full_name)
+            if ptr is None:
+                raise KeyError(f"no such table {full_name}")
+            ns, name = full_name.rsplit(".", 1)
+            self._tables[full_name] = TableMeta(ns, name, ptr["schema"], ptr["sort_key"])
+        return self._tables[full_name]
+
+    def list_tables(self) -> List[str]:
+        return sorted(
+            fn[: -len(".ptr.json")]
+            for fn in os.listdir(self._meta_dir)
+            if fn.endswith(".ptr.json")
+        )
+
+    # -- snapshots ---------------------------------------------------------
+    def _snap_key(self, full_name: str, snapshot_id: str) -> str:
+        return f"_meta/{full_name}/snap-{snapshot_id}.json"
+
+    def _persist_snapshot(self, full_name: str, snap: Snapshot) -> None:
+        self.store.put(self._snap_key(full_name, snap.snapshot_id), json.dumps(snap.to_json()).encode())
+        self._snapshots[snap.snapshot_id] = snap
+
+    def snapshot(self, full_name: str, snapshot_id: str) -> Snapshot:
+        if snapshot_id not in self._snapshots:
+            raw = self.store.get(self._snap_key(full_name, snapshot_id))
+            self._snapshots[snapshot_id] = Snapshot.from_json(json.loads(raw))
+        return self._snapshots[snapshot_id]
+
+    def current_snapshot(self, full_name: str) -> Snapshot:
+        ptr = self._read_ptr(full_name)
+        if ptr is None:
+            raise KeyError(f"no such table {full_name}")
+        return self.snapshot(full_name, ptr["current_snapshot"])
+
+    def history(self, full_name: str) -> List[Snapshot]:
+        out = []
+        snap: Optional[Snapshot] = self.current_snapshot(full_name)
+        while snap is not None:
+            out.append(snap)
+            snap = self.snapshot(full_name, snap.parent_id) if snap.parent_id else None
+        return list(reversed(out))
+
+    # -- commits -----------------------------------------------------------
+    def _commit(
+        self,
+        full_name: str,
+        new_fragments: Sequence[FragmentMeta],
+        dropped_ids: frozenset,
+        operation: str,
+        expected_parent: Optional[str],
+    ) -> Snapshot:
+        with self._lock:
+            ptr = self._read_ptr(full_name)
+            if ptr is None:
+                raise KeyError(f"no such table {full_name}")
+            cur = self.snapshot(full_name, ptr["current_snapshot"])
+            if expected_parent is not None and cur.snapshot_id != expected_parent:
+                raise CommitConflict(
+                    f"{full_name}: expected parent {expected_parent}, found {cur.snapshot_id}"
+                )
+            kept = tuple(f for f in cur.fragments if f.fragment_id not in dropped_ids)
+            snap = Snapshot(
+                snapshot_id=uuid.uuid4().hex[:16],
+                parent_id=cur.snapshot_id,
+                sequence=cur.sequence + 1,
+                fragments=kept + tuple(new_fragments),
+                operation=operation,
+            )
+            self._persist_snapshot(full_name, snap)
+            ptr["current_snapshot"] = snap.snapshot_id
+            self._write_ptr(full_name, ptr)
+            return snap
+
+    def _fragmentize(self, full_name: str, data: Table, sort_key: str) -> List[FragmentMeta]:
+        data = data.sort_by(sort_key)
+        out: List[FragmentMeta] = []
+        n = data.num_rows
+        for start in range(0, n, self.rows_per_fragment):
+            chunk = data.slice(start, min(start + self.rows_per_fragment, n))
+            fid = uuid.uuid4().hex[:16]
+            key = f"data/{full_name}/frag-{fid}.bin"
+            out.append(write_fragment(self.store, key, fid, chunk, sort_key))
+        return out
+
+    def append(
+        self, full_name: str, data: Table, expected_parent: Optional[str] = None
+    ) -> Snapshot:
+        meta = self.table(full_name)
+        frags = self._fragmentize(full_name, data, meta.sort_key)
+        return self._commit(full_name, frags, frozenset(), "append", expected_parent)
+
+    def overwrite_range(
+        self,
+        full_name: str,
+        lo: int,
+        hi: int,
+        data: Optional[Table] = None,
+        expected_parent: Optional[str] = None,
+    ) -> Snapshot:
+        """Drop every fragment overlapping ``[lo, hi)`` (rewriting the
+        survivors outside the window) and optionally add new rows.
+
+        This is the mutation path that exercises "free" cache invalidation.
+        """
+        meta = self.table(full_name)
+        cur = self.current_snapshot(full_name)
+        dropped = frozenset(
+            f.fragment_id for f in cur.fragments if f.overlaps(lo, hi)
+        )
+        new_frags: List[FragmentMeta] = []
+        # rewrite surviving rows of dropped fragments (outside the window)
+        from repro.lake.fragments import read_fragment_columns
+
+        for f in cur.fragments:
+            if f.fragment_id not in dropped:
+                continue
+            tbl = read_fragment_columns(self.store, f, list(meta.schema))
+            keys = tbl.column(meta.sort_key)
+            keep = (keys < lo) | (keys >= hi)
+            if keep.any():
+                new_frags.extend(self._fragmentize(full_name, tbl.filter(keep), meta.sort_key))
+        if data is not None and data.num_rows:
+            new_frags.extend(self._fragmentize(full_name, data, meta.sort_key))
+        return self._commit(full_name, new_frags, dropped, "overwrite", expected_parent)

@@ -1,0 +1,376 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE two env lines below must run before ANY other import (jax locks the
+device count at first init).  Each cell builds the production train/serve
+step with full sharding, compiles it ahead-of-time (no allocation), prints
+``memory_analysis()`` / ``cost_analysis()``, extracts the roofline terms,
+and writes a JSON artifact under ``experiments/dryrun/``.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+    python -m repro.launch.dryrun --arch mixtral-8x22b --shape prefill_32k \
+        --mesh single --no-seq-parallel --microbatches 4 --tag mb4   # hillclimb
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (first two lines; everything below may import jax)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import tree_pspecs, use_rules
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import describe_mesh, make_production_mesh, rules_for
+from repro.launch.roofline import roofline_report
+from repro.models import (
+    ARCH_IDS,
+    SHAPES,
+    cell_is_runnable,
+    get_config,
+    get_model,
+    input_specs,
+)
+from repro.models.config import SHAPES as SHAPE_MAP
+from repro.train.optimizer import OptimizerConfig
+from repro.train.loop import make_init_state, make_train_step
+from repro.train.state import TrainState, state_logical_axes
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+# Per-arch optimizer choice: Adam states for 340B params would not fit 256
+# chips; Adafactor (factored stats, no master) keeps it ~2.1 B/param.
+DEFAULT_OPT = {"nemotron-4-340b": "adafactor"}
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _named_checked(sds_tree, pspec_tree, mesh):
+    """PartitionSpecs -> NamedShardings, dropping axes that do not divide the
+    dim (explicit in_shardings cannot pad, unlike internal constraints).
+    E.g. granite's 49155 vocab or llama4's 40 heads on a 16-way axis fall
+    back to replication of that dim."""
+    P = jax.sharding.PartitionSpec
+
+    def fix(sds, spec):
+        parts = []
+        for dim in range(len(sds.shape)):
+            p = spec[dim] if dim < len(spec) else None
+            if p is not None and sds.shape[dim] % _axis_size(mesh, p) != 0:
+                p = None
+            parts.append(p)
+        return jax.sharding.NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(
+        fix, sds_tree, pspec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def build_cell(arch_id: str, shape_name: str, multi_pod: bool, *,
+               seq_parallel: bool = True,
+               microbatches: Optional[int] = None,
+               remat: Optional[str] = None,
+               opt_kind: Optional[str] = None):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs), meta)."""
+    import dataclasses
+
+    cfg = get_config(arch_id)
+    if microbatches is not None:
+        cfg = dataclasses.replace(cfg, microbatches=microbatches)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPE_MAP[shape_name]
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh, seq_parallel=seq_parallel)
+    specs = input_specs(cfg, shape)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    P = jax.sharding.PartitionSpec
+
+    meta = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": describe_mesh(mesh),
+        "n_chips": mesh.devices.size,
+        "kind": shape.kind,
+        "seq_parallel": seq_parallel,
+        "microbatches": cfg.microbatches,
+        "remat": cfg.remat,
+    }
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            kind = opt_kind or DEFAULT_OPT.get(arch_id, "adamw")
+            opt_cfg = OptimizerConfig(kind=kind, moment_dtype="bfloat16")
+            meta["optimizer"] = kind
+            init_state = make_init_state(api, opt_cfg)
+            key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            state_sds = jax.eval_shape(init_state, key_sds)
+            param_axes = api.param_logical_axes()
+            state_axes = state_logical_axes(param_axes, state_sds.opt)
+            state_ps = tree_pspecs(state_axes, rules)
+            state_sh = _named_checked(state_sds, state_ps, mesh)
+            batch_ps = {k: P(batch_axes, None) for k in ("tokens", "labels", "loss_mask")}
+            if "prefix_embeds" in specs:
+                batch_ps["prefix_embeds"] = P(batch_axes, None, None)
+            batch_sh = _named_checked(specs, batch_ps, mesh)
+            step_fn = make_train_step(api, opt_cfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            return jitted, (state_sds, specs), meta, rules
+
+        if shape.kind == "prefill":
+            param_axes = api.param_logical_axes()
+            param_sds = jax.eval_shape(api.init_params, jax.ShapeDtypeStruct((2,), jnp.uint32))
+            param_sh = _named_checked(param_sds, tree_pspecs(param_axes, rules), mesh)
+            tok_sh = _named_checked(specs["tokens"], P(batch_axes, None), mesh)
+            S = shape.seq_len
+
+            def prefill_fn(params, tokens, prefix_embeds=None):
+                return api.prefill(params, tokens, prefix_embeds, max_len=S)
+
+            in_sh = [param_sh, tok_sh]
+            args = [param_sds, specs["tokens"]]
+            if "prefix_embeds" in specs:
+                in_sh.append(
+                    _named_checked(specs["prefix_embeds"], P(batch_axes, None, None), mesh)
+                )
+                args.append(specs["prefix_embeds"])
+            jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh))
+            return jitted, tuple(args), meta, rules
+
+        if shape.kind == "decode":
+            param_axes = api.param_logical_axes()
+            param_sds = jax.eval_shape(api.init_params, jax.ShapeDtypeStruct((2,), jnp.uint32))
+            param_sh = _named_checked(param_sds, tree_pspecs(param_axes, rules), mesh)
+            cache_ps = tree_pspecs(api.cache_logical_axes(), rules)
+            cache_sh = _named_checked(specs["cache"], cache_ps, mesh)
+            tok_sh = _named_checked(specs["tokens"], P(batch_axes, None), mesh)
+            jitted = jax.jit(
+                api.decode_step,
+                in_shardings=(param_sh, tok_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            )
+            return jitted, (param_sds, specs["tokens"], specs["cache"]), meta, rules
+
+    raise ValueError(shape.kind)
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def model_min_bytes(cfg, shape) -> float:
+    """Analytic lower bound on global HBM traffic per step — the memory-
+    roofline's "useful bytes" (counterpart of 6·N·D for compute).
+
+    train  : params read (fwd) + read (bwd) + grads written + opt update
+             read+write ≈ 5 × param_bytes, plus one activation write+read
+             per layer boundary (bf16).
+    prefill: params once + KV cache written once.
+    decode : ACTIVE params once + full KV/state cache read + one slot
+             written (≈ read).
+    """
+    pb = 2.0  # bf16 bytes/param
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        act = 2.0 * shape.tokens * cfg.d_model * cfg.num_layers * 2  # write+read
+        return 5.0 * n * pb + act
+    if cfg.is_attention_free:
+        state = (
+            shape.global_batch * cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state
+            * 4.0 * cfg.num_layers
+        )
+    else:
+        T = min(shape.seq_len, cfg.sliding_window) if cfg.sliding_window else shape.seq_len
+        state = (
+            2.0 * shape.global_batch * T * cfg.num_kv_heads
+            * cfg.resolved_head_dim * pb * cfg.num_layers
+        )
+    if shape.kind == "prefill":
+        return n * pb + state
+    return n_active * pb + state  # decode
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
+             tag: str = "", **knobs) -> Dict[str, Any]:
+    multi_pod = mesh_kind == "multi"
+    cfg = get_config(arch_id)
+    shape = SHAPE_MAP[shape_name]
+    ok, reason = cell_is_runnable(cfg, shape)
+    rec: Dict[str, Any] = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = reason
+        # skip records are artifacts too: the 40-cell coverage audit must
+        # see all 80 (arch × shape × mesh) decisions on disk
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"-{tag}" if tag else ""
+        with open(os.path.join(
+                out_dir, f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    t0 = time.time()
+    try:
+        jitted, args, meta, rules = build_cell(arch_id, shape_name, multi_pod, **knobs)
+        rec.update(meta)
+        with use_rules(rules):
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        n_chips = meta["n_chips"]
+        # trip-count-aware cost model (XLA's cost_analysis counts while
+        # bodies ONCE — wrong by ~num_layers for scan-stacked models)
+        hc = analyze_hlo(hlo, n_devices_hint=n_chips)
+        coll = {k.replace("coll_", ""): int(v) for k, v in hc.as_dict().items()
+                if k.startswith("coll_")}
+        coll["total"] = int(hc.collective_bytes)
+        coll["count"] = int(hc.collective_count)
+        flops_dev = hc.flops
+        bytes_dev = hc.bytes_accessed
+        mf = model_flops(cfg, shape)
+        roof = roofline_report(
+            flops_per_device=flops_dev,
+            hbm_bytes_per_device=bytes_dev,
+            collective_bytes_per_device=hc.collective_bytes,
+            n_chips=n_chips,
+            model_flops_total=mf,
+            model_min_bytes_total=model_min_bytes(cfg, shape),
+        )
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            xla_cost_analysis={  # raw XLA numbers, for reference
+                "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+            },
+            collectives=coll,
+            roofline=roof,
+            hlo_bytes=len(hlo),
+        )
+        if mem is not None:
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        # persist the per-device HLO (gzip) so cost-model improvements can
+        # re-analyze every cell without recompiling
+        import gzip
+
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        suffix0 = f"-{tag}" if tag else ""
+        hlo_path = os.path.join(
+            out_dir, "hlo", f"{arch_id}__{shape_name}__{mesh_kind}{suffix0}.hlo.gz"
+        )
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+        rec["hlo_path"] = os.path.relpath(hlo_path, out_dir)
+        del compiled, lowered, jitted
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec["status"] = f"FAIL: {type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"-{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", choices=["none", "full", "dots"], default=None)
+    ap.add_argument("--opt", choices=["adamw", "adafactor"], default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    knobs = dict(
+        seq_parallel=not args.no_seq_parallel,
+        microbatches=args.microbatches,
+        remat=args.remat,
+        opt_kind=args.opt,
+    )
+    results = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                suffix = f"-{args.tag}" if args.tag else ""
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") == "ok" or prev.get("status", "").startswith("SKIP"):
+                        print(f"[skip] {arch} {shape} {mesh_kind}: {prev['status']}")
+                        results.append(prev)
+                        continue
+                print(f"[cell] {arch} {shape} {mesh_kind} ...", flush=True)
+                rec = run_cell(arch, shape, mesh_kind, args.out, tag=args.tag, **knobs)
+                status = rec.get("status", "?")
+                roof = rec.get("roofline", {})
+                print(
+                    f"       -> {status} "
+                    f"compute={roof.get('compute_s', 0):.4f}s "
+                    f"memory={roof.get('memory_s', 0):.4f}s "
+                    f"coll={roof.get('collective_s', 0):.4f}s "
+                    f"dominant={roof.get('dominant', '-')} "
+                    f"(lower {rec.get('lower_s', 0)}s compile {rec.get('compile_s', 0)}s)",
+                    flush=True,
+                )
+                results.append(rec)
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if str(r.get("status", "")).startswith("SKIP"))
+    n_fail = len(results) - n_ok - n_skip
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED of {len(results)}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

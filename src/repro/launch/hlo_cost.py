@@ -1,0 +1,487 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` visits every computation
+ONCE — a ``lax.scan`` over 96 layers reports 1/96th of the real layer FLOPs
+(verified empirically: a scan of 8 matmuls reports the FLOPs of one).  Since
+every model here stacks layers with ``scan`` (and microbatches with another
+``scan``), the raw numbers would understate compute by 30-200× and corrupt
+the roofline's dominant-term identification.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+- **FLOPs**: ``dot`` ops counted exactly (2 × output-elems × contraction
+  size, batch dims included); ``convolution`` likewise; elementwise /
+  reduce ops at 1 FLOP per output element (noise next to the dots).
+- **HBM bytes**: per *materialized* instruction, output bytes + operand
+  bytes (XLA's own "bytes accessed" convention).  Instructions inside
+  fusion computations are NOT counted (they never touch HBM); the fusion
+  call site is.  Free ops (tuple plumbing, bitcast, parameter, constant)
+  are skipped.
+- **Collective bytes**: ring-model per-device wire traffic with the
+  replica-group size g:
+      all-gather        result × (g-1)/g
+      reduce-scatter    result × (g-1)          (operand-sized ring pass)
+      all-reduce        2 × result × (g-1)/g    (reduce-scatter + all-gather)
+      all-to-all        result × (g-1)/g
+      collective-permute result
+  (async ``-start`` counted once, ``-done`` skipped).
+
+Every computation's cost is weighted by its execution count: ``while``
+bodies/conditions multiply by the loop trip count (taken from XLA's
+``known_trip_count`` backend config, falling back to the largest constant in
+the loop condition), ``fusion``/``call``/``to_apply`` propagate the caller's
+multiplicity.  Validated in tests/test_hlo_cost.py against
+``cost_analysis()`` on loop-free programs and against hand-computed scan
+multiples.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCostModel", "analyze_hlo", "collective_bytes_from_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# result-type token: f32[256,512]{1,0} or s32[] or (tuples handled separately)
+_SHAPE_TOK = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+# instruction head: "%name = "  (ROOT optional); type/opcode parsed
+# structurally afterwards — tuple types may contain '=' inside /*index=N*/
+# comments, which no single regex handles robustly.
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+    "custom-call",  # annotation-only custom calls (Sharding etc.)
+}
+
+# ops that read operands & write output but do ~0 arithmetic
+_DATA_OPS = {
+    "copy", "reshape", "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "gather",
+    "scatter", "select", "convert", "reduce-window",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes_elems(type_text: str) -> Tuple[int, int]:
+    """(bytes, elements) for a type string; tuples summed."""
+    total_b = 0
+    total_e = 0
+    for dtype, dims in _SHAPE_TOK.findall(type_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dtype]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_text: str
+    opcode: str
+    rest: str  # everything after the opening paren (operands + attrs)
+
+
+@dataclass
+class _Comp:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # name -> type text
+    instrs: List[_Instr] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type text
+
+
+def _match_paren(text: str, start: int) -> int:
+    """Index just past the ')' matching the '(' at ``start``."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _parse_header(line: str) -> Optional[Tuple[str, str]]:
+    """Computation header: ``[ENTRY] %name (params…) -> type {``.
+
+    Params may contain nested-paren tuple types, so the param list is
+    extracted by paren matching (a regex with ``(.*?)`` stops at the first
+    ')' and misses tuple-typed headers — the SPMD while bodies all have
+    tuple params)."""
+    s = line.strip()
+    if not s.endswith("{"):
+        return None
+    if s.startswith("ENTRY "):
+        s2 = s[len("ENTRY "):]
+    else:
+        s2 = s
+    m = re.match(r"%?([\w.\-]+)\s*\(", s2)
+    if not m:
+        return None
+    name = m.group(1)
+    p0 = s2.index("(", m.start(1))
+    p1 = _match_paren(s2, p0)
+    rest = s2[p1:].lstrip()
+    if not rest.startswith("->"):
+        return None
+    return name, s2[p0 + 1 : p1 - 1]
+
+
+def _parse_params(cur: _Comp, ptext: str) -> None:
+    """'name: f32[..], name2: (s32[], f32[..])' — split at top-level commas."""
+    depth = 0
+    start = 0
+    parts = []
+    for i, c in enumerate(ptext):
+        if c in "([":
+            depth += 1
+        elif c in ")]":
+            depth -= 1
+        elif c == "," and depth == 0:
+            parts.append(ptext[start:i])
+            start = i + 1
+    if ptext[start:].strip():
+        parts.append(ptext[start:])
+    for part in parts:
+        if ":" not in part:
+            continue
+        name, ty = part.split(":", 1)
+        name = name.strip().lstrip("%")
+        cur.params[name] = ty.strip()
+        cur.symbols[name] = ty.strip()
+
+
+def _parse(hlo_text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Comp] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            hdr = _parse_header(line)
+            if hdr is not None:
+                name, ptext = hdr
+                cur = _Comp(name=name)
+                comps[name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+                _parse_params(cur, ptext)
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is None:
+            continue
+        cur.symbols[ins.name] = ins.type_text
+        cur.instrs.append(ins)
+    return comps, entry
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    m = _INSTR_HEAD.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # result type: paren-matched tuple, or single shape token
+    if rest.startswith("("):
+        end = _match_paren(rest, 0)
+        type_text = rest[:end]
+        rest = rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_text = rest[:sp]
+        rest = rest[sp:]
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    opcode = om.group(1)
+    return _Instr(name, type_text, opcode, rest[om.end():])
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """Operand names from the call parens; returns (names, attrs_after)."""
+    depth = 1
+    i = 0
+    while i < len(rest) and depth:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    inner = rest[: i - 1]
+    attrs = rest[i:]
+    names = re.findall(r"%([\w.\-]+)", inner)
+    return names, attrs
+
+
+def _trip_count(instr: _Instr, comps: Dict[str, _Comp]) -> int:
+    m = _TRIP_RE.search(instr.rest)
+    if m:
+        return int(m.group(1))
+    # fallback: largest small literal in the loop condition computation
+    wm = _WHILE_RE.search(f"while({instr.rest}" if not instr.rest.startswith("while") else instr.rest)
+    cond_name = None
+    cm = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+    if cm:
+        cond_name = cm.group(1)
+    if cond_name and cond_name in comps:
+        consts = [int(c) for c in _CONST_RE.findall(
+            "\n".join(i.rest for i in comps[cond_name].instrs))]
+        consts = [c for c in consts if 0 < c <= 10_000_000]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _comp_edges(comp: _Comp, comps: Dict[str, _Comp]) -> Dict[str, float]:
+    """callee -> executions-per-single-run-of-``comp``."""
+    edges: Dict[str, float] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            wm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            trips = _trip_count(ins, comps)
+            if bm:
+                edges[bm.group(1)] = edges.get(bm.group(1), 0.0) + trips
+            if wm:
+                edges[wm.group(1)] = edges.get(wm.group(1), 0.0) + trips + 1
+        else:
+            for cm in re.finditer(r"(?:calls=|to_apply=|branch_computations=\{)%?([\w.\-]+)", ins.rest):
+                edges[cm.group(1)] = edges.get(cm.group(1), 0.0) + 1
+    return edges
+
+
+def _multipliers(comps: Dict[str, _Comp], entry: Optional[str]) -> Dict[str, float]:
+    """Execution count per computation: entry = 1, while bodies × trip count,
+    calls propagate the caller's multiplicity.  The call graph is acyclic, so
+    iterating a full additive recompute converges in ≤ depth passes."""
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return {}
+    edges = {name: _comp_edges(comp, comps) for name, comp in comps.items()}
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(len(comps) + 2):
+        new_mult = {c: 0.0 for c in comps}
+        new_mult[entry] = 1.0
+        for cname in comps:
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for callee, k in edges[cname].items():
+                if callee in new_mult:
+                    new_mult[callee] += m * k
+        if new_mult == mult:
+            break
+        mult = new_mult
+    return mult
+
+
+def _dot_flops(ins: _Instr, symbols: Dict[str, str]) -> float:
+    out_b, out_e = _shape_bytes_elems(ins.type_text)
+    ops, attrs = _split_operands(ins.rest)
+    k = 1
+    if ops:
+        lhs_type = symbols.get(ops[0], "")
+        m = _SHAPE_TOK.search(lhs_type)
+        if m:
+            dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+            cm = _CONTRACT_RE.search(attrs)
+            if cm and cm.group(1):
+                for ci in cm.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(dims):
+                        k *= dims[ci]
+    return 2.0 * out_e * k
+
+
+def _conv_flops(ins: _Instr, symbols: Dict[str, str]) -> float:
+    # approx: 2 * output elems * (kernel spatial elems) * input feature size
+    out_b, out_e = _shape_bytes_elems(ins.type_text)
+    ops, _ = _split_operands(ins.rest)
+    k = 1
+    if len(ops) >= 2:
+        ktype = symbols.get(ops[1], "")
+        m = _SHAPE_TOK.search(ktype)
+        if m and m.group(2):
+            dims = [int(d) for d in m.group(2).split(",")]
+            # kernel = spatial... x in_feat x out_feat: divide out the output
+            # feature dim (largest trailing heuristic)
+            total = 1
+            for d in dims:
+                total *= d
+            # output features appear in out shape; safest: total / out_feat
+            k = max(total // max(dims[-1], 1), 1)
+    return 2.0 * out_e * k
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(rest)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+@dataclass
+class HloCostModel:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_count: float = 0.0
+    # raw (multiplier-less) values, for comparison with cost_analysis()
+    flops_unweighted: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_count": self.collective_count,
+            "flops_unweighted": self.flops_unweighted,
+        }
+        d.update({f"coll_{k}": v for k, v in self.collective_by_kind.items()})
+        return d
+
+
+def analyze_hlo(hlo_text: str, n_devices_hint: int = 1) -> HloCostModel:
+    """Parse a post-partitioning HLO module and produce trip-count-weighted
+    per-device FLOPs / HBM bytes / collective wire bytes."""
+    comps, entry = _parse(hlo_text)
+    mult = _multipliers(comps, entry)
+    out = HloCostModel(collective_by_kind={k: 0.0 for k in _COLLECTIVES})
+
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                for cm in re.finditer(r"calls=%?([\w.\-]+)", ins.rest):
+                    fusion_bodies.add(cm.group(1))
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE_OPS and op != "custom-call":
+                continue
+            # ---- FLOPs ----
+            f = 0.0
+            if op == "dot":
+                f = _dot_flops(ins, comp.symbols)
+            elif op == "convolution":
+                f = _conv_flops(ins, comp.symbols)
+            elif op == "custom-call":
+                f = 0.0  # opaque; pallas kernels are not in the roofline path
+            elif op in ("while", "conditional", "call", "fusion"):
+                f = 0.0  # callee costs counted via multipliers
+            elif op not in _DATA_OPS:
+                # elementwise / reduce / rng / compare…: 1 flop per output elem
+                _, out_e = _shape_bytes_elems(ins.type_text)
+                f = float(out_e)
+            out.flops += m * f
+            out.flops_unweighted += f
+
+            # ---- bytes (materialized instructions only) ----
+            if not in_fusion and op not in ("while", "conditional", "call"):
+                ob, _ = _shape_bytes_elems(ins.type_text)
+                opn, _attrs = _split_operands(ins.rest)
+                op_bytes = []
+                for o in opn:
+                    t = comp.symbols.get(o)
+                    if t:
+                        b, _ = _shape_bytes_elems(t)
+                        op_bytes.append(b)
+                ib = sum(op_bytes)
+                if op == "dynamic-update-slice" and len(op_bytes) >= 2:
+                    # in-place row update: traffic = update read + update-
+                    # sized write + indices — NOT the whole base buffer
+                    # (XLA aliases it; counting it made a 32k-context decode
+                    # step look like it rewrites the full KV cache per layer)
+                    ib = sum(op_bytes[1:])
+                    ob = op_bytes[1]
+                elif op == "scatter" and len(op_bytes) >= 3:
+                    # (base, indices, updates): touched region ≈ updates
+                    ib = sum(op_bytes[1:])
+                    ob = op_bytes[2]
+                elif op == "gather":
+                    # touched rows ≈ output size, not the whole table
+                    ib = sum(op_bytes[1:]) + ob
+                out.bytes_accessed += m * (ob + ib)
+
+            # ---- collectives ----
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                rb, _ = _shape_bytes_elems(ins.type_text)
+                g = _group_size(ins.rest, n_devices_hint)
+                if base == "all-gather":
+                    wire = rb * (g - 1) / max(g, 1)
+                elif base == "all-reduce":
+                    wire = 2.0 * rb * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    wire = rb * (g - 1)
+                elif base == "all-to-all":
+                    wire = rb * (g - 1) / max(g, 1)
+                else:  # collective-permute
+                    wire = rb
+                out.collective_bytes += m * wire
+                out.collective_by_kind[base] += m * wire
+                out.collective_count += m
+    return out
+
+
+def collective_bytes_from_hlo(hlo_text: str, n_devices_hint: int = 1) -> Dict[str, int]:
+    """Back-compat shim for the dry-run: kind-keyed collective byte totals."""
+    model = analyze_hlo(hlo_text, n_devices_hint)
+    result = {k: int(v) for k, v in model.collective_by_kind.items()}
+    result["count"] = int(model.collective_count)
+    result["total"] = int(model.collective_bytes)
+    return result

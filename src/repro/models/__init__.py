@@ -1,0 +1,27 @@
+"""Model zoo: the ten assigned architectures (dense / MoE / SSM / hybrid /
+audio / VLM decoder-LM families) as pure-JAX functional stacks with
+logical-axis sharding annotations."""
+
+from repro.models.config import ArchConfig, ShapeSpec, SHAPES
+from repro.models.registry import (
+    ARCH_IDS,
+    ModelAPI,
+    cell_is_runnable,
+    get_config,
+    get_model,
+    input_specs,
+    list_archs,
+)
+
+__all__ = [
+    "ArchConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "ARCH_IDS",
+    "ModelAPI",
+    "get_config",
+    "get_model",
+    "input_specs",
+    "list_archs",
+    "cell_is_runnable",
+]

@@ -1,0 +1,280 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + a SHARED attention block.
+
+The hybrid trick (arXiv:2411.15242): one transformer block's weights are
+*shared* and applied every ``hybrid_period`` SSM layers, adding global
+mixing at a fraction of the parameter cost.  Structure here:
+
+    [mamba ×p] -> shared-attn -> [mamba ×p] -> shared-attn -> …
+
+The SSM sub-stacks are scanned (stacked params); the shared block is a
+plain transformer block invoked in an unrolled Python loop (it appears
+``L/p`` times in the HLO but its *weights* are one set — XLA still caches
+the computation).  The decode cache carries SSM states for every mamba
+layer plus one KV cache per shared-block application.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_rope,
+    attention_decode,
+    attention_train,
+    mlp_apply,
+    rms_norm,
+)
+from repro.models import mamba as _mamba
+from repro.models.ssm import mamba2_decode, mamba2_forward, mamba2_layer_param_shapes
+
+__all__ = [
+    "init_params",
+    "param_logical_axes",
+    "forward",
+    "init_decode_cache",
+    "cache_logical_axes",
+    "prefill",
+    "decode_step",
+]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def n_shared_applications(cfg: ArchConfig) -> int:
+    return (cfg.num_layers + cfg.hybrid_period - 1) // cfg.hybrid_period
+
+
+def _segments(cfg: ArchConfig):
+    """[(start, stop), ...] mamba layer ranges between shared-block calls."""
+    p = cfg.hybrid_period
+    return [(i, min(i + p, cfg.num_layers)) for i in range(0, cfg.num_layers, p)]
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    base = _mamba.init_params(cfg, k1)
+    dt = _dtype(cfg)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    keys = iter(jax.random.split(k2, 16))
+
+    def dense(shape, fan_in):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * (fan_in**-0.5)).astype(dt)
+
+    shared = {
+        "ln1": jnp.ones((D,), dt),
+        "ln2": jnp.ones((D,), dt),
+        "wq": dense((D, H, hd), D),
+        "wk": dense((D, KV, hd), D),
+        "wv": dense((D, KV, hd), D),
+        "wo": dense((H, hd, D), H * hd),
+        "mlp": {
+            "w1": dense((D, cfg.d_ff), D),
+            "w3": dense((D, cfg.d_ff), D),
+            "w2": dense((cfg.d_ff, D), cfg.d_ff),
+        },
+    }
+    base["shared_attn"] = shared
+    return base
+
+
+def param_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes = _mamba.param_logical_axes(cfg)
+    axes["shared_attn"] = {
+        "ln1": (None,),
+        "ln2": (None,),
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", None, None),
+        "wv": ("embed", None, None),
+        "wo": ("heads", "head_dim", "embed"),
+        "mlp": {
+            "w1": ("embed", "mlp"),
+            "w3": ("embed", "mlp"),
+            "w2": ("mlp", "embed"),
+        },
+    }
+    return axes
+
+
+def _slice_layers(layers: Dict[str, jax.Array], start: int, stop: int):
+    return {k: v[start:stop] for k, v in layers.items()}
+
+
+def _shared_block_train(cfg, sp, x, positions, return_kv=False):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    if return_kv:
+        a, k, v = attention_train(
+            cfg, h, sp["wq"], sp["wk"], sp["wv"], sp["wo"], positions, return_kv=True
+        )
+    else:
+        a = attention_train(cfg, h, sp["wq"], sp["wk"], sp["wv"], sp["wo"], positions)
+    x = shard(x + a, ("batch", "seq", None))
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = shard(x + mlp_apply(cfg, h, sp["mlp"]), ("batch", "seq", None))
+    if return_kv:
+        return x, k, v
+    return x
+
+
+def _mamba_segment(cfg, x, seg_params, collect_cache=False):
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, ssm_state, conv_tail = mamba2_forward(cfg, h, lp)
+        x = shard(x + out, ("batch", "seq", None))
+        if collect_cache:
+            return x, (ssm_state, conv_tail)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, seg_params)
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if prefix_embeds is not None and cfg.prefix_len:
+        x = jax.lax.dynamic_update_slice(x, prefix_embeds.astype(x.dtype), (0, 0, 0))
+    x = shard(x, ("batch", "seq", None))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    for start, stop in _segments(cfg):
+        x, _ = _mamba_segment(cfg, x, _slice_layers(params["layers"], start, stop))
+        x = _shared_block_train(cfg, params["shared_attn"], x, positions)
+    return _mamba._logits(cfg, params, x)
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    cache = _mamba.init_decode_cache(cfg, batch, max_len)
+    A = n_shared_applications(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache["k"] = jnp.zeros((A, batch, max_len, KV, hd), _dtype(cfg))
+    cache["v"] = jnp.zeros((A, batch, max_len, KV, hd), _dtype(cfg))
+    cache["kv_pos"] = jnp.full((batch, max_len), -1, jnp.int32)
+    return cache
+
+
+def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes = _mamba.cache_logical_axes(cfg)
+    axes["k"] = (None, "batch", "kv_seq", None, None)
+    axes["v"] = (None, "batch", "kv_seq", None, None)
+    axes["kv_pos"] = ("batch", None)
+    return axes
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S = tokens.shape
+    T = max_len or S
+    x = params["embed"][tokens]
+    if prefix_embeds is not None and cfg.prefix_len:
+        x = jax.lax.dynamic_update_slice(x, prefix_embeds.astype(x.dtype), (0, 0, 0))
+    x = shard(x, ("batch", "seq", None))
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    ssm_parts, conv_parts, k_parts, v_parts = [], [], [], []
+    for start, stop in _segments(cfg):
+        x, (ssm, conv) = _mamba_segment(
+            cfg, x, _slice_layers(params["layers"], start, stop), collect_cache=True
+        )
+        ssm_parts.append(ssm)
+        conv_parts.append(conv)
+        x, k, v = _shared_block_train(cfg, params["shared_attn"], x, positions, return_kv=True)
+        pad = T - S
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_parts.append(k.astype(_dtype(cfg)))
+        v_parts.append(v.astype(_dtype(cfg)))
+
+    logits = _mamba._logits(cfg, params, x[:, -1:, :])
+    cache = {
+        "ssm": jnp.concatenate(ssm_parts, axis=0),
+        "conv": jnp.concatenate(conv_parts, axis=0).astype(_dtype(cfg)),
+        "k": jnp.stack(k_parts, axis=0),
+        "v": jnp.stack(v_parts, axis=0),
+        "kv_pos": jnp.broadcast_to(
+            jnp.where(jnp.arange(T) < S, jnp.arange(T, dtype=jnp.int32), -1), (B, T)
+        ),
+        "pos": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = params["embed"][tokens]  # (B,1,D)
+    # constrain after the sharded-table gather: without this the partial
+    # (data-axis) product flows into the KV write and XLA re-replicates the
+    # WHOLE cache per layer (§Perf iteration Z2)
+    x = shard(x, ("batch", None, None))
+    B = tokens.shape[0]
+    pos = cache["pos"]  # (B,)
+    T = cache["k"].shape[2]
+    slot = jnp.minimum(pos, T - 1)  # (B,)
+    kv_pos = cache["kv_pos"].at[jnp.arange(B), slot].set(pos)  # (B, T)
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    sp = params["shared_attn"]
+
+    ssm_new = []
+    conv_new = []
+    k_new, v_new = [], []
+    for app, (start, stop) in enumerate(_segments(cfg)):
+        def body(x, xs):
+            lp, ssm_state, conv_state = xs
+            h = rms_norm(x, lp["ln"], cfg.norm_eps)
+            out, ssm_state, conv_state = mamba2_decode(cfg, h, lp, ssm_state, conv_state)
+            return x + out, (ssm_state, conv_state)
+
+        x, (ssm, conv) = jax.lax.scan(
+            body,
+            x,
+            (
+                _slice_layers(params["layers"], start, stop),
+                cache["ssm"][start:stop],
+                cache["conv"][start:stop],
+            ),
+        )
+        ssm_new.append(ssm)
+        conv_new.append(conv)
+        # shared attention block
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        a, kc, vc = attention_decode(
+            cfg, h, sp["wq"], sp["wk"], sp["wv"], sp["wo"],
+            cache["k"][app], cache["v"][app], slot, valid, pos,
+        )
+        x = x + a
+        h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(cfg, h, sp["mlp"])
+        k_new.append(kc)
+        v_new.append(vc)
+
+    logits = _mamba._logits(cfg, params, x)
+    new_cache = {
+        "ssm": jnp.concatenate(ssm_new, axis=0),
+        "conv": jnp.concatenate(conv_new, axis=0),
+        "k": jnp.stack(k_new, axis=0),
+        "v": jnp.stack(v_new, axis=0),
+        "kv_pos": kv_pos,
+        "pos": pos + 1,
+    }
+    return logits, new_cache

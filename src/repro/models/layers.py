@@ -1,0 +1,412 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (full / sliding
+window / blocked-local), MLP variants, and capacity-based MoE.
+
+All functions are pure JAX; every materialized tensor carries a logical
+sharding constraint via :func:`repro.dist.sharding.shard`, so the same code
+runs unsharded in tests and FSDP×TP×SP under the production mesh.
+
+Attention has two formulations, chosen per path:
+
+- **train/prefill**: repeat-KV to full heads, heads sharded over "model"
+  (classic Megatron TP).
+- **decode**: grouped-query einsum against a KV cache whose *sequence* dim is
+  sharded over "model" (flash-decoding style): each model shard attends over
+  its cache slice with all heads; the softmax is computed from sharded
+  partial max/denominator terms by XLA's collective machinery.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+
+__all__ = [
+    "rms_norm",
+    "rope_freqs",
+    "apply_rope",
+    "attention_train",
+    "attention_decode",
+    "mlp_apply",
+    "moe_apply",
+    "cross_entropy",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * rms) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, fp32, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Angles/sin/cos are computed in fp32 (position × frequency overflows
+    bf16 fast), but the rotation MULTIPLIES in x's dtype: converting q/k to
+    f32 here lets XLA hoist the convert across the sequence-parallel
+    all-gather and double every activation collective's wire bytes
+    (measured 90% of granite-3-8b train_4k's collective traffic in f32 —
+    §Perf iteration G2)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# -------------------------------------------------------------- attention
+def _causal_mask(S: int, T: int, q_offset: int = 0, window: int = 0) -> jax.Array:
+    """(S, T) bool mask: True = attend. Queries at positions q_offset+i."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def attention_train(
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, D)
+    wq: jax.Array,  # (D, H, hd)
+    wk: jax.Array,  # (D, KV, hd)
+    wv: jax.Array,
+    wo: jax.Array,  # (H, hd, D)
+    positions: jax.Array,  # (S,) int32
+    return_kv: bool = False,
+):
+    """Full-sequence causal attention (training / prefill scoring path).
+
+    Sliding-window archs use the blocked-local formulation: O(S·2W) instead
+    of O(S²) — queries in block i attend to blocks i-1 and i only (W equals
+    the block size, so the window is always inside those two blocks).
+
+    ``return_kv=True`` additionally returns the (rotated) KV-head tensors so
+    prefill can populate the decode cache without recomputing projections.
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B, S, D = x.shape
+    q = shard(jnp.einsum("bsd,dhk->bshk", x, wq), ("batch", None, "act_heads", None))
+    k = shard(jnp.einsum("bsd,dhk->bshk", x, wk), ("batch", None, None, None))
+    v = shard(jnp.einsum("bsd,dhk->bshk", x, wv), ("batch", None, None, None))
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    scale = hd**-0.5
+    k_kv, v_kv = k, v
+
+    if KV != H:  # repeat-KV: broadcast, cheap under TP (KV weights replicated)
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    if cfg.use_pallas_kernels:
+        # Pallas fast path (TPU; interpret mode on CPU): blocked online-
+        # softmax with true masked-block skipping — handles causal, GQA
+        # and sliding-window in one kernel
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(
+            q, k_kv, v_kv, scale=scale, causal=True, window=cfg.sliding_window
+        )
+    elif cfg.sliding_window and S > cfg.sliding_window:
+        out = _blocked_local_attention(q, k, v, cfg.sliding_window, scale)
+    elif S > _FLASH_THRESHOLD:
+        # memory-bounded online-softmax attention: never materializes the
+        # (S, S) score matrix — mandatory at 32k+ context
+        out = _blocked_causal_attention(q, k, v, scale)
+    else:
+        scores = jnp.einsum("bshk,bthk->bhst", q, k, preferred_element_type=jnp.float32)
+        scores = shard(scores * scale, ("batch", "act_heads", None, None))
+        mask = _causal_mask(S, S, window=cfg.sliding_window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", probs, v)
+    out = shard(out, ("batch", None, "act_heads", None))
+    proj = jnp.einsum("bshk,hkd->bsd", out, wo)
+    if return_kv:
+        return proj, k_kv, v_kv
+    return proj
+
+
+# Above this sequence length the quadratic score matrix stops fitting HBM and
+# attention switches to the online-softmax blocked form (flash semantics).
+_FLASH_THRESHOLD = 8192
+_FLASH_QB = 1024  # query block
+_FLASH_KB = 2048  # key/value block
+
+
+def _blocked_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, scale: float
+) -> jax.Array:
+    """Causal attention with flash-attention memory behavior, in pure XLA.
+
+    Outer ``lax.scan`` over query blocks, inner scan over KV blocks with the
+    running (max, denom, acc) online-softmax carry.  Peak memory is
+    O(QB·KB) per head instead of O(S²).  FLOPs are 2× the causal minimum
+    (every q-block scans every kv-block, masked) — recorded in the roofline
+    "useful-FLOPs" ratio; the Pallas kernel closes that gap on real TPU.
+    """
+    B, S, H, hd = q.shape
+    QB, KB = min(_FLASH_QB, S), min(_FLASH_KB, S)
+    nq, nk = S // QB, S // KB
+    qb = jnp.moveaxis(q.reshape(B, nq, QB, H, hd), 1, 0)  # (nq, B, QB, H, hd)
+    kb = jnp.moveaxis(k.reshape(B, nk, KB, H, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, KB, H, hd), 1, 0)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q  # index + (B, QB, H, hd)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            s = jnp.einsum(
+                "bqhk,bthk->bhqt", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            qpos = qi * QB + jnp.arange(QB)[:, None]
+            kpos = ki * KB + jnp.arange(KB)[None, :]
+            s = jnp.where((kpos <= qpos)[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqt,bthk->bhqk", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, QB), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, QB), jnp.float32)
+        a0 = jnp.zeros((B, H, QB, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb)
+        )
+        out = (acc / l[..., None]).astype(q.dtype)  # (B, H, QB, hd)
+        return None, jnp.moveaxis(out, 1, 2)  # (B, QB, H, hd)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # (nq, B, QB, H, hd) -> (B, S, H, hd)
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, S, H, hd)
+
+
+def _blocked_local_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int, scale: float
+) -> jax.Array:
+    """Sliding-window attention in O(S·2W): block-diagonal + one off-diagonal.
+
+    Requires S % window == 0 (the launcher pads otherwise).  Block i's
+    queries see keys in blocks i-1 and i, masked to the exact window.
+    """
+    B, S, H, hd = q.shape
+    W = window
+    nb = S // W
+    qb = q.reshape(B, nb, W, H, hd)
+    kb = k.reshape(B, nb, W, H, hd)
+    vb = v.reshape(B, nb, W, H, hd)
+    # previous block (block -1 is zeros, fully masked)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kk = jnp.concatenate([k_prev, kb], axis=2)  # (B, nb, 2W, H, hd)
+    vv = jnp.concatenate([v_prev, vb], axis=2)
+    scores = jnp.einsum("bnqhk,bnthk->bnhqt", qb, kk, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    qpos = jnp.arange(W)[:, None] + W  # query index within the 2W key window
+    kpos = jnp.arange(2 * W)[None, :]
+    base = (kpos <= qpos) & (kpos > qpos - W)  # (W, 2W)
+    has_prev = jnp.arange(nb) > 0  # block 0's "previous" keys are padding
+    allow = base[None] & (has_prev[:, None, None] | (kpos >= W)[None])  # (nb, W, 2W)
+    scores = jnp.where(allow[None, :, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bnhqt,bnthk->bnqhk", probs, vv)
+    return out.reshape(B, S, H, hd)
+
+
+def attention_decode(
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, 1, D)
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wo: jax.Array,
+    k_cache: jax.Array,  # (B, T, KV, hd)   T = max_len or window (ring)
+    v_cache: jax.Array,
+    slot: jax.Array,  # (B,) int32 — cache slot to write per sequence
+    valid: jax.Array,  # (B, T) bool — slots to attend to (incl. new one)
+    pos: jax.Array,  # (B,) int32 — absolute position per sequence
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a (possibly ring) KV cache.
+
+    Positions are PER SEQUENCE — a continuous-batching engine holds
+    sequences at different depths in one batch.  Slot/validity bookkeeping
+    is shared across layers, so the caller computes it once per step.
+    Returns (output (B,1,D), new_k_cache, new_v_cache).
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)  # (B,1,H,hd)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)  # (B,1,KV,hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    # force the FSDP weight-psum NOW, on the (B,1,KV,hd) rows: otherwise
+    # XLA fuses it into the cache scatter and all-reduces CACHE-sized
+    # buffers per layer (measured 19×268 MB/token on zamba2 long_500k,
+    # §Perf iteration Z3)
+    q = shard(q, ("batch", None, "act_heads", None))
+    k = shard(k, ("batch", None, None, None))
+    v = shard(v, ("batch", None, None, None))
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+    k_cache = shard(k_cache, ("batch", "kv_seq", None, None))
+    v_cache = shard(v_cache, ("batch", "kv_seq", None, None))
+
+    # grouped-query attention over the cache (no KV repeat: q -> (B,1,KV,G,hd))
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum(
+        "bskgh,btkh->bkgst", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (hd**-0.5)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v_cache).reshape(B, 1, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, wo), k_cache, v_cache
+
+
+# ------------------------------------------------------------------- MLPs
+def mlp_apply(cfg: ArchConfig, x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
+    """Dense MLP: swiglu (w1·silu ⊙ w3) | relu2 (squared ReLU) | gelu."""
+    if cfg.mlp == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, w["w1"])
+        g = jnp.einsum("bsd,df->bsf", x, w["w3"])
+        h = shard(jax.nn.silu(h) * g, ("batch", None, "act_mlp"))
+    elif cfg.mlp == "relu2":
+        h = jnp.einsum("bsd,df->bsf", x, w["w1"])
+        r = jax.nn.relu(h)
+        h = shard(r * r, ("batch", None, "act_mlp"))
+    else:  # gelu
+        h = jnp.einsum("bsd,df->bsf", x, w["w1"])
+        h = shard(jax.nn.gelu(h), ("batch", None, "act_mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, w["w2"])
+
+
+def _expert_ffn(cfg: ArchConfig, xs: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
+    """xs: (E, C, D) -> (E, C, D) through per-expert weights (E, D, F).
+
+    The hidden (E, C, F) annotation covers BOTH expert layouts: EP
+    (llama4: E over "model"; act_mlp deduped away) and TP-within-expert
+    (mixtral: E unsharded, F over "model").  Leaving F unconstrained lets
+    the remat'd backward recompute it replicated — measured 16× FLOPs on
+    the w2 gradient einsum (EXPERIMENTS.md §Perf iteration M2).
+    """
+    if cfg.mlp == "swiglu":
+        h = jnp.einsum("ecd,edf->ecf", xs, w["w1"])
+        g = jnp.einsum("ecd,edf->ecf", xs, w["w3"])
+        h = shard(jax.nn.silu(h) * g, ("act_experts", "batch", "act_mlp"))
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xs, w["w1"])
+        h = shard(jax.nn.relu(h) ** 2 if cfg.mlp == "relu2" else jax.nn.gelu(h),
+                  ("act_experts", "batch", "act_mlp"))
+    return jnp.einsum("ecf,efd->ecd", h, w["w2"])
+
+
+_MOE_GROUP = 512  # tokens per dispatch group (see moe_apply docstring)
+
+
+def moe_apply(cfg: ArchConfig, x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
+    """Capacity-based top-k MoE — grouped one-hot dispatch (GShard).
+
+    Tokens are split into *groups* of ≤512 (sub-slices of sequences, so the
+    group dim inherits the batch sharding); each group routes its tokens to
+    per-group expert capacity ``C = ceil(Tg·k/E · cf)`` (overflow dropped,
+    gates renormalized).  Dispatch/combine are **einsums against a one-hot
+    (G, Tg, E, C) tensor** — no sort, no gather, no scatter: under GSPMD
+    those data-dependent ops force replication of the full token tensor
+    (measured on mixtral train_4k: 56 TB/device of involuntary all-gathers;
+    EXPERIMENTS.md §Perf iteration M1), while the einsum form shards over G
+    and turns the group→expert reshard into one all-to-all-class collective,
+    exactly the GShard/Switch lowering.  Dispatch FLOPs are ≤0.1% of model
+    FLOPs at the production shapes.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    g_size = min(_MOE_GROUP, S)
+    while S % g_size:
+        g_size -= 1
+    G = T // g_size
+    C = max(int(np.ceil(g_size * K / E * cfg.capacity_factor)), 1)
+    xg = x.reshape(G, g_size, D)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg, w["router"], preferred_element_type=jnp.float32
+    )
+    gate_vals, expert_ids = jax.lax.top_k(logits, K)  # (G, Tg, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)
+
+    # one-hot expert choice per k-slot: (G, Tg, K, E)
+    onehot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)
+    # position of each (token, k) inside its expert's per-group queue:
+    # cumulative count over the flattened (Tg·K) routing slots
+    flat = onehot.reshape(G, g_size * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, Tg·K, E) position BEFORE self
+    pos = pos.reshape(G, g_size, K, E)
+    pos_in_expert = jnp.sum(pos * onehot, axis=-1)  # (G, Tg, K)
+    keep = pos_in_expert < C
+    gates = gates * keep  # drop overflow; renormalize below
+    denom = jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    gates = gates / denom
+
+    # dispatch one-hot over capacity slots: (G, Tg, E, C)
+    cap_oh = jax.nn.one_hot(
+        jnp.where(keep, pos_in_expert, C).astype(jnp.int32), C, dtype=jnp.float32
+    )  # out-of-capacity maps past the last slot -> all-zero row
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, cap_oh)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gates, onehot, cap_oh)
+
+    expert_in = jnp.einsum(
+        "gtec,gtd->egcd", dispatch.astype(x.dtype), xg
+    )  # group-sharded → expert-major (the all-to-all-class reshard)
+    expert_in = shard(
+        expert_in.reshape(E, G * C, D), ("act_experts", "batch", None)
+    )
+    expert_out = _expert_ffn(cfg, expert_in, w).reshape(E, G, C, D)
+    out = jnp.einsum("gtec,egcd->gtd", combine.astype(x.dtype), expert_out)
+
+    if cfg.moe_shared_expert:
+        out = out + mlp_apply(cfg, xg, {k: v for k, v in w["shared"].items()})
+    return out.reshape(B, S, D)
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(
+    logits: jax.Array,  # (B, S, V) any float dtype
+    labels: jax.Array,  # (B, S) int32
+    mask: jax.Array,  # (B, S) float or bool
+    softcap: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked token-mean CE in fp32.  Returns (loss, token_count)."""
+    lg = logits.astype(jnp.float32)
+    if softcap > 0:
+        lg = jnp.tanh(lg / softcap) * softcap
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / count, count

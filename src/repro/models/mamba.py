@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) decoder stack — attention-free family.
+
+Same API surface as ``transformer.py``; the decode "cache" is the constant-
+size SSM state + conv tail per layer, which is what makes the 500k-token
+decode cell feasible for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+from repro.models.layers import rms_norm
+from repro.models.ssm import (
+    mamba2_decode,
+    mamba2_forward,
+    mamba2_layer_param_shapes,
+)
+
+__all__ = [
+    "init_params",
+    "param_logical_axes",
+    "forward",
+    "init_decode_cache",
+    "cache_logical_axes",
+    "prefill",
+    "decode_step",
+]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    keys = iter(jax.random.split(key, 32))
+    shapes = mamba2_layer_param_shapes(cfg)
+
+    def stacked(shape, fan_in):
+        return (
+            jax.random.normal(next(keys), (L,) + shape, jnp.float32) * (fan_in**-0.5)
+        ).astype(dt)
+
+    layers: Dict[str, jax.Array] = {}
+    for name, s in shapes.items():
+        if name in ("ln", "norm", "conv_b", "D_skip"):
+            layers[name] = (jnp.ones if name != "conv_b" else jnp.zeros)((L,) + s, dt)
+        elif name == "A_log":
+            # A in [-1, -8): log-spaced decay rates (mamba2 default init)
+            a = jnp.log(jnp.linspace(1.0, 8.0, s[0]))
+            layers[name] = jnp.broadcast_to(a, (L,) + s).astype(jnp.float32)
+        elif name == "dt_bias":
+            layers[name] = jnp.zeros((L,) + s, jnp.float32)
+        elif name == "conv_w":
+            layers[name] = stacked(s, cfg.conv_width)
+        else:
+            layers[name] = stacked(s, s[0])
+    params = {
+        "embed": (jax.random.normal(next(keys), (V, D), jnp.float32) * (D**-0.5)).astype(dt),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dt),
+        "lm_head": (jax.random.normal(next(keys), (D, V), jnp.float32) * (D**-0.5)).astype(dt),
+    }
+    return params
+
+
+def param_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": {
+            "in_proj": ("layers", "embed", "mlp"),  # big: shard out dim over model
+            "conv_w": ("layers", None, None),
+            "conv_b": ("layers", None),
+            "A_log": ("layers", None),
+            "D_skip": ("layers", None),
+            "dt_bias": ("layers", None),
+            "norm": ("layers", None),
+            "out_proj": ("layers", "mlp", "embed"),
+            "ln": ("layers", None),
+        },
+        "final_norm": (None,),
+        "lm_head": ("embed", "vocab"),
+    }
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shard(logits, ("batch", "seq", "act_vocab"))
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    x = params["embed"][tokens]
+    if prefix_embeds is not None and cfg.prefix_len:
+        x = jax.lax.dynamic_update_slice(x, prefix_embeds.astype(x.dtype), (0, 0, 0))
+    x = shard(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, _, _ = mamba2_forward(cfg, h, lp)
+        x = shard(x + out, ("batch", "seq", None))
+        return x
+
+    body_r = _remat(cfg, body)
+    x, _ = jax.lax.scan(lambda c, lp: (body_r(c, lp), None), x, params["layers"])
+    return _logits(cfg, params, x)
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    L, H, P, N = cfg.num_layers, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, conv_ch), _dtype(cfg)),
+        "pos": jnp.zeros((batch,), jnp.int32),  # per-sequence (continuous batching)
+    }
+
+
+def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ssm": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, None),
+        "pos": ("batch",),
+    }
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if prefix_embeds is not None and cfg.prefix_len:
+        x = jax.lax.dynamic_update_slice(x, prefix_embeds.astype(x.dtype), (0, 0, 0))
+    x = shard(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, ssm_state, conv_tail = mamba2_forward(cfg, h, lp)
+        x = shard(x + out, ("batch", "seq", None))
+        return x, (ssm_state, conv_tail)
+
+    body_r = _remat(cfg, body)
+    x, (ssm_states, conv_tails) = jax.lax.scan(body_r, x, params["layers"])
+    logits = _logits(cfg, params, x[:, -1:, :])
+    cache = {
+        "ssm": ssm_states,
+        "conv": conv_tails.astype(_dtype(cfg)),
+        "pos": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    x = params["embed"][tokens]  # (B,1,D)
+    x = shard(x, ("batch", None, None))  # see hybrid.decode_step (§Perf Z2)
+
+    def body(x, xs):
+        lp, ssm_state, conv_state = xs
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        out, ssm_state, conv_state = mamba2_decode(cfg, h, lp, ssm_state, conv_state)
+        return x + out, (ssm_state, conv_state)
+
+    x, (ssm_new, conv_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssm"], cache["conv"])
+    )
+    logits = _logits(cfg, params, x)
+    return logits, {"ssm": ssm_new, "conv": conv_new, "pos": cache["pos"] + 1}

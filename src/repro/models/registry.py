@@ -1,0 +1,135 @@
+"""Architecture registry: config lookup, family dispatch, input specs.
+
+``get_model(cfg)`` returns a uniform functional API regardless of family;
+``input_specs(cfg, shape)`` builds the ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of a given (arch × shape) cell — the dry-run contract
+(weak-type-correct, shardable, no device allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeSpec, SHAPES
+
+__all__ = ["ModelAPI", "get_model", "get_config", "list_archs", "input_specs", "ARCH_IDS"]
+
+ARCH_IDS = [
+    "musicgen-medium",
+    "nemotron-4-340b",
+    "phi3-mini-3.8b",
+    "granite-3-2b",
+    "granite-3-8b",
+    "internvl2-76b",
+    "zamba2-1.2b",
+    "llama4-scout-17b-a16e",
+    "mixtral-8x22b",
+    "mamba2-780m",
+]
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init_params: Callable
+    param_logical_axes: Callable
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_cache: Callable
+    cache_logical_axes: Callable
+
+
+def _family_module(family: str):
+    from repro.models import hybrid, mamba, transformer
+
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "audio": transformer,
+        "vlm": transformer,
+        "ssm": mamba,
+        "hybrid": hybrid,
+    }[family]
+
+
+def get_model(cfg: ArchConfig) -> ModelAPI:
+    mod = _family_module(cfg.family)
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key: mod.init_params(cfg, key),
+        param_logical_axes=lambda: mod.param_logical_axes(cfg),
+        forward=lambda params, tokens, prefix_embeds=None: mod.forward(
+            cfg, params, tokens, prefix_embeds
+        ),
+        prefill=lambda params, tokens, prefix_embeds=None, max_len=None: mod.prefill(
+            cfg, params, tokens, prefix_embeds, max_len
+        ),
+        decode_step=lambda params, tokens, cache: mod.decode_step(cfg, params, tokens, cache),
+        init_decode_cache=lambda batch, max_len: mod.init_decode_cache(cfg, batch, max_len),
+        cache_logical_axes=lambda: mod.cache_logical_axes(cfg),
+    )
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def list_archs():
+    return list(ARCH_IDS)
+
+
+# --------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec | str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × shape) cell.
+
+    train  : tokens/labels (B,S) int32, loss_mask (B,S) f32 [+ prefix embeds]
+    prefill: tokens (B,S) int32 [+ prefix embeds]
+    decode : tokens (B,1) int32 + a full KV/state cache at seq_len context
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        specs["labels"] = _sds((B, S), jnp.int32)
+        specs["loss_mask"] = _sds((B, S), jnp.float32)
+        if cfg.frontend != "none":
+            specs["prefix_embeds"] = _sds((B, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.frontend != "none":
+            specs["prefix_embeds"] = _sds((B, cfg.prefix_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.kind == "decode":
+        mod = _family_module(cfg.family)
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+        cache_shapes = jax.eval_shape(lambda: mod.init_decode_cache(cfg, B, S))
+        specs["cache"] = cache_shapes
+        return specs
+    raise ValueError(f"unknown shape kind {shape.kind}")
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec | str) -> tuple[bool, str]:
+    """The 40-cell coverage rule: ``long_500k`` needs sub-quadratic attention."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, "SKIP(full-attention @ 500k context)"
+    return True, ""

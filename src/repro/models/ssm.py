@@ -1,0 +1,231 @@
+"""Mamba2 — state-space duality (SSD), chunked, pure JAX.
+
+Implements the blocked SSD algorithm of arXiv:2405.21060 §6: sequence split
+into chunks of ``Q``; intra-chunk terms are dense (batched) matmuls against
+the decay matrix ``L``; inter-chunk terms flow through a `lax.scan` over
+per-chunk states.  This turns the recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;    y_t = C_t h_t + D x_t
+
+into MXU-shaped einsums — the TPU-native formulation (the Pallas kernel in
+``kernels/mamba2_ssd`` tiles exactly these einsums; this module is also its
+numerical oracle's basis).
+
+Single B/C group (G=1), as in the assigned mamba2-780m / zamba2 configs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+
+__all__ = [
+    "ssd_chunked",
+    "ssd_decode_step",
+    "mamba2_forward",
+    "mamba2_decode",
+    "causal_conv",
+    "conv_decode_step",
+    "mamba2_layer_param_shapes",
+]
+
+
+def ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P)  inputs split into SSM heads
+    dt: jax.Array,  # (B, S, H)     softplus-ed step sizes
+    A: jax.Array,  # (H,)          negative decay rates
+    Bm: jax.Array,  # (B, S, N)     input projections (G=1)
+    Cm: jax.Array,  # (B, S, N)     output projections
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_real = S
+    if S % Q:  # pad tail with dt=0 rows: exp(0)=1 decay, zero input — no-op
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    f32 = jnp.float32
+
+    xc = xh.reshape(B_, nc, Q, H, P)
+    dtc = dt.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, N)
+    Cc = Cm.reshape(B_, nc, Q, N)
+
+    dA = dtc * A.astype(f32)  # (B,nc,Q,H), negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive within-chunk cumsum
+
+    # ---- intra-chunk: (C·Bᵀ ⊙ L) @ (dt·x)
+    scores = jnp.einsum("bcqn,bctn->bcqt", Cc, Bc, preferred_element_type=f32)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask INSIDE the exponent: exp(+large) in the dead upper triangle would
+    # poison gradients through jnp.where (inf · 0 = nan in the vjp)
+    diff = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    M = scores[..., None] * jnp.exp(diff)
+    y_intra = jnp.einsum("bcqth,bcth,bcthp->bcqhp", M, dtc, xc.astype(f32))
+
+    # ---- per-chunk contributed state: Σ_t exp(dA_sum − dA_cs[t]) dt_t B_t ⊗ x_t
+    dA_sum = dA_cs[:, :, -1, :]  # (B,nc,H)
+    w = dtc * jnp.exp(dA_sum[:, :, None, :] - dA_cs)  # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bctn,bcth,bcthp->bchpn", Bc, w, xc.astype(f32))
+
+    # ---- inter-chunk recurrence (scan over chunks)
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), f32)
+
+    def step(h, inp):
+        decay_c, s_c = inp  # (B,H), (B,H,P,N)
+        h_prev = h
+        h = h * jnp.exp(decay_c)[:, :, None, None] + s_c
+        return h, h_prev
+
+    decays = jnp.moveaxis(dA_sum, 1, 0)  # (nc,B,H)
+    states = jnp.moveaxis(S_chunk, 1, 0)  # (nc,B,H,P,N)
+    h_final, h_prevs = jax.lax.scan(step, h0.astype(f32), (decays, states))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # ---- inter-chunk output: exp(dA_cs[q]) · C_q · h_prev
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, jnp.exp(dA_cs), preferred_element_type=f32
+    )
+    y = (y_intra + y_inter).reshape(B_, S, H, P)[:, :S_real]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, N)
+    Cm: jax.Array,  # (B, N)
+    h: jax.Array,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence: O(H·P·N) per step, state size constant."""
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * A.astype(f32))[:, :, None, None]  # (B,H,1,1)
+    dBx = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(f32), dt.astype(f32), x.astype(f32))
+    h = h * jnp.exp(dA) + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(f32))
+    return y.astype(x.dtype), h
+
+
+# ----------------------------------------------------------- conv + block
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq.  x: (B,S,C), w: (K,C), b: (C,)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for i in range(K):  # K is tiny (4): unrolled shifts beat conv lowering
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1], :]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_decode_step(
+    x_new: jax.Array,  # (B, C) newest input
+    conv_state: jax.Array,  # (B, K-1, C) previous inputs
+    w: jax.Array,
+    b: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_new.dtype)
+    return y, window[:, 1:, :]
+
+
+def mamba2_layer_param_shapes(cfg: ArchConfig) -> Dict[str, tuple]:
+    D, d_in, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": (D, 2 * d_in + 2 * N + H),
+        "conv_w": (cfg.conv_width, conv_ch),
+        "conv_b": (conv_ch,),
+        "A_log": (H,),
+        "D_skip": (H,),
+        "dt_bias": (H,),
+        "norm": (d_in,),
+        "out_proj": (d_in, D),
+        "ln": (D,),
+    }
+
+
+def _split_zxbcdt(cfg: ArchConfig, zxbcdt: jax.Array):
+    d_in, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + d_in + 2 * N]
+    dt = zxbcdt[..., d_in + d_in + 2 * N :]
+    return z, xbc, dt
+
+
+def mamba2_forward(
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, S, D) post-norm residual input
+    p: Dict[str, jax.Array],
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence Mamba2 mixer.  Returns (out (B,S,D), final ssm state
+    (B,H,P,N), conv tail (B,K-1,conv_ch)) so prefill can hand off to decode."""
+    from repro.models.layers import rms_norm
+
+    B, S, D = x.shape
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    xbc = jax.nn.silu(causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = xbc[..., :d_in], xbc[..., d_in : d_in + N], xbc[..., d_in + N :]
+    xh = shard(xs.reshape(B, S, H, P), ("batch", None, "ssm_heads", None))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if cfg.use_pallas_kernels and h0 is None:
+        from repro.kernels.mamba2_ssd import ssd as ssd_kernel
+
+        y, h_final = ssd_kernel(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0=h0)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    conv_tail = xbc_raw[:, S - (cfg.conv_width - 1) :, :] if S >= cfg.conv_width - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (cfg.conv_width - 1 - S, 0), (0, 0))
+    )
+    return out, h_final, conv_tail
+
+
+def mamba2_decode(
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, 1, D)
+    p: Dict[str, jax.Array],
+    ssm_state: jax.Array,  # (B, H, P, N)
+    conv_state: jax.Array,  # (B, K-1, conv_ch)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    from repro.models.layers import rms_norm
+
+    B = x.shape[0]
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]  # (B, E)
+    z, xbc_raw, dt_raw = _split_zxbcdt(cfg, zxbcdt)
+    xbc, conv_state = conv_decode_step(xbc_raw, conv_state, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = xbc[..., :d_in], xbc[..., d_in : d_in + N], xbc[..., d_in + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_decode_step(xs.reshape(B, H, P), dt, A, Bm, Cm, ssm_state)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xs.reshape(B, H, P).astype(jnp.float32)
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, ssm_state, conv_state

@@ -1,0 +1,338 @@
+"""Decoder-only transformer stack (dense / MoE / audio / VLM families).
+
+Layers are *stacked* (leading ``L`` dim) and iterated with ``lax.scan`` so the
+HLO contains one layer body regardless of depth — essential for fast
+compiles at 96 layers and for uniform remat policies.  Modality frontends
+(musicgen frames, InternViT patches) are stubs: precomputed prefix
+embeddings overwrite the first ``prefix_len`` token embeddings (early
+fusion), matching the assignment's input contract.
+
+API (same across families; see ``mamba.py`` / ``hybrid.py``):
+    init_params, param_logical_axes, forward,
+    init_decode_cache, cache_logical_axes, prefill, decode_step
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_rope,
+    attention_decode,
+    attention_train,
+    mlp_apply,
+    moe_apply,
+    rms_norm,
+)
+
+__all__ = [
+    "init_params",
+    "param_logical_axes",
+    "forward",
+    "init_decode_cache",
+    "cache_logical_axes",
+    "prefill",
+    "decode_step",
+]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+# ------------------------------------------------------------------- params
+def _mlp_shapes(cfg: ArchConfig) -> Dict[str, tuple]:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"w1": (D, F), "w3": (D, F), "w2": (F, D)}
+    return {"w1": (D, F), "w2": (F, D)}
+
+
+def _mlp_axes(cfg: ArchConfig, layered: bool) -> Dict[str, tuple]:
+    l = ("layers",) if layered else ()
+    ax = {"w1": l + ("embed", "mlp"), "w2": l + ("mlp", "embed")}
+    if cfg.mlp == "swiglu":
+        ax["w3"] = l + ("embed", "mlp")
+    return ax
+
+
+def _layer_shapes(cfg: ArchConfig) -> Dict[str, Any]:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    shapes: Dict[str, Any] = {
+        "ln1": (D,),
+        "ln2": (D,),
+        "wq": (D, H, hd),
+        "wk": (D, KV, hd),
+        "wv": (D, KV, hd),
+        "wo": (H, hd, D),
+    }
+    if cfg.num_experts:
+        E, F = cfg.num_experts, cfg.d_ff
+        moe = {"router": (D, E), "w1": (E, D, F), "w2": (E, F, D)}
+        if cfg.mlp == "swiglu":
+            moe["w3"] = (E, D, F)
+        if cfg.moe_shared_expert:
+            moe["shared"] = _mlp_shapes(cfg)
+        shapes["moe"] = moe
+    else:
+        shapes["mlp"] = _mlp_shapes(cfg)
+    return shapes
+
+
+def _layer_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes: Dict[str, Any] = {
+        "ln1": ("layers", None),
+        "ln2": ("layers", None),
+        "wq": ("layers", "embed", "heads", "head_dim"),
+        # KV projections are small under GQA: replicate across "model"
+        "wk": ("layers", "embed", None, None),
+        "wv": ("layers", "embed", None, None),
+        "wo": ("layers", "heads", "head_dim", "embed"),
+    }
+    if cfg.num_experts:
+        moe = {
+            "router": ("layers", "embed", None),
+            "w1": ("layers", "experts", "embed", "expert_mlp"),
+            "w2": ("layers", "experts", "expert_mlp", "embed"),
+        }
+        if cfg.mlp == "swiglu":
+            moe["w3"] = ("layers", "experts", "embed", "expert_mlp")
+        if cfg.moe_shared_expert:
+            moe["shared"] = _mlp_axes(cfg, layered=True)
+        axes["moe"] = moe
+    else:
+        axes["mlp"] = _mlp_axes(cfg, layered=True)
+    return axes
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    """Fan-in scaled normal init, params stacked over layers."""
+    dt = _dtype(cfg)
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    keys = iter(jax.random.split(key, 64))
+
+    def dense(shape, fan_in):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * (fan_in**-0.5)).astype(dt)
+
+    def stacked(shape, fan_in):
+        return dense((L,) + shape, fan_in)
+
+    layer_shapes = _layer_shapes(cfg)
+
+    def _fan_in(name: str, s: tuple) -> int:
+        if name == "wo":  # (H, hd, D): contraction over H·hd
+            return s[0] * s[1]
+        if len(s) >= 2:  # (…, in, out): contraction over the next-to-last dim
+            return s[-2]
+        return 1
+
+    def init_tree(shapes):
+        out = {}
+        for name, s in shapes.items():
+            if isinstance(s, dict):
+                out[name] = init_tree(s)
+            elif name.startswith("ln") or name == "norm":
+                out[name] = jnp.ones((L,) + s, dt)
+            else:
+                out[name] = stacked(s, _fan_in(name, s))
+        return out
+
+    params = {
+        "embed": dense((V, D), D),
+        "layers": init_tree(layer_shapes),
+        "final_norm": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense((D, V), D)
+    return params
+
+
+def param_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": _layer_axes(cfg),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ------------------------------------------------------------------ forward
+def _embed_tokens(cfg, params, tokens, prefix_embeds):
+    x = params["embed"][tokens]  # (B,S,D) gather
+    if prefix_embeds is not None and cfg.prefix_len:
+        # early fusion: precomputed frame/patch embeddings overwrite the
+        # first prefix_len positions (modality frontend stub)
+        x = jax.lax.dynamic_update_slice(x, prefix_embeds.astype(x.dtype), (0, 0, 0))
+    return shard(x, ("batch", "seq", None))
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, ("batch", "seq", "act_vocab"))
+
+
+def forward(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,  # (B, S) int32
+    prefix_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Training/scoring forward pass: (B,S) -> logits (B,S,V)."""
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, prefix_embeds)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a = attention_train(cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], positions)
+        x = shard(x + a, ("batch", "seq", None))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = moe_apply(cfg, h, lp["moe"]) if cfg.num_experts else mlp_apply(cfg, h, lp["mlp"])
+        x = shard(x + m, ("batch", "seq", None))
+        return x
+
+    body_r = _remat(cfg, body)
+    x, _ = jax.lax.scan(lambda c, lp: (body_r(c, lp), None), x, params["layers"])
+    return _logits(cfg, params, x)
+
+
+# -------------------------------------------------------------------- cache
+def cache_len(cfg: ArchConfig, max_len: int) -> int:
+    """Ring buffers bound the cache to the attention window."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    T = cache_len(cfg, max_len)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((L, batch, T, KV, hd), dt),
+        "v": jnp.zeros((L, batch, T, KV, hd), dt),
+        # per-sequence bookkeeping: continuous batching holds sequences at
+        # different depths in one batch
+        "kv_pos": jnp.full((batch, T), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "k": ("layers", "batch", "kv_seq", None, None),
+        "v": ("layers", "batch", "kv_seq", None, None),
+        "kv_pos": ("batch", None),
+        "pos": ("batch",),
+    }
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,  # (B, S)
+    prefix_embeds: Optional[jax.Array] = None,
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process the prompt, build the KV cache, return last-token logits.
+
+    The cache holds the final ``cache_len`` positions (ring layout matches
+    decode's ``slot = pos % T`` for sliding-window archs).
+    """
+    B, S = tokens.shape
+    T = cache_len(cfg, max_len or S)
+    x = _embed_tokens(cfg, params, tokens, prefix_embeds)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, k, v = attention_train(
+            cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], positions, return_kv=True
+        )
+        x = shard(x + a, ("batch", "seq", None))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = moe_apply(cfg, h, lp["moe"]) if cfg.num_experts else mlp_apply(cfg, h, lp["mlp"])
+        x = shard(x + m, ("batch", "seq", None))
+        if cfg.sliding_window and S > T:
+            # keep the last T positions, rotated so slot == pos % T
+            tail = jax.lax.dynamic_slice_in_dim(k, S - T, T, axis=1)
+            tailv = jax.lax.dynamic_slice_in_dim(v, S - T, T, axis=1)
+            shift = (S - T) % T
+            kc = jnp.roll(tail, shift=shift, axis=1)
+            vc = jnp.roll(tailv, shift=shift, axis=1)
+        else:
+            pad = T - S
+            kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else k[:, :T]
+            vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else v[:, :T]
+        return x, (kc.astype(_dtype(cfg)), vc.astype(_dtype(cfg)))
+
+    body_r = _remat(cfg, body)
+    x, (kc, vc) = jax.lax.scan(body_r, x, params["layers"])
+    logits = _logits(cfg, params, x[:, -1:, :])
+
+    if cfg.sliding_window and S > T:
+        abs_pos = jnp.arange(S - T, S, dtype=jnp.int32)
+        kv_pos = jnp.roll(abs_pos, shift=(S - T) % T)
+    else:
+        kv_pos = jnp.where(jnp.arange(T) < S, jnp.arange(T, dtype=jnp.int32), -1)
+    cache = {
+        "k": shard(kc, ("layers", "batch", "kv_seq", None, None)),
+        "v": shard(vc, ("layers", "batch", "kv_seq", None, None)),
+        "kv_pos": jnp.broadcast_to(kv_pos, (B, T)),
+        "pos": jnp.full((B,), S, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict[str, Any],
+    tokens: jax.Array,  # (B, 1)
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode for the whole stack (scan over layers with per-layer
+    cache slices as scan xs/ys)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]  # (B,)
+    T = cache["k"].shape[2]
+    x = params["embed"][tokens]  # (B,1,D)
+    x = shard(x, ("batch", None, None))
+
+    slot = jnp.where(cfg.sliding_window > 0, pos % T, jnp.minimum(pos, T - 1))  # (B,)
+    kv_pos = cache["kv_pos"].at[jnp.arange(B), slot].set(pos)  # (B, T)
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if cfg.sliding_window > 0:
+        valid &= kv_pos > (pos - cfg.sliding_window)[:, None]
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, kc, vc = attention_decode(
+            cfg, h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], kc, vc, slot, valid, pos
+        )
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        m = moe_apply(cfg, h, lp["moe"]) if cfg.num_experts else mlp_apply(cfg, h, lp["mlp"])
+        return x + m, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    logits = _logits(cfg, params, x)
+    new_cache = {"k": k_new, "v": v_new, "kv_pos": kv_pos, "pos": pos + 1}
+    return logits, new_cache

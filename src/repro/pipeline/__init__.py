@@ -1,0 +1,30 @@
+"""Declarative pipeline abstractions (paper §II): the `@model` DSL, DAG
+reconstruction from function inputs, logical→physical plan compilation with
+inserted system scans, and the multi-runtime executor."""
+
+from repro.pipeline.dsl import Model, ModelDef, Project, model, runtime
+from repro.pipeline.dag import Dag, DagError, build_dag
+from repro.pipeline.filters import ParsedFilter, date_ordinal, parse_filter
+from repro.pipeline.physical import PhysicalPlan, SystemScanStep, UserFnStep, compile_plan
+from repro.pipeline.executor import RunResult, Workspace, run_project
+
+__all__ = [
+    "Model",
+    "ModelDef",
+    "Project",
+    "model",
+    "runtime",
+    "Dag",
+    "DagError",
+    "build_dag",
+    "ParsedFilter",
+    "parse_filter",
+    "date_ordinal",
+    "PhysicalPlan",
+    "SystemScanStep",
+    "UserFnStep",
+    "compile_plan",
+    "Workspace",
+    "RunResult",
+    "run_project",
+]

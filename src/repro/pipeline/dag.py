@@ -1,0 +1,76 @@
+"""DAG reconstruction and validation (the control plane's first job)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+from repro.pipeline.dsl import Model, ModelDef, Project
+
+__all__ = ["Dag", "build_dag", "DagError"]
+
+
+class DagError(ValueError):
+    pass
+
+
+@dataclass
+class Dag:
+    project: Project
+    # edges model -> the models it consumes; scan leaves are table refs
+    edges: Dict[str, List[str]]
+    scan_leaves: Dict[str, List[Tuple[str, Model]]]  # model -> its table refs
+    order: List[str]  # topological
+
+    def consumers_of(self, name: str) -> List[str]:
+        return [m for m, deps in self.edges.items() if name in deps]
+
+    def sinks(self) -> List[str]:
+        consumed = {d for deps in self.edges.values() for d in deps}
+        return [m for m in self.project.models if m not in consumed]
+
+
+def build_dag(project: Project) -> Dag:
+    """Reconstruct the DAG from ``Model`` references; reject cycles, dangling
+    names are treated as catalog tables iff they are namespaced (contain a
+    dot) — the same convention as the paper's ``raw_data`` leaf."""
+    edges: Dict[str, List[str]] = {}
+    scan_leaves: Dict[str, List[Tuple[str, Model]]] = {}
+    for name, mdef in project.models.items():
+        deps: List[str] = []
+        leaves: List[Tuple[str, Model]] = []
+        for arg, ref in mdef.inputs.items():
+            if ref.name in project.models:
+                if ref.columns is not None or ref.filter is not None:
+                    raise DagError(
+                        f"{name}: projections/filters belong on scan leaves, "
+                        f"but {ref.name!r} is a model"
+                    )
+                deps.append(ref.name)
+            elif "." in ref.name:
+                leaves.append((arg, ref))
+            else:
+                raise DagError(
+                    f"{name}: unknown reference {ref.name!r} "
+                    f"(not a model; catalog tables are 'namespace.table')"
+                )
+        edges[name] = deps
+        scan_leaves[name] = leaves
+
+    # Kahn topological sort
+    indeg = {m: len(deps) for m, deps in edges.items()}
+    ready = sorted(m for m, d in indeg.items() if d == 0)
+    order: List[str] = []
+    while ready:
+        m = ready.pop(0)
+        order.append(m)
+        for consumer, deps in edges.items():
+            if m in deps:
+                indeg[consumer] -= 1
+                if indeg[consumer] == 0:
+                    ready.append(consumer)
+        ready.sort()
+    if len(order) != len(project.models):
+        cyclic = sorted(set(project.models) - set(order))
+        raise DagError(f"cycle detected among models: {cyclic}")
+    return Dag(project=project, edges=edges, scan_leaves=scan_leaves, order=order)

@@ -1,0 +1,151 @@
+"""The declarative pipeline DSL — paper Listing 1, faithfully.
+
+Users write transformations as plain functions whose *default argument
+values* are :class:`Model` references; the DAG is reconstructed from those
+references when the project is submitted (never stated imperatively).  A
+runtime decorator pins the execution environment per node — the paper uses
+`@bauplan.python("3.11", pip={"pandas": "2.0"})`; in a JAX framework the two
+"languages" are **numpy** (host) and **jax** (device), and the cache is
+shared transparently across them, which is exactly the paper's
+cross-language claim.
+
+Example (compare paper Listing 1)::
+
+    @model()
+    @runtime("numpy")
+    def cleaned_data(
+        data=Model(
+            "ns.raw_data",
+            columns=["c1", "c2", "c3"],
+            filter="eventTime BETWEEN 2023-01-01 AND 2023-02-01",
+        )
+    ):
+        return data.do_something()
+
+    @model()
+    @runtime("jax")
+    def training_data(data=Model("cleaned_data")):
+        return {k: normalize(v) for k, v in data.items()}
+"""
+
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+__all__ = ["Model", "ModelDef", "Project", "model", "runtime", "current_project"]
+
+
+@dataclass(frozen=True)
+class Model:
+    """A *logical* dataframe reference: name + projections + filter.
+
+    ``name`` either matches another model in the project (an edge in the
+    DAG) or a catalog table ``namespace.table`` (a scan leaf).  ``columns``
+    and ``filter`` only make sense on scan leaves — the physical plan turns
+    them into the system scan's projections and window.
+    """
+
+    name: str
+    columns: Optional[Sequence[str]] = None
+    filter: Optional[str] = None
+    snapshot_id: Optional[str] = None  # time travel ("last Friday's rows")
+
+    def __post_init__(self) -> None:
+        if self.columns is not None:
+            object.__setattr__(self, "columns", tuple(self.columns))
+
+
+@dataclass
+class ModelDef:
+    name: str
+    fn: Callable
+    inputs: Dict[str, Model]  # arg name -> reference
+    runtime: str = "numpy"  # "numpy" | "jax"
+    materialize: bool = False  # publish output back to the catalog as a table
+    runtime_opts: Dict[str, Any] = field(default_factory=dict)
+
+
+class Project:
+    """A collection of model definitions (one user "code submission")."""
+
+    def __init__(self, name: str = "project"):
+        self.name = name
+        self.models: Dict[str, ModelDef] = {}
+
+    def add(self, mdef: ModelDef) -> None:
+        if mdef.name in self.models:
+            raise ValueError(f"duplicate model {mdef.name!r}")
+        self.models[mdef.name] = mdef
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.models
+
+    def __getitem__(self, name: str) -> ModelDef:
+        return self.models[name]
+
+
+# A module-level default project makes the decorator syntax match the paper;
+# tests construct explicit Projects to stay hermetic.
+_DEFAULT_PROJECT = Project("default")
+
+
+def current_project() -> Project:
+    return _DEFAULT_PROJECT
+
+
+def _extract_inputs(fn: Callable) -> Dict[str, Model]:
+    sig = inspect.signature(fn)
+    inputs: Dict[str, Model] = {}
+    for pname, param in sig.parameters.items():
+        if isinstance(param.default, Model):
+            inputs[pname] = param.default
+        elif param.default is inspect.Parameter.empty:
+            raise TypeError(
+                f"{fn.__name__}: parameter {pname!r} must default to a "
+                f"bauplan-style Model(...) reference"
+            )
+    return inputs
+
+
+def model(
+    name: Optional[str] = None,
+    materialize: bool = False,
+    project: Optional[Project] = None,
+) -> Callable[[Callable], Callable]:
+    """``@model()`` — register a transformation; DAG edges come from the
+    function's ``Model`` defaults (paper: "The DAG structure is implicitly
+    expressed through function inputs")."""
+
+    def deco(fn: Callable) -> Callable:
+        rt = getattr(fn, "__repro_runtime__", "numpy")
+        opts = getattr(fn, "__repro_runtime_opts__", {})
+        mdef = ModelDef(
+            name=name or fn.__name__,
+            fn=fn,
+            inputs=_extract_inputs(fn),
+            runtime=rt,
+            materialize=materialize,
+            runtime_opts=opts,
+        )
+        (project or _DEFAULT_PROJECT).add(mdef)
+        fn.__repro_model__ = mdef
+        return fn
+
+    return deco
+
+
+def runtime(kind: str = "numpy", **opts: Any) -> Callable[[Callable], Callable]:
+    """``@runtime("jax", device="tpu")`` — the analogue of
+    ``@bauplan.python("3.11", pip={...})``: pins the node's execution
+    environment without touching its logic."""
+    if kind not in ("numpy", "jax"):
+        raise ValueError(f"unknown runtime {kind!r}")
+
+    def deco(fn: Callable) -> Callable:
+        fn.__repro_runtime__ = kind
+        fn.__repro_runtime_opts__ = dict(opts)
+        return fn
+
+    return deco

@@ -1,0 +1,167 @@
+"""The data-plane worker: executes a physical plan.
+
+Semantics from the paper (Fig. 2/3):
+
+- system scans run first (through the shared :class:`ScanExecutor`, i.e. the
+  differential cache) and feed user functions as columnar tables;
+- model→model handoffs are in-memory and zero-copy;
+- the ``jax`` runtime receives ``{column: jnp.ndarray}`` — the "second
+  language" demonstrating that the cache sits *below* language choice;
+- ``materialize=True`` publishes a model's output back to the catalog as an
+  Iceberg-style table (a new snapshot), closing the loop for downstream DAGs.
+
+A :class:`Workspace` bundles store+catalog+cache and persists across runs —
+the cache is shared by every user/pipeline in the workspace, which is what
+makes the paper's multi-user §III-A workload work.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.cache import DifferentialCache
+from repro.core.columnar import ChunkedTable, Table
+from repro.core.planner import ScanExecutor
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+from repro.pipeline.dag import build_dag
+from repro.pipeline.dsl import Project
+from repro.pipeline.filters import parse_filter
+from repro.pipeline.physical import PhysicalPlan, compile_plan
+
+__all__ = ["Workspace", "RunResult", "run_project"]
+
+
+@dataclass
+class RunResult:
+    outputs: Dict[str, Table]
+    bytes_from_store: int
+    bytes_from_cache: int
+    simulated_seconds: float
+    wall_seconds: float
+    plan: PhysicalPlan
+
+
+class Workspace:
+    """Long-lived execution context: one object store, one catalog, one
+    differential cache shared by all users and languages."""
+
+    def __init__(
+        self,
+        root: str,
+        cache: Optional[Any] = None,
+        rows_per_fragment: int = 1 << 16,
+    ):
+        self.store = ObjectStore(root)
+        self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        self.scans = ScanExecutor(
+            self.store, self.catalog, cache=cache if cache is not None else DifferentialCache()
+        )
+
+    # -- running -------------------------------------------------------------
+    def run(self, project: Project, verbose: bool = False) -> RunResult:
+        dag = build_dag(project)
+        sort_keys = {
+            t: self.catalog.table(t).sort_key
+            for leaves in dag.scan_leaves.values()
+            for _arg, ref in leaves
+            for t in [ref.name]
+        }
+        plan = compile_plan(dag, sort_keys)
+        if verbose:
+            print(plan.describe())
+        t0 = time.perf_counter()
+        before = self.store.stats.snapshot()
+
+        # 1) system scans (the cached, differential part)
+        scanned: List[ChunkedTable] = []
+        bytes_from_cache = 0
+        for s in plan.scans:
+            meta = self.catalog.table(s.table)
+            parsed = parse_filter(s.predicate_filter, meta.sort_key)
+            out = self.scans.scan(
+                s.table,
+                s.columns,
+                window=s.window,
+                snapshot_id=s.snapshot_id,
+                predicate=parsed.predicate_fn(),
+            )
+            scanned.append(out)
+            bytes_from_cache += self.scans.reports[-1].bytes_from_cache
+
+        # 2) user functions, topological order
+        results: Dict[str, Table] = {}
+        for step in plan.steps:
+            kwargs: Dict[str, Any] = {}
+            for arg, (kind, ref) in step.bindings:
+                if kind == "scan":
+                    kwargs[arg] = scanned[ref]
+                else:
+                    kwargs[arg] = results[ref]
+            fn = dag.project[step.model].fn
+            out = _invoke(fn, step.runtime, kwargs)
+            results[step.model] = out
+            if step.materialize:
+                self._materialize(step.model, out)
+
+        delta = self.store.stats.delta(before)
+        return RunResult(
+            outputs=results,
+            bytes_from_store=delta.bytes_read,
+            bytes_from_cache=bytes_from_cache,
+            simulated_seconds=delta.simulated_seconds,
+            wall_seconds=time.perf_counter() - t0,
+            plan=plan,
+        )
+
+    def _materialize(self, model_name: str, table: Table) -> None:
+        full = f"models.{model_name}"
+        sort_key = table.column_names[0]
+        try:
+            self.catalog.table(full)
+        except KeyError:
+            self.catalog.create_table("models", model_name, table.schema(), sort_key)
+        self.catalog.append(full, table.sort_by(sort_key))
+
+
+def _to_table(value: Any) -> Table:
+    if isinstance(value, Table):
+        return value
+    if isinstance(value, ChunkedTable):
+        return value.combine()
+    if isinstance(value, dict):
+        cols = {}
+        for k, v in value.items():
+            arr = np.asarray(v)
+            cols[k] = arr
+        return Table(cols)
+    raise TypeError(f"model must return Table/ChunkedTable/dict, got {type(value)}")
+
+
+def _invoke(fn: Callable, runtime: str, kwargs: Dict[str, Any]) -> Table:
+    if runtime == "numpy":
+        prepared = {
+            k: (v.combine() if isinstance(v, ChunkedTable) else v)
+            for k, v in kwargs.items()
+        }
+        return _to_table(fn(**prepared))
+    if runtime == "jax":
+        import jax.numpy as jnp
+
+        prepared = {}
+        for k, v in kwargs.items():
+            tbl = v.combine() if isinstance(v, ChunkedTable) else v
+            prepared[k] = {name: jnp.asarray(tbl.column(name)) for name in tbl.column_names}
+        out = fn(**prepared)
+        if not isinstance(out, dict):
+            raise TypeError("jax models must return {column: jnp.ndarray}")
+        return Table({k: np.asarray(v) for k, v in out.items()})
+    raise ValueError(f"unknown runtime {runtime!r}")
+
+
+def run_project(workspace: Workspace, project: Project, **kw) -> RunResult:
+    return workspace.run(project, **kw)

@@ -1,0 +1,108 @@
+"""Logical DAG → physical plan (paper Fig. 3).
+
+For every scan leaf the control plane inserts a **system scan step** ahead
+of the user function — the decoupling that (a) shields users from data
+management and (b) is the hook where the differential cache lives.  Model-to-
+model edges become zero-copy in-memory handoffs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.intervals import IntervalSet
+from repro.pipeline.dag import Dag
+from repro.pipeline.dsl import Model, ModelDef
+from repro.pipeline.filters import ParsedFilter, parse_filter
+
+__all__ = ["SystemScanStep", "UserFnStep", "PhysicalPlan", "compile_plan"]
+
+
+@dataclass(frozen=True)
+class SystemScanStep:
+    """A scan the platform performs on behalf of the user."""
+
+    model: str  # consumer model name
+    arg: str  # which argument it feeds
+    table: str
+    columns: Tuple[str, ...]
+    window_pairs: tuple  # IntervalSet as pairs (hashable / serializable)
+    predicate_filter: Optional[str]  # original filter string (post-predicates)
+    snapshot_id: Optional[str]
+
+    @property
+    def window(self) -> IntervalSet:
+        return IntervalSet.from_pairs(self.window_pairs)
+
+
+@dataclass(frozen=True)
+class UserFnStep:
+    model: str
+    runtime: str
+    materialize: bool
+    # inputs: arg -> ("scan", scan index) or ("model", parent name)
+    bindings: Tuple[Tuple[str, Tuple[str, object]], ...]
+
+
+@dataclass
+class PhysicalPlan:
+    scans: List[SystemScanStep]
+    steps: List[UserFnStep]  # in executable (topological) order
+
+    def describe(self) -> str:
+        lines = []
+        for s in self.scans:
+            lines.append(
+                f"SCAN {s.table} cols={list(s.columns)} window={list(s.window_pairs)}"
+                f" -> {s.model}.{s.arg}"
+            )
+        for st in self.steps:
+            srcs = ", ".join(
+                f"{arg}<-{kind}:{ref}" for arg, (kind, ref) in st.bindings
+            )
+            tag = " MATERIALIZE" if st.materialize else ""
+            lines.append(f"RUN [{st.runtime}] {st.model}({srcs}){tag}")
+        return "\n".join(lines)
+
+
+def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
+    """``sort_keys`` maps catalog table full-names to their sort key (the
+    control plane fetches this from catalog metadata)."""
+    scans: List[SystemScanStep] = []
+    steps: List[UserFnStep] = []
+    for name in dag.order:
+        mdef: ModelDef = dag.project[name]
+        bindings: List[Tuple[str, Tuple[str, object]]] = []
+        for arg, ref in mdef.inputs.items():
+            if ref.name in dag.project.models:
+                bindings.append((arg, ("model", ref.name)))
+            else:
+                sort_key = sort_keys[ref.name]
+                parsed = parse_filter(ref.filter, sort_key)
+                if ref.columns is None:
+                    raise ValueError(
+                        f"{name}: scan of {ref.name} must declare columns="
+                    )
+                # post-predicates need their columns present in the scan
+                cols = tuple(sorted(set(ref.columns) | set(parsed.predicate_columns)))
+                step = SystemScanStep(
+                    model=name,
+                    arg=arg,
+                    table=ref.name,
+                    columns=cols,
+                    window_pairs=parsed.window.to_pairs(),
+                    predicate_filter=ref.filter,
+                    snapshot_id=ref.snapshot_id,
+                )
+                bindings.append((arg, ("scan", len(scans))))
+                scans.append(step)
+        steps.append(
+            UserFnStep(
+                model=name,
+                runtime=mdef.runtime,
+                materialize=mdef.materialize,
+                bindings=tuple(bindings),
+            )
+        )
+    return PhysicalPlan(scans=scans, steps=steps)

@@ -1,0 +1,4 @@
+from repro.serve.engine import GenerateRequest, GenerateResult, ServeEngine
+from repro.serve.sampling import sample_token
+
+__all__ = ["ServeEngine", "GenerateRequest", "GenerateResult", "sample_token"]

@@ -1,0 +1,30 @@
+"""Token sampling: greedy / temperature / top-k, batched, jit-friendly."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_token"]
+
+
+def sample_token(
+    logits: jax.Array,  # (B, 1, V) or (B, V)
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """Returns (B,) int32 next tokens.  temperature 0 = greedy."""
+    if logits.ndim == 3:
+        logits = logits[:, -1, :]
+    lg = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    lg = lg / temperature
+    if top_k > 0:
+        kth = jnp.sort(lg, axis=-1)[:, -top_k][:, None]
+        lg = jnp.where(lg < kth, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

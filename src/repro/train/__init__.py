@@ -1,0 +1,18 @@
+"""Training substrate: optimizers, train-step factory, host loop."""
+
+from repro.train.optimizer import OptimizerConfig, global_norm, make_optimizer, make_schedule
+from repro.train.state import TrainState, state_logical_axes
+from repro.train.loop import TrainHooks, make_init_state, make_train_step, train_loop
+
+__all__ = [
+    "OptimizerConfig",
+    "make_optimizer",
+    "make_schedule",
+    "global_norm",
+    "TrainState",
+    "state_logical_axes",
+    "make_train_step",
+    "make_init_state",
+    "train_loop",
+    "TrainHooks",
+]

@@ -1,0 +1,164 @@
+"""Training step factory + host-side training loop.
+
+``make_train_step`` builds THE SPMD program the dry-run lowers and the real
+cluster runs: microbatched gradient accumulation (``lax.scan`` over the
+microbatch dim — mandatory for the big-vocab archs, where one 1M-token
+batch's logits would not fit), remat via the model's policy, optimizer
+update, metrics.  The host loop adds data, checkpointing, straggler/failure
+hooks — all pluggable so the FT tests can drive them.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import cross_entropy
+from repro.models.registry import ModelAPI
+from repro.train.optimizer import OptimizerConfig, make_optimizer
+from repro.train.state import TrainState
+
+__all__ = ["make_train_step", "make_init_state", "train_loop", "TrainHooks"]
+
+
+def _loss_sum(api: ModelAPI, params, tokens, labels, loss_mask, prefix_embeds):
+    logits = api.forward(params, tokens, prefix_embeds)
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * loss_mask
+    return jnp.sum(nll), jnp.sum(loss_mask)
+
+
+def make_init_state(api: ModelAPI, opt_cfg: OptimizerConfig):
+    init_opt, _ = make_optimizer(opt_cfg)
+
+    def init_state(key: jax.Array) -> TrainState:
+        params = api.init_params(key)
+        return TrainState(params=params, opt=init_opt(params), step=jnp.zeros((), jnp.int32))
+
+    return init_state
+
+
+def make_train_step(api: ModelAPI, opt_cfg: OptimizerConfig) -> Callable:
+    """(state, batch) -> (state, metrics).  batch: tokens/labels/loss_mask
+    (B, S) [+ prefix_embeds (B, P, D)] — global batch; microbatching is
+    internal (B must be divisible by cfg.microbatches)."""
+    cfg: ArchConfig = api.cfg
+    _, opt_update = make_optimizer(opt_cfg)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        tokens, labels = batch["tokens"], batch["labels"]
+        mask = batch["loss_mask"]
+        prefix = batch.get("prefix_embeds")
+        B = tokens.shape[0]
+        M = cfg.microbatches
+        assert B % M == 0, f"global batch {B} not divisible by microbatches {M}"
+
+        def loss_fn(params, tok, lab, msk, pre):
+            return _loss_sum(api, params, tok, lab, msk, pre)
+
+        # value_and_grad shares ONE forward between loss and gradients —
+        # a separate loss_fn + grad_fn pair lowers to an extra 40-layer
+        # forward scan that XLA does not CSE away (verified in the HLO;
+        # EXPERIMENTS.md §Perf iteration 0)
+        vg_fn = jax.value_and_grad(
+            lambda p, *a: loss_fn(p, *a), argnums=0, has_aux=True
+        )
+
+        if M == 1:
+            (nll, count), grads = vg_fn(state.params, tokens, labels, mask, prefix)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+
+            def micro(acc, xs):
+                g_acc, nll_acc, cnt_acc = acc
+                if prefix is not None:
+                    tok, lab, msk, pre = xs
+                else:
+                    tok, lab, msk = xs
+                    pre = None
+                (nll, cnt), g = vg_fn(state.params, tok, lab, msk, pre)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, nll_acc + nll, cnt_acc + cnt), None
+
+            def mb(x):
+                return x.reshape((M, B // M) + x.shape[1:])
+
+            xs = (mb(tokens), mb(labels), mb(mask))
+            if prefix is not None:
+                xs = xs + (mb(prefix),)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (grads, nll, count), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs
+            )
+
+        # token-mean gradients & loss
+        grads = jax.tree.map(lambda g: g / count, grads)
+        loss = nll / count
+        new_params, new_opt, stats = opt_update(grads, state.opt, state.params, state.step)
+        metrics = {
+            "loss": loss,
+            "tokens": count,
+            "grad_norm": stats["grad_norm"],
+            "lr": stats["lr"],
+        }
+        new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------------------ host loop
+@dataclass
+class TrainHooks:
+    """Host-side hooks; all optional.  The FT tests inject failures here."""
+
+    on_step: Optional[Callable[[int, Dict[str, float]], None]] = None
+    should_checkpoint: Optional[Callable[[int], bool]] = None
+    save_checkpoint: Optional[Callable[[int, TrainState], None]] = None
+    on_step_time: Optional[Callable[[int, float], None]] = None  # straggler detector
+    preempted: Optional[Callable[[], bool]] = None  # graceful preemption signal
+
+
+def train_loop(
+    train_step: Callable,
+    state: TrainState,
+    batches: Iterator[Dict[str, jax.Array]],
+    num_steps: int,
+    hooks: Optional[TrainHooks] = None,
+) -> Tuple[TrainState, list]:
+    """Run ``num_steps`` steps (or until the data/preemption ends)."""
+    hooks = hooks or TrainHooks()
+    history = []
+    jitted = train_step if hasattr(train_step, "lower") else jax.jit(train_step)
+    for _ in range(num_steps):
+        if hooks.preempted is not None and hooks.preempted():
+            break
+        try:
+            batch = next(batches)
+        except StopIteration:
+            break
+        t0 = time.perf_counter()
+        state, metrics = jitted(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        step = int(state.step)
+        history.append(metrics)
+        if hooks.on_step:
+            hooks.on_step(step, metrics)
+        if hooks.on_step_time:
+            hooks.on_step_time(step, dt)
+        if hooks.should_checkpoint and hooks.should_checkpoint(step):
+            assert hooks.save_checkpoint is not None
+            hooks.save_checkpoint(step, state)
+    return state, history

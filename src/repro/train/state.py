@@ -1,0 +1,61 @@
+"""TrainState: the single pytree that is sharded, checkpointed, and stepped."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState", "state_logical_axes"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        params, opt, step = children
+        return cls(params=params, opt=opt, step=step)
+
+
+def state_logical_axes(param_axes: Any, opt_state_shapes: Any) -> "TrainState":
+    """Logical axes for the full state: optimizer moments/master inherit the
+    parameter's axes; factored Adafactor stats drop the reduced dim."""
+
+    def opt_axes(subtree_name: str, shapes, axes):
+        # m/v/master mirror params exactly
+        return axes
+
+    def fac_axes(shapes, axes):
+        # {"vr": shape[:-1], "vc": shape[:-2]+shape[-1:]} or {"v": full}
+        out = {}
+        if "vr" in shapes:
+            out["vr"] = tuple(axes[:-1])
+            out["vc"] = tuple(axes[:-2]) + (axes[-1],)
+        if "v" in shapes:
+            out["v"] = axes
+        return out
+
+    opt_axes_tree: Dict[str, Any] = {}
+    for key, sub in opt_state_shapes.items():
+        if key in ("m", "v", "master"):
+            opt_axes_tree[key] = param_axes
+        elif key == "f":
+            opt_axes_tree[key] = jax.tree.map(
+                fac_axes,
+                sub,
+                param_axes,
+                is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x),
+            )
+        else:
+            opt_axes_tree[key] = jax.tree.map(lambda _: (), sub)
+    return TrainState(params=param_axes, opt=opt_axes_tree, step=())

@@ -1,0 +1,312 @@
+"""Correctness tests for the differential cache (paper §III).
+
+The central invariant: for ANY sequence of scans against ANY snapshot
+history, a scan served through the differential cache returns exactly the
+same multiset of rows as an uncached scan — while reading no more bytes from
+object storage than the uncached path, and strictly fewer when windows
+overlap.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import NoCache, ScanCache
+from repro.core.cache import DifferentialCache
+from repro.core.columnar import Table
+from repro.core.intervals import IntervalSet
+from repro.core.planner import ResultCachingExecutor, ScanExecutor
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+
+SCHEMA = {"eventTime": "<i8", "c1": "<f8", "c2": "<f8", "c3": "<i8"}
+
+
+def events_table(lo, hi, seed=0):
+    n = hi - lo
+    rng = np.random.default_rng(seed + lo)
+    return Table(
+        {
+            "eventTime": np.arange(lo, hi, dtype=np.int64),
+            "c1": rng.standard_normal(n),
+            "c2": rng.standard_normal(n),
+            "c3": rng.integers(0, 100, n).astype(np.int64),
+        }
+    )
+
+
+@pytest.fixture()
+def env(tmp_path):
+    store = ObjectStore(str(tmp_path / "s3"))
+    catalog = Catalog(store, rows_per_fragment=64)
+    catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+    catalog.append("ns.raw", events_table(0, 1000))
+    return store, catalog
+
+
+def rows_of(chunked, cols):
+    t = chunked.combine()
+    if t.num_rows == 0:
+        return set()
+    return set(zip(*[t.column(c).tolist() for c in cols]))
+
+
+def reference_rows(store, catalog, cols, window):
+    ex = ScanExecutor(store, catalog, cache=NoCache())
+    return rows_of(ex.scan("ns.raw", cols, window), cols)
+
+
+# --------------------------------------------------------------- §III-A flow
+def test_paper_section3a_workload(env):
+    """Users A, B, A′ from §III-A — the motivating example, verbatim."""
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+
+    # (1) user A: c1,c2,c3 over Jan (here keys [0, 310))
+    before = store.stats.bytes_read
+    ex.scan("ns.raw", ["c1", "c2", "c3"], IntervalSet.of((0, 310)))
+    bytes_a = store.stats.bytes_read - before
+    assert bytes_a > 0
+
+    # (2) user B: c1,c3 over Jan..Feb ([0, 620)) — only Feb should be fetched
+    before = store.stats.bytes_read
+    out_b = ex.scan("ns.raw", ["c1", "c3"], IntervalSet.of((0, 620)))
+    bytes_b = store.stats.bytes_read - before
+    assert bytes_b > 0
+    assert bytes_b < bytes_a  # differential: roughly the Feb half, 2 cols
+    assert rows_of(out_b, ["c1", "c3"]) == reference_rows(store, catalog, ["c1", "c3"], IntervalSet.of((0, 620)))
+
+    # (3) user A again: c2 only, one day ([0, 10)) — zero object-store reads
+    before = store.stats.bytes_read
+    out_a2 = ex.scan("ns.raw", ["c2"], IntervalSet.of((0, 10)))
+    assert store.stats.bytes_read == before, "request #3 requires no scan (paper Fig. 4)"
+    assert rows_of(out_a2, ["c2"]) == reference_rows(store, catalog, ["c2"], IntervalSet.of((0, 10)))
+
+
+def test_exact_repeat_is_free(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    w = IntervalSet.of((100, 300))
+    ex.scan("ns.raw", ["c1"], w)
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c1"], w)
+    assert store.stats.bytes_read == before
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], w)
+
+
+def test_superset_projection_serves_subset(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1", "c2", "c3"], IntervalSet.of((0, 200)))
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c3"], IntervalSet.of((50, 150)))
+    assert store.stats.bytes_read == before
+    assert rows_of(out, ["c3"]) == reference_rows(store, catalog, ["c3"], IntervalSet.of((50, 150)))
+
+
+def test_subset_projection_does_not_serve_superset(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 200)))
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c1", "c2"], IntervalSet.of((0, 200)))
+    assert store.stats.bytes_read > before  # must re-fetch: c2 missing
+    assert rows_of(out, ["c1", "c2"]) == reference_rows(store, catalog, ["c1", "c2"], IntervalSet.of((0, 200)))
+
+
+def test_adjacent_windows_merge_into_one_element(env):
+    store, catalog = env
+    cache = DifferentialCache()
+    ex = ScanExecutor(store, catalog, cache=cache)
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 128)))
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((128, 256)))
+    elems = cache.elements("ns.raw")
+    assert len(elems) == 1  # merged (overlapping/adjacent combine, §III-B)
+    assert elems[0].window.to_pairs() == ((0, 256),)
+
+
+def test_disjoint_windows_covered_after_gap_fill(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 100)))
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((400, 500)))
+    # spanning scan: only the gap [100,400) should be fetched
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 500)))
+    gap_only = store.stats.bytes_read - before
+    assert gap_only > 0
+    ex2 = ScanExecutor(store, catalog, cache=NoCache())
+    before = store.stats.bytes_read
+    ex2.scan("ns.raw", ["c1"], IntervalSet.of((0, 500)))
+    full = store.stats.bytes_read - before
+    assert gap_only < full
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 500)))
+
+
+def test_cache_serves_views_zero_copy(env):
+    store, catalog = env
+    cache = DifferentialCache()
+    ex = ScanExecutor(store, catalog, cache=cache)
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 320)))
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((10, 300)))
+    elem = cache.elements("ns.raw")[0]
+    assert any(
+        np.shares_memory(chunk.column("c1"), elem.data.column("c1"))
+        for chunk in out.chunks
+    ), "cache hits must be zero-copy views over the element buffer"
+
+
+def test_invalidation_on_overwrite(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 1000)))
+    # mutate part of the table: delete keys [0, 128)
+    catalog.overwrite_range("ns.raw", 0, 128)
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 1000)))
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 1000)))
+
+
+def test_differential_invalidation_is_partial(env):
+    """Beyond-paper: untouched windows survive a mutation elsewhere."""
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 1000)))
+    catalog.overwrite_range("ns.raw", 900, 1000)  # touch only the tail
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 256)))
+    assert store.stats.bytes_read == before, "untouched window must stay cached"
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 256)))
+
+
+def test_append_extends_validity(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 500)))
+    catalog.append("ns.raw", events_table(1000, 1200))
+    before = store.stats.bytes_read
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 500)))
+    assert store.stats.bytes_read == before  # append outside window: still valid
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 500)))
+
+
+def test_eviction_under_budget(env):
+    store, catalog = env
+    cache = DifferentialCache(max_bytes=20_000)
+    ex = ScanExecutor(store, catalog, cache=cache)
+    for lo in range(0, 1000, 100):
+        ex.scan("ns.raw", ["c1", "c2", "c3"], IntervalSet.of((lo, lo + 100)))
+    assert cache.nbytes <= 20_000
+    assert cache.evictions > 0
+    # correctness survives eviction
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 1000)))
+    assert rows_of(out, ["c1"]) == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 1000)))
+
+
+def test_scan_cache_baseline_exact_match_only(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=ScanCache())
+    w = IntervalSet.of((0, 200))
+    ex.scan("ns.raw", ["c1"], w)
+    before = store.stats.bytes_read
+    ex.scan("ns.raw", ["c1"], w)  # exact repeat: hit
+    assert store.stats.bytes_read == before
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 199)))  # overlap: miss
+    assert store.stats.bytes_read > before
+
+
+def test_result_cache_baseline(env):
+    store, catalog = env
+    ex = ResultCachingExecutor(store, catalog)
+    w = IntervalSet.of((0, 200))
+    ex.scan("ns.raw", ["c1"], w)
+    before = store.stats.bytes_read
+    ex.scan("ns.raw", ["c1"], w)
+    assert store.stats.bytes_read == before
+    assert ex.hits == 1
+
+
+def test_predicate_post_filter(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    pred = lambda t: t.column("c3") % 2 == 0
+    out = ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 100)), predicate=pred)
+    vals = out.combine().column("c3")
+    assert np.all(vals % 2 == 0)
+    # predicate doesn't poison the cache: unfiltered scan still correct
+    out2 = ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 100)))
+    assert rows_of(out2, ["c3"]) == reference_rows(store, catalog, ["c3"], IntervalSet.of((0, 100)))
+
+
+# --------------------------------------------------------- property testing
+window_strategy = st.tuples(st.integers(0, 1000), st.integers(0, 1000)).map(
+    lambda p: (min(p), max(p) + 1)
+)
+cols_strategy = st.sets(st.sampled_from(["c1", "c2", "c3"]), min_size=1).map(sorted)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(cols_strategy, window_strategy), min_size=1, max_size=8))
+def test_property_any_scan_sequence_is_correct(scans):
+    """For any scan sequence: differential output == uncached output, and
+    cumulative bytes read never exceed the uncached path's."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ObjectStore(d + "/s3")
+        catalog = Catalog(store, rows_per_fragment=128)
+        catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+        catalog.append("ns.raw", events_table(0, 1000))
+        baseline_start = store.stats.bytes_read
+
+        cached = ScanExecutor(store, catalog, cache=DifferentialCache())
+        uncached = ScanExecutor(store, catalog, cache=NoCache())
+
+        cached_bytes = 0
+        uncached_bytes = 0
+        for cols, (lo, hi) in scans:
+            w = IntervalSet.of((lo, hi))
+            b0 = store.stats.bytes_read
+            got = rows_of(cached.scan("ns.raw", cols, w), cols)
+            cached_bytes += store.stats.bytes_read - b0
+            b0 = store.stats.bytes_read
+            want = rows_of(uncached.scan("ns.raw", cols, w), cols)
+            uncached_bytes += store.stats.bytes_read - b0
+            assert got == want
+        assert cached_bytes <= uncached_bytes
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.tuples(cols_strategy, window_strategy), min_size=1, max_size=5),
+    st.lists(st.tuples(window_strategy, st.booleans()), min_size=1, max_size=3),
+)
+def test_property_correct_across_mutations(scans, mutations):
+    """Scans interleaved with appends/overwrites stay correct (invalidation)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        store = ObjectStore(d + "/s3")
+        catalog = Catalog(store, rows_per_fragment=128)
+        catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+        catalog.append("ns.raw", events_table(0, 500))
+        cached = ScanExecutor(store, catalog, cache=DifferentialCache())
+        uncached = ScanExecutor(store, catalog, cache=NoCache())
+
+        ops = [("scan", s) for s in scans] + [("mut", m) for m in mutations]
+        # deterministic interleave
+        ops.sort(key=lambda o: hash(str(o)) % 1000)
+        next_key = 2000
+        for kind, payload in ops:
+            if kind == "scan":
+                cols, (lo, hi) = payload
+                w = IntervalSet.of((lo, hi))
+                got = rows_of(cached.scan("ns.raw", cols, w), cols)
+                want = rows_of(uncached.scan("ns.raw", cols, w), cols)
+                assert got == want
+            else:
+                (lo, hi), is_append = payload
+                if is_append:
+                    catalog.append("ns.raw", events_table(next_key, next_key + 50))
+                    next_key += 50
+                else:
+                    catalog.overwrite_range("ns.raw", lo, hi)

@@ -1,0 +1,165 @@
+"""Checkpointing: bit-exact resume, async save, retention, atomicity, and
+elastic restore onto a different mesh (subprocess with 8 fake devices)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, restore_state, save_state
+from repro.data import TokenBatchPipeline, write_token_corpus
+from repro.core.cache import DifferentialCache
+from repro.core.planner import ScanExecutor
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+from repro.models.registry import get_config, get_model
+from repro.train.loop import make_init_state, make_train_step
+from repro.train.optimizer import OptimizerConfig
+from repro.train.state import TrainState
+
+
+def _setup_training(tmp_path, arch="granite-3-2b"):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    opt = OptimizerConfig(kind="adamw", peak_lr=1e-3)
+    store = ObjectStore(str(tmp_path / "s3"))
+    catalog = Catalog(store, rows_per_fragment=8192)
+    write_token_corpus(catalog, "data.c", 20_000, cfg.vocab_size, seed=3)
+    scans = ScanExecutor(store, catalog, cache=DifferentialCache())
+    pipe = TokenBatchPipeline(
+        scans, "data.c", global_batch=4, seq_len=64, prefetch_depth=0
+    )
+    step_fn = jax.jit(make_train_step(api, opt))
+    state = make_init_state(api, opt)(jax.random.PRNGKey(0))
+    return api, step_fn, state, pipe
+
+
+def _run_steps(step_fn, state, pipe, start, n):
+    metrics = []
+    for s in range(start, start + n):
+        state, m = step_fn(state, pipe.batch_at(s))
+        metrics.append(float(m["loss"]))
+    return state, metrics
+
+
+def _trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bit_exact_resume(tmp_path):
+    api, step_fn, state, pipe = _setup_training(tmp_path)
+    # uninterrupted: 5 steps
+    ref_state, ref_losses = _run_steps(step_fn, state, pipe, 0, 5)
+    # interrupted: 3 steps, save, restore, 2 more
+    s3, _ = _run_steps(step_fn, state, pipe, 0, 3)
+    save_state(str(tmp_path / "ckpt"), 3, s3)
+    step, restored = restore_state(str(tmp_path / "ckpt"), target_struct=s3)
+    assert step == 3
+    _trees_equal(s3, restored)
+    final, losses = _run_steps(step_fn, restored, pipe, 3, 2)
+    _trees_equal(ref_state, final)
+    np.testing.assert_allclose(losses, ref_losses[3:], rtol=0, atol=0)
+
+
+def test_async_save_matches_blocking(tmp_path):
+    _api, _fn, state, _pipe = _setup_training(tmp_path)
+    t = save_state(str(tmp_path / "a"), 1, state, blocking=False)
+    t.join()
+    save_state(str(tmp_path / "b"), 1, state, blocking=True)
+    _, ra = restore_state(str(tmp_path / "a"))
+    _, rb = restore_state(str(tmp_path / "b"))
+    _trees_equal(ra, rb)
+
+
+def test_async_save_snapshot_isolated_from_donation(tmp_path):
+    """The host snapshot is taken before save() returns: mutating (donating)
+    the state right after must not corrupt the checkpoint."""
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    want = np.asarray(state["w"]).copy()
+    t = save_state(str(tmp_path / "c"), 7, state, blocking=False)
+    state["w"] = state["w"] * 0 - 1  # "donated"/reused buffer
+    t.join()
+    _, r = restore_state(str(tmp_path / "c"))
+    np.testing.assert_array_equal(r["w"], want)
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2, async_save=False)
+    state = {"x": jnp.ones((4,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest() == 4
+
+
+def test_incomplete_tmp_dirs_ignored(tmp_path):
+    root = tmp_path / "ck"
+    mgr = CheckpointManager(str(root), keep=3, async_save=False)
+    mgr.save(1, {"x": jnp.ones(2)})
+    # simulate a crash mid-save
+    os.makedirs(root / "step-9.tmp-deadbeef")
+    (root / "step-9.tmp-deadbeef" / "junk.npy").write_bytes(b"xx")
+    os.makedirs(root / "step-5")  # complete-looking dir without manifest
+    assert mgr.steps() == [1]
+    step, _ = mgr.restore()
+    assert step == 1
+
+
+def test_extra_metadata_roundtrip(tmp_path):
+    save_state(str(tmp_path / "ck"), 2, {"x": jnp.zeros(1)}, extra={"data_step": 17})
+    import json
+
+    with open(tmp_path / "ck" / "step-2" / "manifest.json") as f:
+        m = json.load(f)
+    assert m["extra"]["data_step"] == 17
+
+
+_ELASTIC = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.checkpoint import restore_state, save_state
+
+    root = sys.argv[1]
+    devs = np.array(jax.devices())
+
+    # save under a 4x2 mesh
+    mesh_a = Mesh(devs[:8].reshape(4, 2), ("data", "model"))
+    w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    w = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
+    save_state(root, 1, {"w": w})
+
+    # restore under a 2x4 mesh (different axis sizes) — elastic reshard
+    mesh_b = Mesh(devs[:8].reshape(2, 4), ("data", "model"))
+    sh = {"w": NamedSharding(mesh_b, P("data", "model"))}
+    step, tree = restore_state(root, shardings=sh)
+    assert step == 1
+    got = np.asarray(tree["w"])
+    np.testing.assert_array_equal(got, np.arange(64, dtype=np.float32).reshape(8, 8))
+    assert tree["w"].sharding.mesh.shape["data"] == 2
+    print("ELASTIC_OK")
+    """
+)
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _ELASTIC, str(tmp_path / "ck")],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        timeout=300,
+    )
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,89 @@
+"""Tests for the Arrow-analog columnar layer: zero-copy semantics + IPC."""
+
+import numpy as np
+import pytest
+
+from repro.core.columnar import ChunkedTable, Table, concat_tables, read_ipc, write_ipc
+
+
+def make_table(n=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return Table(
+        {
+            "ts": np.arange(n, dtype=np.int64),
+            "x": rng.standard_normal(n),
+            "y": rng.integers(0, 1000, n).astype(np.int32),
+        }
+    )
+
+
+def test_select_is_zero_copy():
+    t = make_table()
+    view = t.select(["x", "ts"])
+    assert np.shares_memory(view.column("x"), t.column("x"))
+    assert np.shares_memory(view.column("ts"), t.column("ts"))
+
+
+def test_slice_is_zero_copy():
+    t = make_table()
+    view = t.slice(10, 50)
+    assert view.num_rows == 40
+    assert np.shares_memory(view.column("x"), t.column("x"))
+
+
+def test_columns_are_immutable():
+    t = make_table()
+    with pytest.raises(ValueError):
+        t.column("x")[0] = 42.0
+
+
+def test_k_consumers_share_one_buffer():
+    # the paper's Arrow-view argument: k children of one scan share memory
+    t = make_table(1000)
+    views = [t.select(["x"]).slice(0, 1000) for _ in range(8)]
+    for v in views:
+        assert np.shares_memory(v.column("x"), t.column("x"))
+
+
+def test_chunked_table_assembly_and_combine():
+    a, b = make_table(10, 1), make_table(7, 2)
+    ct = ChunkedTable([a, b])
+    assert ct.num_rows == 17
+    combined = ct.combine()
+    assert combined.num_rows == 17
+    np.testing.assert_array_equal(
+        combined.column("x"), np.concatenate([a.column("x"), b.column("x")])
+    )
+    # chunks themselves are not copied by assembly
+    assert np.shares_memory(ct.chunks[0].column("x"), a.column("x"))
+
+
+def test_chunked_schema_mismatch_raises():
+    a = make_table(5)
+    b = a.select(["x"])
+    with pytest.raises(ValueError):
+        ChunkedTable([a, b])
+
+
+def test_ipc_roundtrip_and_mmap(tmp_path):
+    t = make_table(512)
+    path = str(tmp_path / "t.ripc")
+    nbytes = write_ipc(t, path)
+    assert nbytes > t.nbytes  # header + alignment padding
+    back = read_ipc(path, mmap=True)
+    assert back.equals(t)
+    back2 = read_ipc(path, mmap=False)
+    assert back2.equals(t)
+
+
+def test_sort_and_take():
+    t = Table({"ts": np.array([3, 1, 2], dtype=np.int64), "v": np.array([30.0, 10.0, 20.0])})
+    s = t.sort_by("ts")
+    np.testing.assert_array_equal(s.column("ts"), [1, 2, 3])
+    np.testing.assert_array_equal(s.column("v"), [10.0, 20.0, 30.0])
+
+
+def test_empty_chunked():
+    ct = ChunkedTable([])
+    assert ct.num_rows == 0
+    assert ct.combine().num_rows == 0

@@ -1,0 +1,147 @@
+"""Data pipeline: determinism, resume, packing, and the paper's cache
+economics at training scale (epoch 2 = zero store bytes)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cache import DifferentialCache
+from repro.core.planner import ScanExecutor
+from repro.data import TokenBatchPipeline, pack_documents, write_token_corpus
+from repro.data.packing import mask_from_doc_ids
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+
+V = 128
+
+
+@pytest.fixture()
+def env(tmp_path):
+    store = ObjectStore(str(tmp_path / "s3"))
+    catalog = Catalog(store, rows_per_fragment=4096)
+    write_token_corpus(catalog, "data.corpus", 40_000, V, seed=7, mean_doc_len=100)
+    scans = ScanExecutor(store, catalog, cache=DifferentialCache())
+    return store, catalog, scans
+
+
+def _pipe(scans, **kw):
+    kw.setdefault("global_batch", 4)
+    kw.setdefault("seq_len", 256)
+    kw.setdefault("prefetch_depth", 0)
+    return TokenBatchPipeline(scans, "data.corpus", **kw)
+
+
+def test_batch_shapes_and_labels_shift(env):
+    _store, _catalog, scans = env
+    p = _pipe(scans)
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (4, 256)
+    assert b["labels"].shape == (4, 256)
+    assert b["loss_mask"].shape == (4, 256)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_deterministic_across_instances(env):
+    _store, _catalog, scans = env
+    a = _pipe(scans).batch_at(3)
+    b = _pipe(scans).batch_at(3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_resume_matches_uninterrupted(env):
+    _store, _catalog, scans = env
+    p = _pipe(scans)
+    it = iter(p)
+    batches = [next(it) for _ in range(6)]
+    # resume from saved state at step 3
+    p2 = _pipe(scans, start_step=3)
+    it2 = iter(p2)
+    for want in batches[3:]:
+        got = next(it2)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_second_epoch_is_free(env):
+    """Epoch 2 must be served entirely from the differential cache."""
+    store, _catalog, scans = env
+    p = _pipe(scans)
+    n = p.steps_per_epoch
+    for s in range(n):
+        p.batch_at(s)
+    before = store.stats.bytes_read
+    for s in range(n, 2 * n):
+        p.batch_at(s)
+    assert store.stats.bytes_read == before, "epoch 2 read bytes from the store"
+
+
+def test_eval_job_shares_trainer_cache(env):
+    """§III-A at training scale: an eval scan over a sub-window of what the
+    trainer already read must be free."""
+    store, _catalog, scans = env
+    p = _pipe(scans)
+    p.batch_at(0)
+    p.batch_at(1)
+    before = store.stats.bytes_read
+    from repro.core.intervals import IntervalSet
+
+    scans.scan("data.corpus", ["token"], IntervalSet.of((100, 900)))
+    assert store.stats.bytes_read == before
+
+
+def test_prefetch_iter_equals_sync(env):
+    _store, _catalog, scans = env
+    sync = [_pipe(scans).batch_at(s) for s in range(4)]
+    p = _pipe(scans, prefetch_depth=3)
+    it = iter(p)
+    for want in sync:
+        got = next(it)
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+    p.close()
+
+
+def test_pinned_snapshot_survives_append(env):
+    """A concurrent append must not change the running epoch's batches."""
+    _store, catalog, scans = env
+    p = _pipe(scans)
+    want = p.batch_at(0)
+    write_token_corpus(catalog, "data.corpus", 5_000, V, seed=9, start_pos=40_000)
+    got = p.batch_at(0)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_mask_blocks_cross_document_targets(env):
+    _store, _catalog, scans = env
+    b = _pipe(scans).batch_at(0)
+    # doc boundaries exist in 40k tokens / ~100 tokens per doc
+    assert (b["loss_mask"] == 0).any()
+    assert (b["loss_mask"] == 1).sum() > b["loss_mask"].size * 0.9
+
+
+# ------------------------------------------------------------------ packing
+def test_pack_documents_roundtrip():
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(1, 99, size=rng.integers(3, 40)).astype(np.int32) for _ in range(50)]
+    toks, doc_ids, n_pad = pack_documents(docs, seq_len=63)
+    S1 = 64
+    assert toks.shape[1] == S1
+    # every document's tokens appear exactly once, in order
+    seen = {}
+    for r in range(toks.shape[0]):
+        for pid in np.unique(doc_ids[r]):
+            if pid < 0:
+                continue
+            seg = toks[r][doc_ids[r] == pid]
+            seen.setdefault(int(pid), []).append(seg)
+    # reassemble pieces: piece ids are per-split, so just check multiset of tokens
+    got = np.sort(np.concatenate([np.concatenate(v) for v in seen.values()]))
+    want = np.sort(np.concatenate(docs))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mask_from_doc_ids():
+    ids = np.array([[1, 1, 1, 2, 2, -1]])
+    m = mask_from_doc_ids(ids)
+    np.testing.assert_array_equal(m, [[1, 1, 0, 1, 0]])

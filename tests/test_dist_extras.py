@@ -1,0 +1,258 @@
+"""Distribution extras: pipeline parallelism (numerical equality with the
+reference stack on a real multi-device mesh), int8 EF gradient compression
+(convergence), and the fault-tolerance control loop (failure → rollback →
+exact replay)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compression import (
+    compress_decompress,
+    compressed_bytes,
+    init_error_state,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.dist.fault import (
+    HeartbeatMonitor,
+    RestartCoordinator,
+    SimClock,
+    StragglerDetector,
+)
+
+
+# --------------------------------------------------------------- compression
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of EF-compressed gradients ≈ sum of true gradients (the error
+    buffer carries the residual forward instead of dropping it)."""
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.zeros(64)}
+    err = init_error_state(params)
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.standard_normal(64) * (1 + i % 5), jnp.float32)}
+        sent, err = compress_decompress(g, err)
+        total_true += np.asarray(g["w"])
+        total_sent += np.asarray(sent["w"])
+    resid = np.abs(total_true - total_sent).max()
+    # residual is at most one quantization step, NOT 50 accumulated steps
+    assert resid < 0.5
+
+
+def test_ef_sgd_converges_like_uncompressed():
+    """Quadratic objective: EF-int8 SGD reaches the optimum."""
+
+    A = jnp.diag(jnp.linspace(1.0, 5.0, 16))
+    b = jnp.arange(16.0) / 10
+
+    def grad(w):
+        return A @ w - b
+
+    w_star = jnp.linalg.solve(A, b)
+    lr = 0.05
+
+    w_plain = jnp.zeros(16)
+    w_comp = jnp.zeros(16)
+    err = init_error_state({"w": w_comp})
+    for _ in range(400):
+        w_plain = w_plain - lr * grad(w_plain)
+        g, err = compress_decompress({"w": grad(w_comp)}, err)
+        w_comp = w_comp - lr * g["w"]
+    assert np.linalg.norm(np.asarray(w_plain - w_star)) < 1e-3
+    assert np.linalg.norm(np.asarray(w_comp - w_star)) < 1e-2
+
+
+def test_compressed_bytes_ratio():
+    params = {"a": jnp.zeros((128, 128)), "b": jnp.zeros((64,))}
+    r = compressed_bytes(params)
+    assert r["fp32_bytes"] == 4 * (128 * 128 + 64)
+    assert 0.24 < r["ratio"] < 0.27
+
+
+# ---------------------------------------------------------------- heartbeats
+def test_heartbeat_failure_detection():
+    clk = SimClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], deadline_s=10, clock=clk)
+    clk.advance(5)
+    mon.beat("w0")
+    mon.beat("w1")
+    clk.advance(6)  # w2 last beat 11s ago; w0/w1 6s ago
+    assert mon.check() == ["w2"]
+    assert sorted(mon.alive) == ["w0", "w1"]
+    mon.beat("w2")  # zombie beat must not resurrect
+    clk.advance(1)
+    assert mon.check() == []
+    assert "w2" in mon.dead
+
+
+def test_straggler_robust_zscore():
+    det = StragglerDetector(z_threshold=3.0, patience=2)
+    flagged = []
+    for step in range(6):
+        for w in range(8):
+            t = 1.0 + 0.01 * w  # healthy spread
+            if w == 5 and step >= 2:
+                t = 3.0  # w5 becomes 3× slower from step 2
+            det.record(f"w{w}", t)
+        flagged += det.check()
+    assert flagged == ["w5"]
+
+
+def test_straggler_single_spike_not_flagged():
+    det = StragglerDetector(z_threshold=3.0, patience=3)
+    for step in range(6):
+        for w in range(8):
+            t = 1.0 + (2.5 if (w == 3 and step == 2) else 0.01 * w)
+            det.record(f"w{w}", t)
+        assert det.check() == []
+
+
+# ------------------------------------------------- restart coordinator + e2e
+def test_failure_rollback_and_exact_replay(tmp_path):
+    """Full FT story: train, checkpoint, kill a worker mid-run, roll back,
+    replay — final state must equal the never-failed run bit-for-bit."""
+    from repro.checkpoint import CheckpointManager, restore_state
+    from repro.core.cache import DifferentialCache
+    from repro.core.planner import ScanExecutor
+    from repro.data import TokenBatchPipeline, write_token_corpus
+    from repro.lake.catalog import Catalog
+    from repro.lake.s3sim import ObjectStore
+    from repro.models.registry import get_config, get_model
+    from repro.train.loop import make_init_state, make_train_step
+    from repro.train.optimizer import OptimizerConfig
+
+    cfg = get_config("granite-3-2b").reduced()
+    api = get_model(cfg)
+    opt = OptimizerConfig(kind="adamw", peak_lr=1e-3)
+    store = ObjectStore(str(tmp_path / "s3"))
+    catalog = Catalog(store, rows_per_fragment=8192)
+    write_token_corpus(catalog, "data.c", 12_000, cfg.vocab_size, seed=5)
+    scans = ScanExecutor(store, catalog, cache=DifferentialCache())
+    pipe = TokenBatchPipeline(scans, "data.c", global_batch=2, seq_len=32, prefetch_depth=0)
+    step_fn = jax.jit(make_train_step(api, opt))
+    state0 = make_init_state(api, opt)(jax.random.PRNGKey(1))
+
+    # reference: 6 uninterrupted steps
+    ref = state0
+    for s in range(6):
+        ref, _ = step_fn(ref, pipe.batch_at(s))
+
+    # failing run: checkpoint every 2 steps, fail at step 5 (before ckpt 6)
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2, async_save=False)
+    clk = SimClock()
+    mon = HeartbeatMonitor(["w0", "w1"], deadline_s=10, clock=clk)
+    det = StragglerDetector()
+
+    restored_at = []
+
+    state = state0
+    data_step = 0
+
+    def on_restore(step):
+        nonlocal state, data_step
+        _, plain = mgr.restore(step)
+        # rebuild the typed TrainState from the saved tree
+        flat = jax.tree_util.tree_leaves(plain)
+        state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(state0), flat
+        )
+        data_step = step
+        restored_at.append(step)
+
+    coord = RestartCoordinator(
+        mon, det, latest_checkpoint=mgr.latest, on_restore=on_restore
+    )
+
+    failed_once = False
+    while data_step < 6:
+        # worker heartbeats (w1 stops beating at step 5, first run only)
+        clk.advance(1)
+        mon.beat("w0")
+        if not (data_step == 5 and not failed_once):
+            mon.beat("w1")
+        else:
+            # w1 goes silent past the deadline; w0 keeps beating
+            for _ in range(11):
+                clk.advance(1)
+                mon.beat("w0")
+            failed_once = True
+            coord.tick(data_step)
+            continue  # restart loop body from the restored step
+        state, _ = step_fn(state, pipe.batch_at(data_step))
+        data_step += 1
+        if data_step % 2 == 0:
+            mgr.save(data_step, state, extra={"data_step": data_step})
+
+    assert restored_at == [4], "should roll back to the step-4 checkpoint"
+    for x, y in zip(jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------- pipeline parallel
+_PP = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.dist.pipeline import pipeline_forward, stack_stage_params
+
+    S_STAGES, L, D = 4, 8, 16
+    M, MB, SEQ = 6, 2, 4  # 6 microbatches
+
+    key = jax.random.PRNGKey(0)
+    Ws = jax.random.normal(key, (L, D, D)) * (D ** -0.5)
+
+    def layer_fn(x, W):
+        return jnp.tanh(x @ W)
+
+    # reference: plain sequential stack
+    def ref_stack(x):
+        def body(c, W):
+            return layer_fn(c, W), None
+        out, _ = jax.lax.scan(body, x, Ws)
+        return out
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, SEQ, D))
+    want = jax.vmap(ref_stack)(x)
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("pp",))
+    staged = stack_stage_params({"W": Ws}, S_STAGES)
+    staged = jax.device_put(staged, NamedSharding(mesh, P("pp")))
+
+    got = pipeline_forward(
+        mesh, lambda c, lp: layer_fn(c, lp["W"]), staged, x, axis="pp"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    # bubble arithmetic: ticks = M + S - 1
+    print("PP_OK bubble_fraction=%.3f" % ((S_STAGES - 1) / (M + S_STAGES - 1)))
+    """
+)
+
+
+def test_pipeline_parallel_matches_reference():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _PP],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600,
+    )
+    assert "PP_OK" in out.stdout, out.stderr[-3000:]

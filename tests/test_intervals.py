@@ -1,0 +1,108 @@
+"""Unit + property tests for the exact interval algebra the cache rests on."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intervals import EMPTY, EVERYTHING, Interval, IntervalSet
+
+
+def ivs(*pairs):
+    return IntervalSet.of(*pairs)
+
+
+# ---------------------------------------------------------------- unit tests
+def test_normalization_merges_overlap_and_adjacency():
+    s = ivs((0, 5), (5, 10), (12, 15), (14, 20), (30, 30))
+    assert s.to_pairs() == ((0, 10), (12, 20))
+
+
+def test_difference_splits():
+    s = ivs((0, 100)).difference(ivs((10, 20), (30, 40)))
+    assert s.to_pairs() == ((0, 10), (20, 30), (40, 100))
+
+
+def test_difference_paper_workload():
+    # §III-A: user A cached Jan, user B wants Jan..Feb -> residual is Feb.
+    jan = ivs((20230101, 20230201))
+    jan_feb = ivs((20230101, 20230301))
+    assert jan_feb.difference(jan).to_pairs() == ((20230201, 20230301),)
+    # user A's debug day is fully covered by the cached Jan window
+    day = ivs((20230101, 20230102))
+    assert jan.covers(day)
+    assert day.difference(jan).empty
+
+
+def test_intersect():
+    assert ivs((0, 10), (20, 30)).intersect(ivs((5, 25))).to_pairs() == ((5, 10), (20, 25))
+
+
+def test_measure_and_span():
+    s = ivs((0, 10), (20, 25))
+    assert s.measure() == 15
+    assert s.span().lo == 0 and s.span().hi == 25
+
+
+def test_contains_point():
+    s = ivs((0, 10), (20, 25))
+    assert s.contains_point(0) and s.contains_point(9)
+    assert not s.contains_point(10) and not s.contains_point(19)
+    assert s.contains_point(24) and not s.contains_point(25)
+
+
+def test_everything_and_empty():
+    assert EVERYTHING.covers(ivs((-(10**9), 10**9)))
+    assert EMPTY.empty
+    assert (EVERYTHING - EVERYTHING).empty
+
+
+# ------------------------------------------------------------ property tests
+pair = st.tuples(st.integers(-1000, 1000), st.integers(-1000, 1000))
+iset = st.lists(pair, max_size=6).map(
+    lambda ps: IntervalSet.of(*[(min(a, b), max(a, b)) for a, b in ps])
+)
+
+
+def points(s: IntervalSet):
+    return {x for iv in s for x in range(iv.lo, iv.hi)}
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_union_matches_pointwise(a, b):
+    assert points(a.union(b)) == points(a) | points(b)
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_intersect_matches_pointwise(a, b):
+    assert points(a.intersect(b)) == points(a) & points(b)
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_difference_matches_pointwise(a, b):
+    assert points(a.difference(b)) == points(a) - points(b)
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_residual_partition(a, b):
+    """The cache's core identity: covered ⊔ residual == scan, disjoint."""
+    covered = a.intersect(b)
+    residual = a.difference(b)
+    assert covered.intersect(residual).empty
+    assert covered.union(residual) == a
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset, iset)
+def test_demorgan_via_difference(a, b, c):
+    assert a.difference(b.union(c)) == a.difference(b).difference(c)
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset)
+def test_normal_form_canonical(s):
+    # re-normalizing is a no-op and equality is semantic
+    assert IntervalSet(s.intervals) == s
+    assert IntervalSet.of(*reversed(s.to_pairs())) == s

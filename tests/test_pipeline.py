@@ -1,0 +1,258 @@
+"""End-to-end tests for the declarative pipeline layer (paper §II)."""
+
+import numpy as np
+import pytest
+
+from repro.core.columnar import Table
+from repro.core.intervals import IntervalSet
+from repro.pipeline import (
+    DagError,
+    Model,
+    Project,
+    Workspace,
+    build_dag,
+    compile_plan,
+    date_ordinal,
+    model,
+    parse_filter,
+    runtime,
+)
+
+SCHEMA = {"eventTime": "<i8", "c1": "<f8", "c2": "<f8", "c3": "<i8"}
+
+
+def events_table(lo, hi, seed=0):
+    n = hi - lo
+    rng = np.random.default_rng(seed)
+    return Table(
+        {
+            "eventTime": np.arange(lo, hi, dtype=np.int64),
+            "c1": rng.standard_normal(n),
+            "c2": rng.standard_normal(n),
+            "c3": rng.integers(0, 100, n).astype(np.int64),
+        }
+    )
+
+
+@pytest.fixture()
+def ws(tmp_path):
+    w = Workspace(str(tmp_path / "lake"), rows_per_fragment=128)
+    w.catalog.create_table("ns", "raw_data", SCHEMA, "eventTime")
+    w.catalog.append("ns.raw_data", events_table(0, 1000))
+    return w
+
+
+# ------------------------------------------------------------- filter parser
+def test_parse_between_dates():
+    f = parse_filter("eventTime BETWEEN 2023-01-01 AND 2023-02-01", "eventTime")
+    lo, hi = date_ordinal("2023-01-01"), date_ordinal("2023-02-01")
+    assert f.window.to_pairs() == ((lo, hi + 1),)  # SQL BETWEEN is inclusive
+    assert not f.predicates
+
+
+def test_parse_or_union():
+    f = parse_filter("eventTime BETWEEN 0 AND 9 OR eventTime BETWEEN 20 AND 29", "eventTime")
+    assert f.window.to_pairs() == ((0, 10), (20, 30))
+
+
+def test_parse_combined_range():
+    f = parse_filter("eventTime >= 10 AND eventTime < 20", "eventTime")
+    assert f.window.to_pairs() == ((10, 20),)
+
+
+def test_parse_post_predicate():
+    f = parse_filter("eventTime BETWEEN 0 AND 99 AND c3 >= 50", "eventTime")
+    assert f.window.to_pairs() == ((0, 100),)
+    assert f.predicates == [("c3", ">=", 50)]
+    assert f.predicate_columns == ("c3",)
+
+
+def test_parse_rejects_or_over_predicates():
+    with pytest.raises(ValueError):
+        parse_filter("c3 >= 50 OR eventTime < 10", "eventTime")
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_filter("eventTime BETWEEN AND 10", "eventTime")
+
+
+# ------------------------------------------------------------------ DAG build
+def paper_listing1_project() -> Project:
+    """The paper's Listing 1 DAG: raw_data -> cleaned_data -> final_data ->
+    training_data, with two runtimes standing in for two interpreters."""
+    p = Project("listing1")
+
+    @model(project=p)
+    @runtime("numpy")
+    def cleaned_data(
+        data=Model(
+            "ns.raw_data",
+            columns=["c1", "c2", "c3"],
+            filter="eventTime BETWEEN 0 AND 309",
+        )
+    ):
+        keep = ~np.isnan(data.column("c1"))
+        return data.filter(keep)
+
+    @model(project=p)
+    @runtime("numpy")
+    def final_data(data=Model("cleaned_data")):
+        return {
+            "c1": data.column("c1"),
+            "c13": data.column("c1") + data.column("c3"),
+        }
+
+    @model(project=p)
+    @runtime("jax")
+    def training_data(data=Model("final_data")):
+        import jax.numpy as jnp
+
+        return {"feature": (data["c13"] - jnp.mean(data["c13"])) / (jnp.std(data["c13"]) + 1e-6)}
+
+    return p
+
+
+def test_dag_reconstruction_from_inputs(ws):
+    p = paper_listing1_project()
+    dag = build_dag(p)
+    assert dag.order == ["cleaned_data", "final_data", "training_data"]
+    assert dag.edges["training_data"] == ["final_data"]
+    assert dag.scan_leaves["cleaned_data"][0][1].name == "ns.raw_data"
+    assert dag.sinks() == ["training_data"]
+
+
+def test_dag_cycle_detection():
+    p = Project("cyclic")
+
+    @model(project=p)
+    def a(x=Model("b")):
+        return x
+
+    @model(project=p)
+    def b(x=Model("a")):
+        return x
+
+    with pytest.raises(DagError, match="cycle"):
+        build_dag(p)
+
+
+def test_dag_unknown_ref():
+    p = Project("bad")
+
+    @model(project=p)
+    def a(x=Model("nonexistent_model")):
+        return x
+
+    with pytest.raises(DagError, match="unknown reference"):
+        build_dag(p)
+
+
+def test_filters_on_model_edges_rejected():
+    p = Project("bad2")
+
+    @model(project=p)
+    def a(x=Model("ns.t", columns=["c1"])):
+        return x
+
+    @model(project=p)
+    def b(x=Model("a", columns=["c1"])):
+        return x
+
+    with pytest.raises(DagError, match="scan leaves"):
+        build_dag(p)
+
+
+def test_physical_plan_inserts_system_scan(ws):
+    p = paper_listing1_project()
+    dag = build_dag(p)
+    plan = compile_plan(dag, {"ns.raw_data": "eventTime"})
+    assert len(plan.scans) == 1
+    s = plan.scans[0]
+    assert s.table == "ns.raw_data"
+    assert s.columns == ("c1", "c2", "c3")
+    assert s.window_pairs == ((0, 310),)
+    # describe() is the human-readable plan
+    assert "SCAN ns.raw_data" in plan.describe()
+    assert "RUN [jax] training_data" in plan.describe()
+
+
+# ----------------------------------------------------------------- execution
+def test_run_listing1_end_to_end(ws):
+    p = paper_listing1_project()
+    res = ws.run(p)
+    assert set(res.outputs) == {"cleaned_data", "final_data", "training_data"}
+    feat = res.outputs["training_data"].column("feature")
+    assert feat.shape[0] == 310
+    assert abs(float(np.mean(feat))) < 1e-3  # normalized
+    assert res.bytes_from_store > 0
+
+
+def test_rerun_hits_cache_across_languages(ws):
+    p = paper_listing1_project()
+    r1 = ws.run(p)
+    r2 = ws.run(p)
+    assert r2.bytes_from_store == 0, "second run must be served from cache"
+    assert r2.bytes_from_cache > 0
+    np.testing.assert_allclose(
+        r1.outputs["training_data"].column("feature"),
+        r2.outputs["training_data"].column("feature"),
+    )
+
+
+def test_materialize_publishes_table(ws):
+    p = Project("mat")
+
+    @model(project=p, materialize=True)
+    def snapshot_model(
+        data=Model("ns.raw_data", columns=["c1"], filter="eventTime BETWEEN 0 AND 99")
+    ):
+        return {"eventTime": np.arange(100, dtype=np.int64), "c1": data.column("c1")}
+
+    ws.run(p)
+    snap = ws.catalog.current_snapshot("models.snapshot_model")
+    assert sum(f.row_count for f in snap.fragments) == 100
+    # downstream project can scan the materialized model
+    p2 = Project("consumer")
+
+    @model(project=p2)
+    def reader(d=Model("models.snapshot_model", columns=["c1"], filter="eventTime BETWEEN 0 AND 49")):
+        return d
+
+    res = ws.run(p2)
+    assert res.outputs["reader"].num_rows == 50
+
+
+def test_time_travel_scan(ws):
+    old = ws.catalog.current_snapshot("ns.raw_data").snapshot_id
+    ws.catalog.append("ns.raw_data", events_table(1000, 1100, seed=7))
+    p = Project("tt")
+
+    @model(project=p)
+    def now(d=Model("ns.raw_data", columns=["c1"])):
+        return d
+
+    @model(project=p)
+    def friday(d=Model("ns.raw_data", columns=["c1"], snapshot_id=old)):
+        return d
+
+    res = ws.run(p)
+    assert res.outputs["now"].num_rows == 1100
+    assert res.outputs["friday"].num_rows == 1000  # last Friday's rows
+
+
+def test_post_predicate_in_pipeline(ws):
+    p = Project("pred")
+
+    @model(project=p)
+    def evens(
+        d=Model(
+            "ns.raw_data",
+            columns=["c3"],
+            filter="eventTime BETWEEN 0 AND 99 AND c3 >= 50",
+        )
+    ):
+        return d
+
+    res = ws.run(p)
+    assert np.all(res.outputs["evens"].column("c3") >= 50)

@@ -1,0 +1,40 @@
+"""Distribution layer: how cached, pre-processed data becomes a production
+workload across many devices.
+
+Four submodules, each one concern:
+
+- :mod:`repro.dist.sharding` — logical-axis sharding constraints.  Model code
+  annotates tensors with *logical* axis names (``"batch"``, ``"act_heads"``,
+  ``"embed"`` …); a :class:`~repro.dist.sharding.MeshRules` maps those to
+  physical mesh axes, activated with
+  :func:`~repro.dist.sharding.use_rules`.  Two hazard rules are applied per
+  dim (both diagnosed on the production meshes, EXPERIMENTS §Perf):
+  **size-1 dims drop their constraint** (parking a length-1 dim on a >1
+  axis makes one device the owner and every consumer a broadcast — the Z4
+  owner-broadcast pathology), while **non-divisible dims keep theirs**
+  (GSPMD pads; dropping the constraint silently replicates the buffer —
+  the L1 six-heads-on-a-four-way-axis pathology).
+
+- :mod:`repro.dist.compression` — int8 error-feedback gradient compression
+  for the data-parallel all-reduce wire format: per-tensor symmetric
+  quantization, with the residual carried forward in an error buffer so the
+  *sum* of compressed gradients tracks the sum of true gradients to within
+  one quantization step.
+
+- :mod:`repro.dist.fault` — the failure → rollback → exact-replay control
+  loop: :class:`~repro.dist.fault.HeartbeatMonitor` (deadline-based failure
+  detection; dead workers stay dead until revived — zombie beats are
+  ignored), :class:`~repro.dist.fault.StragglerDetector` (robust z-score
+  over per-worker step times with a patience window, so one GC pause is not
+  a restart), and :class:`~repro.dist.fault.RestartCoordinator` (rolls back
+  to the latest checkpoint and revives the failed workers).  Everything is
+  driven by an injectable clock (:class:`~repro.dist.fault.SimClock`) so the
+  whole loop is testable in simulated time.
+
+- :mod:`repro.dist.pipeline` — GPipe-style microbatched pipeline
+  parallelism over a mesh axis: parameters are stacked into per-stage
+  slices, microbatches stream through the stages via ``ppermute``, and the
+  schedule runs ``M + S - 1`` ticks for M microbatches over S stages
+  (bubble fraction ``(S-1)/(M+S-1)``).  Numerically equal to the
+  sequential layer stack.
+"""

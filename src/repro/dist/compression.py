@@ -1,0 +1,90 @@
+"""Int8 error-feedback gradient compression (the DP all-reduce wire format).
+
+Per-tensor symmetric quantization: ``q = round(x / s)`` with ``s =
+max|x| / 127``, so the round-trip error is at most half a quantization step
+elementwise.  On its own that bias would accumulate over training; *error
+feedback* (Seide et al. 2014, Karimireddy et al. 2019) adds the previous
+step's residual to the gradient before quantizing and carries the new
+residual forward, making the compressed-gradient *sum* track the true sum to
+within one step — which is what SGD integrates, so convergence matches
+uncompressed training on well-conditioned objectives.
+
+Everything here is jit-compatible pure JAX; ``compress_decompress`` is the
+piece the launcher wraps around the gradient computation when
+``--compress-grads`` is set.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "init_error_state",
+    "compress_decompress",
+    "compressed_bytes",
+]
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q int8, scale f32)
+    with ``|x - q·s| ≤ s/2`` elementwise (s covers max|x|, so no clipping
+    error — only rounding)."""
+    x32 = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    # tiny floor keeps the all-zero tensor well-defined (q = 0, s ~ 0)
+    scale = jnp.maximum(amax / 127.0, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(x32 / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any) -> Any:
+    """Zeroed f32 residual buffer matching the gradient pytree."""
+    return jax.tree.map(lambda p: jnp.zeros(jnp.shape(p), jnp.float32), params)
+
+
+def compress_decompress(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """One EF-compression round: ``(grads, err) -> (sent, new_err)``.
+
+    ``sent`` is what the wire would carry after dequantization on the
+    receiver; ``new_err = (grads + err) - sent`` is the residual the NEXT
+    round folds back in.  The running sum of ``sent`` therefore trails the
+    running sum of ``grads`` by exactly the current residual — bounded by
+    one quantization step, never by the step count.
+    """
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_e = treedef.flatten_up_to(err)
+    sent_leaves = []
+    err_leaves = []
+    for g, e in zip(leaves_g, leaves_e):
+        corrected = jnp.asarray(g, jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        sent = dequantize_int8(q, s)
+        sent_leaves.append(sent)
+        err_leaves.append(corrected - sent)
+    return treedef.unflatten(sent_leaves), treedef.unflatten(err_leaves)
+
+
+def compressed_bytes(params: Any) -> Dict[str, float]:
+    """Wire-format accounting: fp32 baseline vs int8 payload + one f32
+    scale per tensor.  ``ratio`` lands near 0.25 (plus scale overhead)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    elems = sum(int(np.prod(jnp.shape(l))) for l in leaves)
+    fp32 = 4 * elems
+    int8 = elems + 4 * len(leaves)
+    return {
+        "fp32_bytes": fp32,
+        "int8_bytes": int8,
+        "ratio": int8 / max(fp32, 1),
+        "tensors": len(leaves),
+    }

@@ -1,0 +1,225 @@
+"""Logical-axis sharding constraints.
+
+Model code never mentions mesh axes: every materialized tensor is annotated
+with *logical* names via :func:`shard`, e.g. ``shard(q, ("batch", None,
+"act_heads", None))``.  A :class:`MeshRules` — built by
+``launch.mesh.rules_for`` from :func:`_base_rules` plus per-arch overrides —
+maps logical names to physical mesh axes and is activated with
+:func:`use_rules`.  With no rules active, :func:`shard` is the identity, so
+the same model code runs unsharded in unit tests and FSDP×TP(+SP) under the
+production mesh.
+
+Hazard rules (applied per dim, with the tensor shape in hand):
+
+1. **Size-1 dims DROP their constraint.**  Constraining a length-1 dim onto
+   a >1 mesh axis parks the whole buffer on one device; every consumer then
+   pays an owner-broadcast (measured: the B=1 decode path moved the full KV
+   cache per layer — §Perf Z4).
+2. **Non-divisible dims KEEP their constraint.**  GSPMD pads the last shard
+   (6 heads on a 4-way axis → 2 per device).  Dropping the constraint
+   instead silently replicates the buffer — a 6-head attention replicating
+   its (B, H, S, S) score matrix was §Perf L1.
+3. Constraints onto axes of size 1 (or axes not in the mesh) are no-ops and
+   are dropped for clean HLO.
+
+``seq`` is special-cased: :class:`MeshRules` gates it behind
+``shard_seq_activations`` so sequence parallelism can be toggled per run
+without touching the rule table (the dry-run's ``--no-seq-parallel``).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+__all__ = [
+    "Axis",
+    "MeshRules",
+    "_base_rules",
+    "current_rules",
+    "shard",
+    "tree_pspecs",
+    "use_rules",
+]
+
+# A physical assignment for one logical axis: one mesh axis, several (their
+# sizes multiply, e.g. batch over ("pod", "data")), or None (replicated).
+Axis = Union[str, Tuple[str, ...], None]
+
+
+def _base_rules(pod: bool = False) -> Dict[str, Axis]:
+    """The production FSDP×TP(+SP) rule table (mutable — callers patch it
+    with per-arch overrides before freezing it into a :class:`MeshRules`).
+
+    Parameters: every weight's ``embed`` dim is sharded over "data" (FSDP —
+    weights are all-gathered just-in-time, gradients reduce-scattered), and
+    its TP dim (``heads``/``mlp``/``vocab``) over "model" (Megatron).
+    Experts default to expert-parallel over "model" (llama4); mixtral
+    overrides to TP-within-expert because 8 experts do not cover a 16-way
+    axis.  Activations: batch over the data axes, TP-parallel dims
+    (``act_*``) over "model", decode KV cache sequence-sharded over "model"
+    (flash-decoding).
+    """
+    batch: Axis = ("pod", "data") if pod else "data"
+    return {
+        # ---- parameter axes
+        "layers": None,  # scan-stacked layer dim: never sharded
+        "embed": "data",  # FSDP
+        "heads": "model",  # Megatron TP
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",  # expert-parallel default; mixtral overrides
+        "expert_mlp": None,  # TP-within-expert fallback target
+        # ---- activation axes
+        "batch": batch,
+        "seq": "model",  # sequence parallelism (gated by shard_seq_activations)
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "act_experts": "model",
+        "kv_seq": "model",  # decode cache: shard the sequence, not the heads
+        "ssm_heads": "model",
+    }
+
+
+@dataclass
+class MeshRules:
+    """A frozen (rules, mesh) pair — the unit :func:`use_rules` activates."""
+
+    rules: Dict[str, Axis]
+    mesh: jax.sharding.Mesh
+    shard_seq_activations: bool = True
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, name: Optional[str]) -> Axis:
+        """Logical name -> mesh axes, with unknown names and axes missing
+        from this mesh resolving to None (replicated)."""
+        if name is None:
+            return None
+        if name == "seq" and not self.shard_seq_activations:
+            return None
+        axis = self.rules.get(name)
+        if axis is None:
+            return None
+        present = self.mesh.axis_names
+        if isinstance(axis, tuple):
+            kept = tuple(a for a in axis if a in present)
+            if not kept:
+                return None
+            return kept if len(kept) > 1 else kept[0]
+        return axis if axis in present else None
+
+    def axis_size(self, axis: Axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
+
+    def _dedup(self, resolved: "list[Tuple[Optional[str], Axis]]") -> "list[Axis]":
+        """One spec may use each mesh axis once.  On conflict, non-``seq``
+        dims claim their axes first (sequence parallelism is the filler —
+        e.g. logits ``("batch", "seq", "act_vocab")`` keeps the vocab TP
+        shard and drops the seq constraint); ties break leftmost-wins."""
+        parts: list[Axis] = [None] * len(resolved)
+        used: set = set()
+        for pass_seq in (False, True):
+            for dim, (name, axis) in enumerate(resolved):
+                if axis is None or (name == "seq") != pass_seq:
+                    continue
+                names = axis if isinstance(axis, tuple) else (axis,)
+                if any(a in used for a in names):
+                    continue
+                parts[dim] = axis
+                used.update(names)
+        return parts
+
+    def pspec(self, logical_axes: Sequence[Optional[str]]) -> PartitionSpec:
+        """Pure name mapping (no shape hazards — the explicit in_shardings
+        path applies its own divisibility fallback, see dryrun)."""
+        parts = self._dedup([(n, self.resolve(n)) for n in logical_axes])
+        return PartitionSpec(*parts)
+
+    # -- the constraint operator ------------------------------------------
+    def constrain(self, x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+        if len(logical_axes) != x.ndim:
+            raise ValueError(
+                f"logical axes {tuple(logical_axes)} have rank "
+                f"{len(logical_axes)}, tensor has rank {x.ndim} ({x.shape})"
+            )
+        resolved: list = []
+        for dim, name in enumerate(logical_axes):
+            axis = self.resolve(name)
+            if axis is None or self.axis_size(axis) <= 1:
+                axis = None  # hazard rule 3: no-op constraint
+            elif x.shape[dim] == 1:
+                axis = None  # hazard rule 1: don't park size-1 dims
+            # else: hazard rule 2 — keep even if non-divisible (GSPMD pads)
+            resolved.append((name, axis))
+        parts = self._dedup(resolved)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PartitionSpec(*parts))
+        )
+
+
+# --------------------------------------------------------------------- state
+# Active-rules stack.  Thread-local: the data pipeline's prefetch threads and
+# async checkpoint writers must never observe the trainer's rules mid-trace.
+class _Active(threading.local):
+    def __init__(self) -> None:
+        self.stack: list = []
+
+
+_ACTIVE = _Active()
+
+
+def current_rules() -> Optional[MeshRules]:
+    for rules in reversed(_ACTIVE.stack):
+        if rules is not None:
+            return rules
+    return None
+
+
+class use_rules:
+    """``with use_rules(rules): ...`` — activate a :class:`MeshRules` for
+    every :func:`shard`/:func:`tree_pspecs` call in the dynamic extent.
+    ``use_rules(None)`` is an allowed no-op (launcher convenience).
+    Re-entrant; each thread has its own stack."""
+
+    def __init__(self, rules: Optional[MeshRules]):
+        self.rules = rules
+
+    def __enter__(self) -> Optional[MeshRules]:
+        _ACTIVE.stack.append(self.rules)
+        return self.rules
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        _ACTIVE.stack.pop()
+        return False
+
+
+# ----------------------------------------------------------------- operators
+def shard(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain ``x`` to the active rules' sharding; identity if none."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return rules.constrain(x, logical_axes)
+
+
+def tree_pspecs(axes_tree: Any, rules: MeshRules) -> Any:
+    """Map a pytree whose leaves are logical-axis tuples (``()`` for
+    scalars) to a matching pytree of :class:`PartitionSpec`."""
+    return jax.tree.map(
+        lambda axes: rules.pspec(axes),
+        axes_tree,
+        is_leaf=lambda node: isinstance(node, tuple),
+    )

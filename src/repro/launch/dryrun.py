@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import tree_pspecs, use_rules
-from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.hlo_cost import analyze_hlo, xla_cost_dict
 from repro.launch.mesh import describe_mesh, make_production_mesh, rules_for
 from repro.launch.roofline import roofline_report
 from repro.models import (
@@ -248,7 +248,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = xla_cost_dict(compiled)
         hlo = compiled.as_text()
         n_chips = meta["n_chips"]
         # trip-count-aware cost model (XLA's cost_analysis counts while

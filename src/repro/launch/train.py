@@ -78,11 +78,9 @@ def main() -> int:
     store = ObjectStore(os.path.join(work, "s3"))
     catalog = Catalog(store, rows_per_fragment=1 << 16)
     table = "data.corpus"
-    try:
-        catalog.table(table)
-    except KeyError:
-        pass
     need = args.batch * (args.seq + 1) * max(args.steps // 4, 2)
+    # idempotent: a resumed workdir keeps its corpus (no duplicate keys),
+    # a larger run tops it up with the missing tail only
     write_token_corpus(catalog, table, need, cfg.vocab_size, seed=args.seed)
     scans = ScanExecutor(store, catalog, cache=DifferentialCache())
     pipe = TokenBatchPipeline(

@@ -1,0 +1,114 @@
+"""Minimal, dependency-free stand-in for `hypothesis`.
+
+This container does not ship hypothesis and nothing may be pip-installed,
+so ``conftest.py`` registers this module under ``sys.modules["hypothesis"]``
+when the real package is absent.  It implements exactly the surface the
+test-suite uses — ``given``, ``settings``, and the strategies
+``integers/booleans/tuples/lists/sets/sampled_from`` with ``.map`` — as a
+seeded random sampler: each ``@given`` test runs ``max_examples`` times
+with draws from a PRNG seeded by the test's qualified name, so runs are
+deterministic.  No shrinking, no database, no health checks; when the real
+hypothesis is available it is always preferred.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def example_with(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value=-(2**31), max_value=2**31):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats))
+
+
+def sampled_from(elements):
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool))
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 8
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements._draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def sets(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 8
+
+    def draw(rng):
+        want = rng.randint(min_size, hi)
+        out = set()
+        # bounded attempts: small sample spaces may not reach `want`
+        for _ in range(50 * (want + 1)):
+            if len(out) >= want:
+                break
+            out.add(elements._draw(rng))
+        return out
+
+    return _Strategy(draw)
+
+
+def settings(max_examples=100, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # zero-arg wrapper (no functools.wraps: pytest must not see the
+        # strategy parameters in the signature and treat them as fixtures)
+        def runner():
+            n = getattr(runner, "_stub_max_examples", 100)
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                fn(*(s._draw(rng) for s in strats))
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._stub_max_examples = getattr(fn, "_stub_max_examples", 100)
+        return runner
+
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "tuples", "sampled_from", "lists", "sets"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

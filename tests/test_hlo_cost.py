@@ -14,7 +14,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_cost import analyze_hlo, collective_bytes_from_hlo
+from repro.launch.hlo_cost import analyze_hlo, collective_bytes_from_hlo, xla_cost_dict
 
 
 def _compiled_text(fn, *args):
@@ -25,7 +25,7 @@ def test_single_matmul_matches_cost_analysis():
     x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
     w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
     compiled = _compiled_text(lambda a, b: a @ b, x, w)
-    want = compiled.cost_analysis()["flops"]
+    want = xla_cost_dict(compiled)["flops"]
     got = analyze_hlo(compiled.as_text()).flops
     assert got == pytest.approx(want, rel=0.01)
     assert got == pytest.approx(2 * 128 * 256 * 512, rel=0.01)
@@ -50,8 +50,8 @@ def test_scan_flops_multiplied_by_trip_count():
     f_scan = analyze_hlo(c_scan.as_text()).flops
 
     # cost_analysis is known-broken here (counts the body once); we fixed it
-    assert c_scan.cost_analysis()["flops"] == pytest.approx(
-        c_one.cost_analysis()["flops"], rel=0.01
+    assert xla_cost_dict(c_scan)["flops"] == pytest.approx(
+        xla_cost_dict(c_one)["flops"], rel=0.01
     )
     assert f_scan == pytest.approx(N * f_one, rel=0.05)
 

@@ -106,3 +106,42 @@ def test_normal_form_canonical(s):
     # re-normalizing is a no-op and equality is semantic
     assert IntervalSet(s.intervals) == s
     assert IntervalSet.of(*reversed(s.to_pairs())) == s
+
+
+# ----------------------------------------- randomized cache-algebra invariants
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_partition_reassembles_exactly(a, b):
+    """(A - B) | (A & B) == A — the cache's residual+hit reassembly: what is
+    fetched plus what is served must be exactly the requested scan."""
+    assert a.difference(b).union(a.intersect(b)) == a
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_union_length_subadditive(a, b):
+    """|A ∪ B| ≤ |A| + |B|, with equality iff disjoint — byte accounting in
+    the planner relies on measure() never double-counting merged windows."""
+    u = a.union(b)
+    assert u.measure() <= a.measure() + b.measure()
+    if a.intersect(b).empty:
+        assert u.measure() == a.measure() + b.measure()
+    assert u.measure() >= max(a.measure(), b.measure())
+
+
+@settings(max_examples=200, deadline=None)
+@given(iset, iset)
+def test_difference_coverage_roundtrip(a, b):
+    """Difference/coverage round-trips: removing what B covers and adding it
+    back restores A; coverage is equivalent to an empty residual."""
+    residual = a.difference(b)
+    covered = a.intersect(b)
+    # round-trip: A \ B ⊎ (A ∩ B) partitions A
+    assert residual.union(covered) == a
+    assert residual.intersect(covered).empty
+    # covers() <=> zero residual, and double difference is idempotent
+    assert b.covers(a) == a.difference(b).empty
+    assert residual.difference(b) == residual
+    # self-algebra sanity
+    assert a.difference(a).empty
+    assert a.covers(covered)

@@ -279,7 +279,9 @@ class DifferentialCache:
                     if merged:
                         break
             out.extend(group)
-        self._elements[table] = out
+        # a merge of two fully-invalidated elements leaves an empty window;
+        # such an element can never serve anything again — drop it
+        self._elements[table] = [e for e in out if not e.window.empty]
 
     @staticmethod
     def _touches(a: IntervalSet, b: IntervalSet) -> bool:
@@ -292,21 +294,38 @@ class DifferentialCache:
     def _merge_pair(
         self, a: CacheElement, b: CacheElement, snapshot: Snapshot
     ) -> CacheElement:
-        # rows for the overlap are identical (same snapshot fragments), so
-        # take b only where a does not already cover.
-        b_only = b.window.difference(a.window)
-        parts = [a.data] + b.slice_window(b_only, b.columns)
-        data = concat_tables(parts).sort_by(a.sort_key)
-        pins = {p.fragment_id: p for p in a.pins}
-        pins.update({p.fragment_id: p for p in b.pins})
+        # The two sides may have been assembled under DIFFERENT snapshots, so
+        # each contributes only its usable_window under the current one —
+        # merging raw windows would let rows from dropped fragments (or
+        # windows missing newly added rows) survive inside the merged
+        # element with pins that make them look valid.  Inside the usable
+        # overlap the rows are identical (same live fragments), so take b
+        # only where a does not already cover.
+        a_use = self.usable_window(a, snapshot)
+        b_use = self.usable_window(b, snapshot)
+        b_only = b_use.difference(a_use)
+        window = a_use.union(b_use)
+        parts = a.slice_window(a_use, a.columns) + b.slice_window(b_only, b.columns)
+        if parts:
+            data = concat_tables(parts).sort_by(a.sort_key)
+        else:
+            data = a.data.slice(0, 0)
+        merged = {p.fragment_id: p for p in a.pins}
+        merged.update({p.fragment_id: p for p in b.pins})
+        # keep only pins that still back some row range of the new window
+        pins = tuple(
+            p
+            for p in merged.values()
+            if not window.intersect(IntervalSet([p.window])).empty
+        )
         self._clock += 1
         return CacheElement(
             elem_id=next(_ID),
             table=a.table,
             sort_key=a.sort_key,
             columns=a.columns,
-            window=a.window.union(b.window),
-            pins=tuple(pins.values()),
+            window=window,
+            pins=pins,
             data=data,
             last_used=self._clock,
         )

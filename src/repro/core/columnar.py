@@ -45,7 +45,16 @@ class Table:
                 raise ValueError(
                     f"column {name!r} length {arr.shape[0]} != {nrows}"
                 )
-            arr.flags.writeable = False  # immutability ⇒ safe zero-copy sharing
+            if arr.flags.writeable:
+                # freeze an internal VIEW, never the caller's array: the
+                # caller keeps write access to the buffer it handed us,
+                # while every array reachable through this Table is
+                # read-only.  Like Arrow's zero-copy numpy ingestion, the
+                # buffer is still aliased — a caller that keeps writing
+                # into it sees those writes reflected in the Table; copy
+                # at the call site if the source must stay mutable.
+                arr = arr.view()
+                arr.flags.writeable = False
             cols[name] = arr
         self._cols = cols
         self._nrows = nrows or 0

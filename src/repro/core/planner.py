@@ -132,12 +132,13 @@ class ScanExecutor:
         out = ChunkedTable(chunks)
         if predicate is not None:
             out = ChunkedTable([c.filter(predicate(c)) for c in out.chunks])
-        # project away the sort key unless requested
+        # sort while the sort key is still physically present, THEN project
+        # it away unless requested — sorted_output must hold even when the
+        # key is not among the projections
+        if sorted_output and out.chunks:
+            out = ChunkedTable([out.combine().sort_by(meta.sort_key)])
         proj = [c for c in phys if c in scan.columns]
-        out = out.select(proj)
-        if sorted_output:
-            out = ChunkedTable([out.combine().sort_by(meta.sort_key)]) if meta.sort_key in proj else out
-        return out
+        return out.select(proj)
 
     # -- accounting ----------------------------------------------------------
     def total_bytes_processed(self) -> int:
@@ -176,12 +177,16 @@ class ResultCachingExecutor:
             if snapshot_id
             else self.inner.catalog.current_snapshot(table)
         )
+        # key on the predicate OBJECT, not id(): the tuple key holds a strong
+        # reference, so a memo hit implies the very same (still-alive)
+        # callable — id() alone gives false hits once a collected
+        # predicate's id is recycled for a new one
         key = (
             table,
             snapshot.snapshot_id,
             tuple(sorted(columns)),
             (window or IntervalSet.everything()).to_pairs(),
-            id(predicate) if predicate is not None else None,
+            predicate,
             sorted_output,
         )
         if key in self._memo:

@@ -31,10 +31,16 @@ Four submodules, each one concern:
   driven by an injectable clock (:class:`~repro.dist.fault.SimClock`) so the
   whole loop is testable in simulated time.
 
-- :mod:`repro.dist.pipeline` — GPipe-style microbatched pipeline
-  parallelism over a mesh axis: parameters are stacked into per-stage
-  slices, microbatches stream through the stages via ``ppermute``, and the
-  schedule runs ``M + S - 1`` ticks for M microbatches over S stages
-  (bubble fraction ``(S-1)/(M+S-1)``).  Numerically equal to the
-  sequential layer stack.
+- :mod:`repro.dist.pipeline` — microbatched pipeline parallelism over a
+  mesh axis: parameters are stacked into per-stage slices and microbatches
+  stream through the stages via ``ppermute``.  ``pipeline_forward`` is the
+  forward-only GPipe stream (``M + S - 1`` ticks, bubble
+  ``(S-1)/(M+S-1)``); ``pipeline_value_and_grad`` runs the **1F1B
+  training schedule** — a real VJP backward with per-stage float32
+  gradient accumulation, where each stage stashes only its in-flight
+  microbatch inputs (``O(S)`` slots vs GPipe's ``O(M)``) and remats the
+  stage forward inside the backward tick.  Both are numerically equal to
+  the sequential layer stack; ``repro.train.loop.make_pipeline_train_step``
+  wraps the schedule in the standard ``(state, batch) -> (state, metrics)``
+  contract so ``train_loop``/checkpointing work unchanged.
 """

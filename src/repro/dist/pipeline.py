@@ -1,31 +1,66 @@
-"""Microbatched pipeline parallelism over a mesh axis (GPipe schedule).
+"""Microbatched pipeline parallelism over a mesh axis (GPipe + 1F1B).
 
 ``stack_stage_params`` reshapes a layer-stacked parameter tree ``(L, ...)``
 into per-stage slices ``(S, L/S, ...)``; the caller shards the leading dim
-over the pipeline mesh axis.  ``pipeline_forward`` then streams M
-microbatches through the S stages: every tick each device runs its local
-layers on its current microbatch and passes the activation to the next
-stage with one ``ppermute`` hop.  The schedule fills and drains in
-``M + S - 1`` ticks — bubble fraction ``(S-1)/(M+S-1)`` — and is
-numerically identical to the sequential layer stack (same ops, same
-order, just placed on different devices).
+over the pipeline mesh axis.  Two schedules run on top of that layout:
 
-Collectives per tick: exactly one activation-sized ``collective-permute``
-per stage boundary (plus one final ``psum`` to replicate the gathered
-outputs) — no all-gathers of weights or activations.
+- :func:`pipeline_forward` — the original forward-only GPipe stream
+  (fill/drain in ``M + S - 1`` ticks, bubble ``(S-1)/(M+S-1)``).
+- :func:`pipeline_value_and_grad` — a **training** schedule with a real
+  backward pass and per-stage gradient accumulation.  ``schedule="1f1b"``
+  (default) runs one-forward-one-backward: each stage stashes only its
+  **in-flight** microbatch inputs (at most ``S`` slots, independent of
+  ``M``) and rematerializes the stage forward inside the backward tick, so
+  peak activation memory is ``O(S)`` microbatches instead of GPipe's
+  ``O(M)``.  ``schedule="gpipe"`` runs the classic all-forward-then-
+  all-backward sweep with an ``M``-slot stash — same tick count and bubble
+  as 1F1B, strictly worse memory; it exists so benchmarks can measure the
+  1F1B memory win on real compiled programs.
+
+Both training schedules are numerically equal to the sequential layer
+stack: the backward is the exact VJP of the stage forward (recomputed from
+the stashed input, like remat), per-layer gradients accumulate in float32
+in microbatch order — the same op sequence ``make_train_step`` produces.
+
+Tick clock (unified for both schedules, ``T = 2(M + S - 1)`` ticks):
+
+- 1F1B: ``F(s, m)`` at tick ``s + m`` while ``m < S - s`` (warmup), then
+  ``s + 2m``; ``B(s, k)`` at tick ``2S - 1 - s + 2k``.  Forward ticks have
+  parity ``s``, backward ticks parity ``s + 1`` in steady state, so a
+  stage never runs both in one tick.
+- GPipe: ``F(s, m)`` at ``s + m``; ``B(s, k)`` at ``(M+S-1) + (S-1-s) + k``.
+
+Collectives per tick: one activation-sized ``ppermute`` hop forward and
+one cotangent-sized hop backward (plus final ``psum``s to replicate the
+scalar loss/token counts) — no weight or activation all-gathers.  The
+``ppermute``s run unconditionally every tick (collectives must be executed
+by every member of the axis); idle stages send garbage that no receiver
+reads, and the receive side writes an arriving activation into its stash
+slot the tick it lands, so a value produced early (warmup) survives until
+its consumer's steady-state tick.
+
+Interleaved virtual stages (each device owning ``v`` non-adjacent layer
+chunks, shrinking the bubble to ``(S-1)/(vM + S - 1)``) are modelled in
+:func:`schedule_report` but not yet executed — see ROADMAP.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-__all__ = ["stack_stage_params", "pipeline_forward"]
+__all__ = [
+    "stack_stage_params",
+    "unstack_stage_params",
+    "pipeline_forward",
+    "pipeline_value_and_grad",
+    "schedule_report",
+]
 
 
 def stack_stage_params(params: Any, n_stages: int) -> Any:
@@ -44,6 +79,18 @@ def stack_stage_params(params: Any, n_stages: int) -> Any:
         return leaf.reshape((n_stages, L // n_stages) + leaf.shape[1:])
 
     return jax.tree.map(restack, params)
+
+
+def unstack_stage_params(stage_params: Any) -> Any:
+    """Inverse of :func:`stack_stage_params`: ``(S, L/S, ...)`` -> ``(L, ...)``
+    (e.g. to hand a pipeline-trained stack back to the sequential model or a
+    checkpoint written in layer-stacked layout)."""
+
+    def flatten(leaf):
+        leaf = jnp.asarray(leaf)
+        return leaf.reshape((leaf.shape[0] * leaf.shape[1],) + leaf.shape[2:])
+
+    return jax.tree.map(flatten, stage_params)
 
 
 def pipeline_forward(
@@ -123,3 +170,251 @@ def _pipeline_program(mesh: jax.sharding.Mesh, fn: Callable, axis: str):
             check_rep=False,
         )
     )
+
+
+# ------------------------------------------------------------------ training
+def pipeline_value_and_grad(
+    mesh: jax.sharding.Mesh,
+    fn: Callable[[jax.Array, Any], jax.Array],
+    loss_fn: Callable[[jax.Array, Any], Tuple[jax.Array, jax.Array]],
+    stage_params: Any,
+    xs: jax.Array,
+    aux: Any,
+    axis: str = "pp",
+    schedule: str = "1f1b",
+) -> Tuple[Tuple[jax.Array, jax.Array], Any]:
+    """Pipeline-parallel loss + parameter gradients with microbatch
+    accumulation.
+
+    ``fn``: one layer, ``(carry, layer_params) -> carry``.
+    ``loss_fn``: applied to the LAST stage's output per microbatch,
+    ``(y_mb, aux_mb) -> (loss_sum, count)`` (both scalar; e.g. summed token
+    NLL and token count, so the caller can form a token-mean).
+    ``stage_params``: leaves ``(S, L/S, ...)`` sharded over ``axis``.
+    ``xs``: ``(M, *microbatch_shape)`` microbatches.  ``aux``: pytree with
+    ``(M, ...)`` leaves (labels, masks, ...), consumed by ``loss_fn``.
+
+    Returns ``((loss_sum, count), grads)`` where ``grads`` is float32,
+    stage-stacked and sharded exactly like ``stage_params`` — equal to the
+    gradient of the summed sequential loss.
+    """
+    if schedule not in ("1f1b", "gpipe"):
+        raise ValueError(f"unknown pipeline schedule {schedule!r}")
+    program = _pipeline_train_program(mesh, fn, loss_fn, axis, schedule)
+    return program(stage_params, xs, aux)
+
+
+def _sched_1f1b(S: int, M: int, s, t):
+    """(fwd_mb, fwd_ok, bwd_mb, bwd_ok) for stage ``s`` at tick ``t``.
+
+    Warmup: stage ``s`` forwards microbatches ``m < S - s`` at ticks
+    ``s + m``; steady state forwards at ``s + 2m`` and backwards microbatch
+    ``k`` at ``2S - 1 - s + 2k`` (one tick after stage ``s+1``'s backward,
+    so the cotangent hop is consumed the tick it arrives)."""
+    w = S - s  # in-flight bound for this stage == its warmup depth
+    warm_m = t - s
+    is_warm = (warm_m >= 0) & (warm_m < jnp.minimum(w, M))
+    steady_m = (t - s) // 2
+    is_steady = (
+        ((t - s) % 2 == 0) & (steady_m >= w) & (steady_m < M)
+    )
+    fwd_mb = jnp.where(is_warm, warm_m, steady_m)
+    fwd_ok = is_warm | is_steady
+    b = t - (2 * S - 1 - s)
+    bwd_ok = (b >= 0) & (b % 2 == 0) & (b // 2 < M)
+    return fwd_mb, fwd_ok, b // 2, bwd_ok
+
+
+def _sched_gpipe(S: int, M: int, s, t):
+    """GPipe on the same clock: forward sweep then mirrored backward sweep."""
+    fwd_mb = t - s
+    fwd_ok = (fwd_mb >= 0) & (fwd_mb < M)
+    b = t - (M + S - 1) - (S - 1 - s)
+    bwd_ok = (b >= 0) & (b < M)
+    return fwd_mb, fwd_ok, b, bwd_ok
+
+
+@functools.lru_cache(maxsize=32)
+def _pipeline_train_program(
+    mesh: jax.sharding.Mesh,
+    fn: Callable,
+    loss_fn: Callable,
+    axis: str,
+    schedule: str,
+):
+    """Jitted SPMD 1F1B/GPipe training program, memoized like
+    ``_pipeline_program`` (M is read from the traced shape)."""
+    S = mesh.shape[axis]
+    fwd_perm = [(i, (i + 1) % S) for i in range(S)]
+    bwd_perm = [(i, (i - 1) % S) for i in range(S)]
+    sched = _sched_1f1b if schedule == "1f1b" else _sched_gpipe
+
+    def spmd(local_params, xs, aux):
+        M = xs.shape[0]
+        n_slots = M if schedule == "gpipe" else min(S, M)
+        stage = jax.lax.axis_index(axis)
+        params = jax.tree.map(lambda a: a[0], local_params)
+
+        def stage_apply(p, carry):
+            def body(c, lp):
+                return fn(c, lp), None
+
+            out, _ = jax.lax.scan(body, carry, p)
+            return out
+
+        def take_mb(tree, m):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, jnp.clip(m, 0, a.shape[0] - 1), axis=0, keepdims=False
+                ),
+                tree,
+            )
+
+        def tick(carry, t):
+            fwd_msg, bwd_msg, stash, gacc, lacc, cacc = carry
+
+            # -- receive: an activation sent by stage s-1 last tick lands in
+            # the stash slot of its microbatch NOW (it may sit there for many
+            # ticks before this stage's steady-state forward consumes it)
+            pm, p_ok, _, _ = sched(S, M, stage - 1, t - 1)
+            recv = p_ok & (stage > 0)
+            stash = jax.lax.cond(
+                recv,
+                lambda st: jax.lax.dynamic_update_index_in_dim(
+                    st, fwd_msg, pm % n_slots, axis=0
+                ),
+                lambda st: st,
+                stash,
+            )
+
+            fm, f_ok, bm, b_ok = sched(S, M, stage, t)
+
+            # -- forward: stage 0 reads the global input, others their stash
+            def do_fwd(opr):
+                stash = opr
+                slot = fm % n_slots
+                x0 = take_mb(xs, fm)
+                x_in = jnp.where(
+                    stage == 0,
+                    x0,
+                    jax.lax.dynamic_index_in_dim(
+                        stash, slot, axis=0, keepdims=False
+                    ),
+                )
+                # stage 0 stashes its own input for the backward remat
+                stash = jax.lax.dynamic_update_index_in_dim(
+                    stash, x_in, slot, axis=0
+                )
+                return stage_apply(params, x_in), stash
+
+            fwd_out, stash = jax.lax.cond(
+                f_ok, do_fwd, lambda opr: (fwd_msg, opr), stash
+            )
+
+            # -- backward: remat the stage forward from the stashed input,
+            # pull the arriving cotangent (or the loss seed, on the last
+            # stage) through its VJP, accumulate float32 layer grads
+            def do_bwd(opr):
+                bwd_msg, gacc, lacc, cacc = opr
+                x_st = jax.lax.dynamic_index_in_dim(
+                    stash, bm % n_slots, axis=0, keepdims=False
+                )
+                aux_m = take_mb(aux, bm)
+
+                def last_branch(_):
+                    def head(p, x):
+                        l, c = loss_fn(stage_apply(p, x), aux_m)
+                        return l, c
+
+                    l, pull, c = jax.vjp(head, params, x_st, has_aux=True)
+                    dp, dx = pull(jnp.ones_like(l))
+                    return dp, dx, l.astype(jnp.float32), c.astype(jnp.float32)
+
+                def mid_branch(_):
+                    _, pull = jax.vjp(stage_apply, params, x_st)
+                    dp, dx = pull(bwd_msg)
+                    zero = jnp.zeros((), jnp.float32)
+                    return dp, dx, zero, zero
+
+                dp, dx, l, c = jax.lax.cond(
+                    stage == S - 1, last_branch, mid_branch, None
+                )
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, dp
+                )
+                return dx, gacc, lacc + l, cacc + c
+
+            bwd_out, gacc, lacc, cacc = jax.lax.cond(
+                b_ok, do_bwd, lambda opr: opr, (bwd_msg, gacc, lacc, cacc)
+            )
+
+            # collectives run UNCONDITIONALLY (all axis members participate);
+            # receivers only read messages their schedule marks valid
+            fwd_msg = jax.lax.ppermute(fwd_out, axis, fwd_perm)
+            bwd_msg = jax.lax.ppermute(bwd_out, axis, bwd_perm)
+            return (fwd_msg, bwd_msg, stash, gacc, lacc, cacc), None
+
+        mb_zero = jnp.zeros_like(xs[0])
+        carry0 = (
+            mb_zero,  # incoming activation
+            mb_zero,  # incoming cotangent
+            jnp.zeros((n_slots,) + xs.shape[1:], xs.dtype),  # input stash
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32),
+        )
+        T = 2 * (M + S - 1)
+        (_, _, _, gacc, lacc, cacc), _ = jax.lax.scan(
+            tick, carry0, jnp.arange(T)
+        )
+        loss = jax.lax.psum(lacc, axis)  # only the last stage contributes
+        count = jax.lax.psum(cacc, axis)
+        grads = jax.tree.map(lambda g: g[None], gacc)  # (1, L/S, ...) local
+        return (loss, count), grads
+
+    return jax.jit(
+        shard_map(
+            spmd,
+            mesh=mesh,
+            in_specs=(PartitionSpec(axis), PartitionSpec(), PartitionSpec()),
+            out_specs=((PartitionSpec(), PartitionSpec()), PartitionSpec(axis)),
+            check_rep=False,
+        )
+    )
+
+
+# ------------------------------------------------------------------ analysis
+def schedule_report(
+    n_stages: int,
+    n_micro: int,
+    microbatch_bytes: int,
+    n_virtual: int = 1,
+) -> Dict[str, float]:
+    """Analytic schedule comparison (the numbers ``train_bench`` prints).
+
+    Bubble fraction counts idle ticks per stage over the whole step; with
+    one-tick forward AND backward units both GPipe and non-interleaved 1F1B
+    idle ``2(S-1)`` of ``2(M+S-1)`` ticks — 1F1B's win is memory, not
+    bubble.  Interleaving ``v`` virtual stages per device divides the
+    per-chunk fill time, shrinking the bubble to ``(S-1)/(vM+S-1)``.
+
+    Peak stash = microbatch *inputs* a stage must hold for its backward:
+    GPipe stashes all ``M``; 1F1B at stage ``s`` holds only the ``S - s``
+    in-flight microbatches (``min(S, M)`` at stage 0).
+    """
+    S, M, v = n_stages, n_micro, n_virtual
+    if S < 1 or M < 1 or v < 1:
+        raise ValueError("n_stages, n_micro, n_virtual must be >= 1")
+    bubble = (S - 1) / (M + S - 1)
+    return {
+        "n_stages": S,
+        "n_micro": M,
+        "ticks": 2 * (M + S - 1),
+        "bubble_gpipe": bubble,
+        "bubble_1f1b": bubble,
+        "bubble_1f1b_interleaved": (S - 1) / (v * M + S - 1),
+        "peak_stash_micro_gpipe": M,
+        "peak_stash_micro_1f1b": min(S, M),
+        "peak_stash_bytes_gpipe": M * microbatch_bytes,
+        "peak_stash_bytes_1f1b": min(S, M) * microbatch_bytes,
+    }

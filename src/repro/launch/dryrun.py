@@ -315,6 +315,61 @@ def run_cell(arch_id: str, shape_name: str, mesh_kind: str, out_dir: str,
     return rec
 
 
+def run_pipeline_cells(out_dir: str, stages: int, micros) -> list:
+    """Compile the 1F1B and GPipe pipeline TRAINING programs on a ``pp``
+    mesh of fake devices and persist bubble + activation-memory artifacts
+    (same JSON-cell currency as the arch × shape × mesh grid)."""
+    import numpy as np
+
+    from repro.dist.pipeline import (
+        _pipeline_train_program,
+        schedule_report,
+        stack_stage_params,
+    )
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    S, L, D, MB, SEQ = stages, 2 * stages, 128, 4, 64
+    Ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * (D**-0.5)
+
+    def layer_fn(x, lp):
+        return jnp.tanh(x @ lp["W"])
+
+    def loss_fn(y, aux):
+        d = (y - aux["tgt"]).astype(jnp.float32)
+        return jnp.sum(d * d), jnp.float32(d.size)
+
+    mesh = Mesh(np.array(jax.devices()[:S]), ("pp",))
+    staged = jax.device_put(
+        stack_stage_params({"W": Ws}, S), NamedSharding(mesh, P("pp"))
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    records = []
+    for M in micros:
+        xs = jax.random.normal(jax.random.PRNGKey(1), (M, MB, SEQ, D))
+        aux = {"tgt": jax.random.normal(jax.random.PRNGKey(2), (M, MB, SEQ, D))}
+        rep = schedule_report(S, M, xs[0].size * xs.dtype.itemsize)
+        rec = {"kind": "pipeline", "n_stages": S, "n_micro": M,
+               "schedule_report": rep, "schedules": {}}
+        for sched in ("gpipe", "1f1b"):
+            t0 = time.time()
+            prog = _pipeline_train_program(mesh, layer_fn, loss_fn, "pp", sched)
+            compiled = prog.lower(staged, xs, aux).compile()
+            mem = compiled.memory_analysis()
+            rec["schedules"][sched] = {
+                "compile_s": round(time.time() - t0, 1),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "bubble": rep[f"bubble_{sched}"],
+                "peak_stash_bytes": rep[f"peak_stash_bytes_{sched}"],
+            }
+            print(f"[pipeline] S={S} M={M} {sched}: "
+                  f"temp={rec['schedules'][sched]['temp_bytes']:,} B "
+                  f"bubble={rec['schedules'][sched]['bubble']:.3f}", flush=True)
+        with open(os.path.join(out_dir, f"pipeline__s{S}_m{M}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        records.append(rec)
+    return records
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
@@ -327,7 +382,16 @@ def main():
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--remat", choices=["none", "full", "dots"], default=None)
     ap.add_argument("--opt", choices=["adamw", "adafactor"], default=None)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="compile 1F1B/GPipe pipeline cells instead of the arch grid")
+    ap.add_argument("--pipeline-stages", type=int, default=8)
+    ap.add_argument("--pipeline-micro", default="8,32")
     args = ap.parse_args()
+
+    if args.pipeline:
+        micros = [int(m) for m in args.pipeline_micro.split(",")]
+        run_pipeline_cells(args.out, args.pipeline_stages, micros)
+        return 0
 
     archs = ARCH_IDS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]

@@ -10,11 +10,18 @@ configs end-to-end; ``--mesh single|multi`` builds the production mesh
 dry-run for that). On a real cluster the same entrypoint runs per host
 with jax.distributed initialized by the scheduler.
 
+``--pipeline S`` switches to the pipeline-parallel trainer: the layer
+stack is split into S stages over a ``pp`` mesh axis and stepped with the
+1F1B schedule (``repro.dist.pipeline``) through the same ``train_loop`` /
+checkpoint / straggler plumbing.  On this container the S fake CPU devices
+are forced via XLA_FLAGS (the launcher re-execs itself if needed).
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
         --reduced --steps 50 --batch 4 --seq 128
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m \
         --reduced --steps 30 --compress-grads
+    PYTHONPATH=src python -m repro.launch.train --pipeline 4 --steps 30
 """
 
 from __future__ import annotations
@@ -22,6 +29,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
+import sys
 import tempfile
 import time
 
@@ -42,6 +50,100 @@ from repro.train.loop import TrainHooks, make_init_state, make_train_step, train
 from repro.train.optimizer import OptimizerConfig
 
 
+def _pipeline_main(args) -> int:
+    """Pipeline-parallel 1F1B training over a ``pp`` mesh axis.
+
+    A residual tanh layer stack learning a fixed random linear map — small
+    enough that S fake CPU devices step it quickly, real enough that the
+    whole distributed path runs: stage-stacked sharded params, per-tick
+    ppermute hops, VJP backward with f32 accumulation, optimizer update on
+    sharded state, train_loop with checkpoint + straggler hooks.  (Staging
+    the full model families' embed/head onto first/last stages is a ROADMAP
+    follow-up; the schedule itself is exercised end-to-end here.)
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.dist.pipeline import schedule_report, stack_stage_params
+    from repro.train.loop import (
+        TrainHooks,
+        make_pipeline_init_state,
+        make_pipeline_train_step,
+        train_loop,
+    )
+
+    S = args.pipeline
+    if len(jax.devices()) < S:
+        raise SystemExit(
+            f"--pipeline {S} needs >= {S} devices, have {len(jax.devices())}"
+        )
+    L, D, M = 2 * S, 64, 4  # layers, width, microbatches
+    MB, SEQ = args.batch, args.seq
+    mesh = Mesh(np.array(jax.devices()[:S]), ("pp",))
+
+    key = jax.random.PRNGKey(args.seed)
+    k_w, k_map = jax.random.split(key)
+    # residual init keeps the L-deep tanh stack near-identity at step 0
+    Ws = jax.random.normal(k_w, (L, D, D)) * (0.25 * D**-0.5)
+    target_map = jax.random.normal(k_map, (D, D)) * D**-0.5
+
+    def layer_fn(x, lp):
+        return x + jnp.tanh(x @ lp["W"])
+
+    def loss_fn(y, aux):
+        d = (y - aux["tgt"]).astype(jnp.float32)
+        return jnp.sum(d * d), jnp.float32(d.size)
+
+    staged = jax.device_put(
+        stack_stage_params({"W": Ws}, S), NamedSharding(mesh, P("pp"))
+    )
+    opt = OptimizerConfig(kind=args.opt, peak_lr=args.lr, warmup_steps=10,
+                          decay_steps=max(args.steps, 100))
+    state = make_pipeline_init_state(opt)(staged)
+    step_fn = make_pipeline_train_step(
+        mesh, layer_fn, loss_fn, opt, microbatches=M,
+        schedule=args.pipeline_schedule,
+    )
+
+    rep = schedule_report(S, M, MB * SEQ * D * 4)
+    print(f"[launch] pipeline {args.pipeline_schedule}: {S} stages x {L // S} "
+          f"layers | {M} microbatches | bubble "
+          f"{rep['bubble_' + args.pipeline_schedule]:.3f} | peak stash "
+          f"{rep['peak_stash_bytes_' + args.pipeline_schedule]:,} B/stage")
+
+    rng = np.random.default_rng(args.seed)
+
+    def batches():
+        while True:
+            x = rng.standard_normal((M * MB, SEQ, D)).astype(np.float32)
+            yield {
+                "inputs": jnp.asarray(x),
+                "aux": {"tgt": jnp.asarray(x @ np.asarray(target_map))},
+            }
+
+    work = args.workdir or tempfile.mkdtemp(prefix="repro-pp-")
+    mgr = CheckpointManager(os.path.join(work, "ckpt"), keep=3, async_save=True)
+    det = StragglerDetector()
+    losses = []
+    hooks = TrainHooks(
+        on_step=lambda s, m: losses.append(m["loss"]) or (
+            print(f"step {s:>4} | loss {m['loss']:.4f} | lr {m['lr']:.2e}")
+            if s % 10 == 0 else None
+        ),
+        on_step_time=lambda s, dt: det.record("w0", dt),
+        should_checkpoint=lambda s: s % args.ckpt_every == 0,
+        save_checkpoint=lambda s, st: mgr.save(s, st),
+    )
+    t0 = time.perf_counter()
+    state, _ = train_loop(step_fn, state, batches(), args.steps, hooks)
+    mgr.wait()
+    dt = time.perf_counter() - t0
+    print(f"[launch] {args.steps} pipeline steps in {dt:.1f}s | "
+          f"loss {losses[0]:.4f} -> {min(losses):.4f} | ckpts {mgr.steps()}")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="granite-3-2b")
@@ -57,8 +159,27 @@ def main() -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8 error-feedback gradient compression")
+    ap.add_argument("--pipeline", type=int, default=0, metavar="S",
+                    help="pipeline-parallel 1F1B trainer over S stages")
+    ap.add_argument("--pipeline-schedule", choices=["1f1b", "gpipe"],
+                    default="1f1b")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.pipeline > 1:
+        # the pp mesh needs >= S devices; XLA locks the host device count at
+        # first init, so re-exec with the flag BEFORE any jax call
+        if (
+            "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+            and os.environ.get("_REPRO_PP_REEXEC") != "1"
+        ):
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "")
+                + f" --xla_force_host_platform_device_count={args.pipeline}"
+            ).strip()
+            os.environ["_REPRO_PP_REEXEC"] = "1"
+            os.execv(sys.executable, [sys.executable] + sys.argv)
+        return _pipeline_main(args)
 
     work = args.workdir or tempfile.mkdtemp(prefix="repro-launch-")
     cfg = get_config(args.arch)

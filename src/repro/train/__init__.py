@@ -2,7 +2,14 @@
 
 from repro.train.optimizer import OptimizerConfig, global_norm, make_optimizer, make_schedule
 from repro.train.state import TrainState, state_logical_axes
-from repro.train.loop import TrainHooks, make_init_state, make_train_step, train_loop
+from repro.train.loop import (
+    TrainHooks,
+    make_init_state,
+    make_pipeline_init_state,
+    make_pipeline_train_step,
+    make_train_step,
+    train_loop,
+)
 
 __all__ = [
     "OptimizerConfig",
@@ -13,6 +20,8 @@ __all__ = [
     "state_logical_axes",
     "make_train_step",
     "make_init_state",
+    "make_pipeline_train_step",
+    "make_pipeline_init_state",
     "train_loop",
     "TrainHooks",
 ]

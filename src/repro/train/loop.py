@@ -4,8 +4,13 @@
 cluster runs: microbatched gradient accumulation (``lax.scan`` over the
 microbatch dim — mandatory for the big-vocab archs, where one 1M-token
 batch's logits would not fit), remat via the model's policy, optimizer
-update, metrics.  The host loop adds data, checkpointing, straggler/failure
-hooks — all pluggable so the FT tests can drive them.
+update, metrics.  ``make_pipeline_train_step`` is the pipeline-parallel
+twin: the same ``(state, batch) -> (state, metrics)`` contract (so
+``train_loop``, checkpointing, and the FT hooks work unchanged), but the
+loss/gradient inner loop runs the 1F1B schedule from ``repro.dist.pipeline``
+over a stage-stacked parameter tree sharded on a pipeline mesh axis.  The
+host loop adds data, checkpointing, straggler/failure hooks — all pluggable
+so the FT tests can drive them.
 """
 
 from __future__ import annotations
@@ -23,7 +28,14 @@ from repro.models.registry import ModelAPI
 from repro.train.optimizer import OptimizerConfig, make_optimizer
 from repro.train.state import TrainState
 
-__all__ = ["make_train_step", "make_init_state", "train_loop", "TrainHooks"]
+__all__ = [
+    "make_train_step",
+    "make_init_state",
+    "make_pipeline_train_step",
+    "make_pipeline_init_state",
+    "train_loop",
+    "TrainHooks",
+]
 
 
 def _loss_sum(api: ModelAPI, params, tokens, labels, loss_mask, prefix_embeds):
@@ -114,6 +126,86 @@ def make_train_step(api: ModelAPI, opt_cfg: OptimizerConfig) -> Callable:
         }
         new_state = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
         return new_state, metrics
+
+    return train_step
+
+
+# ------------------------------------------------------- pipeline parallelism
+def make_pipeline_init_state(opt_cfg: OptimizerConfig):
+    """``init_state(stage_params) -> TrainState`` for a pipeline-parallel
+    layer stack.  ``stage_params`` are the ``(S, L/S, ...)`` leaves from
+    ``repro.dist.pipeline.stack_stage_params``, already placed/sharded over
+    the pipeline mesh axis — the optimizer state inherits that sharding."""
+    init_opt, _ = make_optimizer(opt_cfg)
+
+    def init_state(stage_params) -> TrainState:
+        return TrainState(
+            params=stage_params,
+            opt=init_opt(stage_params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    return init_state
+
+
+def make_pipeline_train_step(
+    mesh,
+    layer_fn: Callable,
+    loss_fn: Callable,
+    opt_cfg: OptimizerConfig,
+    *,
+    microbatches: int,
+    axis: str = "pp",
+    schedule: str = "1f1b",
+) -> Callable:
+    """Pipeline-parallel ``(state, batch) -> (state, metrics)``.
+
+    Same contract as ``make_train_step`` so it drops into ``train_loop`` /
+    checkpointing unchanged, but the forward+backward runs the 1F1B (or
+    GPipe, for comparison) schedule over ``mesh``'s ``axis``:
+
+    - ``state.params``: stage-stacked layer tree (``(S, L/S, ...)`` leaves
+      sharded over ``axis``; build with ``stack_stage_params`` +
+      ``make_pipeline_init_state``).
+    - ``batch``: ``{"inputs": (B, ...), "aux": pytree of (B, ...)}`` —
+      reshaped internally into ``microbatches`` microbatches.
+    - ``layer_fn(carry, layer_params) -> carry`` is one layer;
+      ``loss_fn(y_mb, aux_mb) -> (loss_sum, count)`` scores the last
+      stage's output (token-mean is formed here, like ``make_train_step``).
+    """
+    from repro.dist.pipeline import pipeline_value_and_grad
+
+    _, opt_update = make_optimizer(opt_cfg)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        inputs = batch["inputs"]
+        B, M = inputs.shape[0], microbatches
+        assert B % M == 0, f"global batch {B} not divisible by microbatches {M}"
+
+        def mb(x):
+            return x.reshape((M, B // M) + x.shape[1:])
+
+        (nll, count), grads = pipeline_value_and_grad(
+            mesh,
+            layer_fn,
+            loss_fn,
+            state.params,
+            mb(inputs),
+            jax.tree.map(mb, batch["aux"]),
+            axis=axis,
+            schedule=schedule,
+        )
+        # token-mean gradients & loss, exactly like make_train_step
+        grads = jax.tree.map(lambda g: g / count, grads)
+        loss = nll / count
+        new_params, new_opt, stats = opt_update(grads, state.opt, state.params, state.step)
+        metrics = {
+            "loss": loss,
+            "tokens": count,
+            "grad_norm": stats["grad_norm"],
+            "lr": stats["lr"],
+        }
+        return state.replace(params=new_params, opt=new_opt, step=state.step + 1), metrics
 
     return train_step
 

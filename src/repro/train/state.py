@@ -18,6 +18,12 @@ class TrainState:
     opt: Any
     step: jax.Array
 
+    def replace(self, **updates: Any) -> "TrainState":
+        """Functional update (flax-style), e.g. ``state.replace(step=s)``."""
+        import dataclasses
+
+        return dataclasses.replace(self, **updates)
+
     def tree_flatten(self):
         return (self.params, self.opt, self.step), None
 

@@ -13,7 +13,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import NoCache, ScanCache
 from repro.core.cache import DifferentialCache
-from repro.core.columnar import Table
+from repro.core.columnar import ChunkedTable, Table
 from repro.core.intervals import IntervalSet
 from repro.core.planner import ResultCachingExecutor, ScanExecutor
 from repro.lake.catalog import Catalog
@@ -268,6 +268,74 @@ def test_predicate_post_filter(env):
     # predicate doesn't poison the cache: unfiltered scan still correct
     out2 = ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 100)))
     assert rows_of(out2, ["c3"]) == reference_rows(store, catalog, ["c3"], IntervalSet.of((0, 100)))
+
+
+# ------------------------------------------------- cross-snapshot merging
+def test_merge_respects_snapshots_out_of_order_append(env):
+    """Elements cached under different snapshots may only merge their
+    *usable* windows: an element predating an out-of-order append must not
+    donate its (now row-incomplete) window to a merged element whose pins
+    include the new fragment — that made the missing rows look valid."""
+    store, catalog = env
+    cache = DifferentialCache()
+    ex = ScanExecutor(store, catalog, cache=cache)
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 128)))  # E1 @ snapshot 1
+
+    # out-of-order append: NEW rows whose keys land inside E1's window
+    catalog.append(
+        "ns.raw",
+        Table(
+            {
+                "eventTime": np.arange(50, 60, dtype=np.int64),
+                "c1": np.arange(10, dtype=np.float64) + 5000.0,
+                "c2": np.zeros(10),
+                "c3": np.zeros(10, dtype=np.int64),
+            }
+        ),
+    )
+    # overlapping scan under snapshot 2: fetches the residual (which pins
+    # the new fragment) and merges it with E1
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((32, 256)))
+
+    got = rows_of(ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 256))), ["c1"])
+    want = reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 256)))
+    assert got == want, "merged element must include the appended rows"
+
+
+def test_merge_after_overwrite_drops_stale_rows(env):
+    """After an overwrite, merging an old element with a fresh one must not
+    carry the old element's dropped-fragment rows into the merged data."""
+    store, catalog = env
+    cache = DifferentialCache()
+    ex = ScanExecutor(store, catalog, cache=cache)
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 128)))  # E1 @ snapshot 1
+
+    catalog.overwrite_range(
+        "ns.raw",
+        0,
+        64,
+        Table(
+            {
+                "eventTime": np.arange(0, 64, dtype=np.int64),
+                "c1": -(np.arange(64, dtype=np.float64) + 1000.0),
+                "c2": np.zeros(64),
+                "c3": np.zeros(64, dtype=np.int64),
+            }
+        ),
+    )
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 256)))  # residual + merge
+
+    # every element must reproduce the reference rows over its FULL claimed
+    # window — stale rows inside merged data fail this even when the serving
+    # path happens to mask them
+    cols = ["c1", "eventTime"]
+    for e in cache.elements("ns.raw"):
+        chunks = e.slice_window(e.window, cols)
+        got = rows_of(ChunkedTable(chunks), cols) if chunks else set()
+        want = reference_rows(store, catalog, cols, e.window)
+        assert got == want
+    got = rows_of(ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 256))), ["c1"])
+    assert got == reference_rows(store, catalog, ["c1"], IntervalSet.of((0, 256)))
 
 
 # --------------------------------------------------------- property testing

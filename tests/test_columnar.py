@@ -37,6 +37,18 @@ def test_columns_are_immutable():
         t.column("x")[0] = 42.0
 
 
+def test_caller_array_stays_writable():
+    """Constructing a Table must not flip the writeable flag on the CALLER's
+    array — only the Table's internal view is frozen (still zero-copy)."""
+    arr = np.arange(8, dtype=np.float64)
+    t = Table({"x": arr})
+    assert arr.flags.writeable, "caller's array was mutated in place"
+    assert not t.column("x").flags.writeable
+    assert np.shares_memory(t.column("x"), arr)  # still a zero-copy view
+    with pytest.raises(ValueError):
+        t.column("x")[0] = 1.0
+
+
 def test_k_consumers_share_one_buffer():
     # the paper's Arrow-view argument: k children of one scan share memory
     t = make_table(1000)

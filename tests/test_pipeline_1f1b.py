@@ -1,0 +1,200 @@
+"""1F1B pipeline-parallel training: numerics vs the sequential layer stack,
+activation-memory bounds vs GPipe, and composition with ``train_loop``.
+
+The multi-device parts run in a subprocess because the pipeline mesh needs
+``XLA_FLAGS=--xla_force_host_platform_device_count`` set before jax
+initializes (same pattern as ``test_dist_extras``); CI also invokes this
+file directly on a multi-device CPU mesh.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist.pipeline import schedule_report
+
+_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.dist.pipeline import (
+        _pipeline_train_program, pipeline_value_and_grad,
+        stack_stage_params, unstack_stage_params,
+    )
+    from repro.train.loop import (
+        make_pipeline_init_state, make_pipeline_train_step, train_loop,
+    )
+    from repro.train.optimizer import OptimizerConfig, make_optimizer
+    from repro.train.state import TrainState
+
+    S_STAGES, L, D = 4, 8, 16
+    M, MB, SEQ = 6, 2, 4
+
+    Ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * (D ** -0.5)
+
+    def layer_fn(x, lp):
+        return jnp.tanh(x @ lp["W"])
+
+    def loss_fn(y, aux):
+        d = (y - aux["tgt"]).astype(jnp.float32)
+        return jnp.sum(d * d), jnp.float32(d.size)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, SEQ, D))
+    tgt = jax.random.normal(jax.random.PRNGKey(2), (M, MB, SEQ, D))
+
+    # ---- sequential reference: same microbatch-ordered f32 accumulation
+    def seq_loss(p, xm, tm):
+        def body(c, W):
+            return jnp.tanh(c @ W), None
+        out, _ = jax.lax.scan(body, xm, p)
+        d = (out - tm).astype(jnp.float32)
+        return jnp.sum(d * d)
+
+    vg = jax.value_and_grad(seq_loss)
+    g_ref = jnp.zeros_like(Ws)
+    l_ref = jnp.zeros((), jnp.float32)
+    for m in range(M):
+        l, g = vg(Ws, x[m], tgt[m])
+        l_ref, g_ref = l_ref + l, g_ref + g.astype(jnp.float32)
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("pp",))
+    staged = jax.device_put(
+        stack_stage_params({"W": Ws}, S_STAGES), NamedSharding(mesh, P("pp"))
+    )
+
+    # ---- loss + grads equal the sequential stack, for BOTH schedules
+    for sched in ("1f1b", "gpipe"):
+        (loss, count), grads = pipeline_value_and_grad(
+            mesh, layer_fn, loss_fn, staged, x, {"tgt": tgt}, schedule=sched
+        )
+        np.testing.assert_allclose(float(loss), float(l_ref), rtol=1e-6)
+        assert float(count) == M * MB * SEQ * D
+        np.testing.assert_allclose(
+            np.asarray(unstack_stage_params(grads)["W"]), np.asarray(g_ref),
+            rtol=1e-5, atol=1e-7,
+        )
+    print("NUMERICS_OK")
+
+    # ---- M < S degenerate case still correct
+    (l2, _), _ = pipeline_value_and_grad(
+        mesh, layer_fn, loss_fn, staged, x[:2], {"tgt": tgt[:2]}
+    )
+    want2 = sum(float(vg(Ws, x[m], tgt[m])[0]) for m in range(2))
+    np.testing.assert_allclose(float(l2), want2, rtol=1e-6)
+    print("SMALL_M_OK")
+
+    # ---- 1F1B's activation stash is bounded by in-flight microbatches:
+    # compiled temp memory must not exceed GPipe's (M-slot stash) program
+    MEM_M = 12
+    xm = jax.random.normal(jax.random.PRNGKey(3), (MEM_M, MB, SEQ, D))
+    tm = jax.random.normal(jax.random.PRNGKey(4), (MEM_M, MB, SEQ, D))
+    temps = {}
+    for sched in ("1f1b", "gpipe"):
+        prog = _pipeline_train_program(mesh, layer_fn, loss_fn, "pp", sched)
+        mem = prog.lower(staged, xm, {"tgt": tm}).compile().memory_analysis()
+        temps[sched] = int(mem.temp_size_in_bytes)
+    print("temps", temps)
+    assert temps["1f1b"] < temps["gpipe"], temps
+    print("MEMORY_OK")
+
+    # ---- make_pipeline_train_step composes with train_loop and matches a
+    # sequential train step exactly (params after N optimizer steps)
+    B = M * MB  # global batch
+    opt = OptimizerConfig(kind="adamw", peak_lr=1e-2, warmup_steps=2)
+    state = make_pipeline_init_state(opt)(staged)
+    step = make_pipeline_train_step(
+        mesh, layer_fn, loss_fn, opt, microbatches=M
+    )
+
+    def batch_stream(seed, n):
+        rng = np.random.default_rng(seed)
+        for _ in range(n):
+            yield {
+                "inputs": jnp.asarray(
+                    rng.standard_normal((B, SEQ, D)), jnp.float32
+                ),
+                "aux": {"tgt": jnp.asarray(
+                    rng.standard_normal((B, SEQ, D)), jnp.float32
+                )},
+            }
+
+    N_STEPS = 6
+    state, hist = train_loop(step, state, batch_stream(7, N_STEPS), N_STEPS)
+    assert int(state.step) == N_STEPS
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+    _, opt_update = make_optimizer(opt)
+    ref = TrainState(
+        params={"W": Ws},
+        opt=make_optimizer(opt)[0]({"W": Ws}),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+    def seq_step(st, batch):
+        xs = batch["inputs"].reshape((M, MB, SEQ, D))
+        ts = batch["aux"]["tgt"].reshape((M, MB, SEQ, D))
+        vgm = jax.value_and_grad(
+            lambda p, xm, tm: seq_loss(p["W"], xm, tm)
+        )
+        g = {"W": jnp.zeros(Ws.shape, jnp.float32)}
+        nll = jnp.zeros((), jnp.float32)
+        cnt = jnp.float32(M * MB * SEQ * D)
+        for m in range(M):
+            l, gm = vgm(st.params, xs[m], ts[m])
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g, gm)
+            nll = nll + l
+        g = jax.tree.map(lambda a: a / cnt, g)
+        newp, newo, _ = opt_update(g, st.opt, st.params, st.step)
+        return TrainState(params=newp, opt=newo, step=st.step + 1)
+
+    for batch in batch_stream(7, N_STEPS):
+        ref = seq_step(ref, batch)
+
+    np.testing.assert_allclose(
+        np.asarray(unstack_stage_params(state.params)["W"]),
+        np.asarray(ref.params["W"]),
+        rtol=1e-5, atol=1e-6,
+    )
+    print("TRAIN_STEP_OK")
+    """
+)
+
+
+def test_1f1b_subprocess_suite():
+    """One subprocess run covers numerics, M<S, compiled memory, train step."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _BODY],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)), timeout=600,
+    )
+    for want in ("NUMERICS_OK", "SMALL_M_OK", "MEMORY_OK", "TRAIN_STEP_OK"):
+        assert want in out.stdout, (out.stdout[-2000:], out.stderr[-3000:])
+
+
+# ----------------------------------------------------- analytic schedule math
+def test_schedule_report_memory_and_bubble():
+    r = schedule_report(n_stages=4, n_micro=16, microbatch_bytes=1 << 20)
+    # 1F1B stashes only in-flight microbatches: S slots vs GPipe's M
+    assert r["peak_stash_micro_1f1b"] == 4
+    assert r["peak_stash_micro_gpipe"] == 16
+    assert r["peak_stash_bytes_1f1b"] <= r["peak_stash_bytes_gpipe"]
+    # non-interleaved 1F1B keeps GPipe's bubble; interleaving shrinks it
+    assert r["bubble_1f1b"] == pytest.approx(3 / 19)
+    r2 = schedule_report(4, 16, 1 << 20, n_virtual=2)
+    assert r2["bubble_1f1b_interleaved"] < r["bubble_1f1b"]
+
+
+def test_schedule_report_degenerate_cases():
+    r = schedule_report(n_stages=1, n_micro=4, microbatch_bytes=10)
+    assert r["bubble_1f1b"] == 0.0
+    assert r["peak_stash_micro_1f1b"] == 1
+    r = schedule_report(n_stages=8, n_micro=2, microbatch_bytes=10)
+    assert r["peak_stash_micro_1f1b"] == 2  # M < S: bounded by M
+    with pytest.raises(ValueError):
+        schedule_report(0, 4, 10)

@@ -1,0 +1,107 @@
+"""Regression tests for ScanExecutor / ResultCachingExecutor edge cases:
+sorted output when the sort key is projected away, and result-cache memo
+keys surviving predicate garbage collection."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import NoCache
+from repro.core.cache import DifferentialCache
+from repro.core.columnar import Table
+from repro.core.intervals import IntervalSet
+from repro.core.planner import ResultCachingExecutor, ScanExecutor
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+
+SCHEMA = {"eventTime": "<i8", "c1": "<f8", "c3": "<i8"}
+
+
+@pytest.fixture()
+def env(tmp_path):
+    store = ObjectStore(str(tmp_path / "s3"))
+    catalog = Catalog(store, rows_per_fragment=64)
+    catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+    rng = np.random.default_rng(0)
+    catalog.append(
+        "ns.raw",
+        Table(
+            {
+                "eventTime": np.arange(1000, dtype=np.int64),
+                "c1": rng.standard_normal(1000),
+                "c3": rng.integers(0, 100, 1000).astype(np.int64),
+            }
+        ),
+    )
+    return store, catalog
+
+
+# ---------------------------------------------------------------- sorted_output
+def test_sorted_output_without_sort_key_in_projection(env):
+    """``sorted_output=True`` must hold even when ``eventTime`` is not among
+    the projected columns: sort on the physical columns (which always carry
+    the key), THEN project it away — silently returning cache-hit chunks in
+    plan order is not an option."""
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    # prime the cache with a mid-table window so the later spanning scan
+    # assembles out-of-order chunks (cache hit first, residual after)
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((500, 600)))
+    out = ex.scan("ns.raw", ["c1"], IntervalSet.of((0, 1000)), sorted_output=True)
+    assert out.column_names == ("c1",)  # key still projected away
+
+    ref = ScanExecutor(store, catalog, cache=NoCache())
+    want = (
+        ref.scan("ns.raw", ["c1", "eventTime"], IntervalSet.of((0, 1000)))
+        .combine()
+        .sort_by("eventTime")
+        .column("c1")
+    )
+    np.testing.assert_array_equal(out.combine().column("c1"), want)
+
+
+def test_sorted_output_with_sort_key_still_sorted(env):
+    store, catalog = env
+    ex = ScanExecutor(store, catalog, cache=DifferentialCache())
+    ex.scan("ns.raw", ["c1"], IntervalSet.of((300, 400)))
+    out = ex.scan(
+        "ns.raw", ["c1", "eventTime"], IntervalSet.of((0, 700)), sorted_output=True
+    )
+    keys = out.combine().column("eventTime")
+    assert np.all(np.diff(keys) >= 0)
+
+
+# ------------------------------------------------------------- result cache
+def test_result_cache_predicate_id_reuse_no_false_hit(env):
+    """The memo key must hold the predicate OBJECT: keying on ``id()`` gave
+    false hits when CPython recycled a collected predicate's address for
+    the next one."""
+    store, catalog = env
+    ex = ResultCachingExecutor(store, catalog)
+
+    def run(thresh):
+        # fresh predicate each call; the previous one is garbage by then, so
+        # with an id() key CPython routinely hands the new closure the SAME
+        # address -> false memo hit serving the previous threshold's rows
+        def pred(t):
+            return t.column("c3") >= thresh
+
+        out = ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 1000)), predicate=pred)
+        return np.asarray(out.combine().column("c3"))
+
+    ref = ScanExecutor(store, catalog, cache=NoCache())
+    full = ref.scan("ns.raw", ["c3"], IntervalSet.of((0, 1000))).combine().column("c3")
+    for thresh in (10, 50, 90, 50):
+        got = run(thresh)
+        want = np.sort(full[full >= thresh])
+        np.testing.assert_array_equal(np.sort(got), want)
+
+
+def test_result_cache_same_predicate_object_still_hits(env):
+    store, catalog = env
+    ex = ResultCachingExecutor(store, catalog)
+    pred = lambda t: t.column("c3") >= 50
+    ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 1000)), predicate=pred)
+    before = store.stats.bytes_read
+    ex.scan("ns.raw", ["c3"], IntervalSet.of((0, 1000)), predicate=pred)
+    assert ex.hits == 1
+    assert store.stats.bytes_read == before

@@ -1,0 +1,181 @@
+"""BENCH_3: cold vs warm iteration cost of the incremental re-execution
+engine (the tentpole claim: warm iteration cost is proportional to the EDIT,
+not the pipeline).
+
+Drives ``benchmarks.workloads.iteration_edits`` — a scripted loop of window
+edits, an upstream append, a feature add, and a code edit over a 4-stage
+rowwise pipeline — twice:
+
+- **warm**: one persistent :class:`Workspace` across all iterations (scan
+  cache + differential model store carry over);
+- **cold**: a fresh workspace per iteration, replaying the same catalog
+  mutations (what every run costs without the differential stores).
+
+Emits ``BENCH_3.json`` with per-iteration and total ``bytes_from_store`` /
+``rows_to_user_fns`` / wall time, plus the warm:cold ratios the acceptance
+criteria gate on (≥5×).  ``--check`` exits non-zero when a ratio is under
+5× — the CI smoke step.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench3_incremental [--rows N] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.workloads import iteration_edits, iteration_project, write_events
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_3.json"
+)
+
+
+def _ledger(res, wall: float) -> Dict[str, float]:
+    return {
+        "bytes_from_store": int(res.bytes_from_store),
+        "rows_to_user_fns": int(res.rows_to_user_fns),
+        "bytes_from_model_cache": int(res.bytes_from_model_cache),
+        "bytes_from_scan_cache": int(res.bytes_from_cache),
+        "wall_seconds": round(wall, 6),
+    }
+
+
+def run(rows: int = 20_000) -> Dict:
+    from repro.pipeline.executor import Workspace
+
+    edits = iteration_edits(rows)
+    iterations: List[Dict] = []
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # -- warm: one workspace, caches persist across the whole loop
+        warm_ws = Workspace(os.path.join(tmp, "warm"), rows_per_fragment=2048)
+        write_events(warm_ws.catalog, rows)
+        warm_runs = []
+        for label, kwargs, mutate in edits:
+            if mutate is not None:
+                mutate(warm_ws.catalog)
+            t0 = time.perf_counter()
+            res = warm_ws.run(iteration_project(**kwargs))
+            warm_runs.append((label, _ledger(res, time.perf_counter() - t0), res))
+
+        # -- cold: fresh workspace per iteration, same mutation history
+        mutations_so_far = []
+        for idx, (label, kwargs, mutate) in enumerate(edits):
+            if mutate is not None:
+                mutations_so_far.append(mutate)
+            ws = Workspace(os.path.join(tmp, f"cold-{idx}"), rows_per_fragment=2048)
+            write_events(ws.catalog, rows)
+            for m in mutations_so_far:
+                m(ws.catalog)
+            t0 = time.perf_counter()
+            res = ws.run(iteration_project(**kwargs))
+            cold = _ledger(res, time.perf_counter() - t0)
+
+            wlabel, warm, wres = warm_runs[idx]
+            assert wlabel == label
+            # outputs must be bitwise-equal, warm or cold — the engine's
+            # correctness contract (unique keys make the comparison exact)
+            for name, table in res.outputs.items():
+                wtab = wres.outputs[name]
+                assert table.column_names == wtab.column_names, (label, name)
+                for col in table.column_names:
+                    np.testing.assert_array_equal(
+                        table.column(col), wtab.column(col), err_msg=f"{label}:{name}:{col}"
+                    )
+            iterations.append({"label": label, "warm": warm, "cold": cold})
+
+    # totals EXCLUDE iteration 0: its "warm" run is itself cold (first touch)
+    def total(side: str, key: str) -> float:
+        return sum(it[side][key] for it in iterations[1:])
+
+    totals = {
+        "warm_bytes_from_store": total("warm", "bytes_from_store"),
+        "cold_bytes_from_store": total("cold", "bytes_from_store"),
+        "warm_rows_to_user_fns": total("warm", "rows_to_user_fns"),
+        "cold_rows_to_user_fns": total("cold", "rows_to_user_fns"),
+        "warm_wall_seconds": round(total("warm", "wall_seconds"), 6),
+        "cold_wall_seconds": round(total("cold", "wall_seconds"), 6),
+    }
+    totals["bytes_ratio"] = round(
+        totals["cold_bytes_from_store"] / max(totals["warm_bytes_from_store"], 1), 2
+    )
+    totals["rows_ratio"] = round(
+        totals["cold_rows_to_user_fns"] / max(totals["warm_rows_to_user_fns"], 1), 2
+    )
+    return {
+        "workload": "iteration-loop",
+        "rows": rows,
+        "stages": 4,
+        "iterations": iterations,
+        "totals": totals,
+    }
+
+
+def format_table(result: Dict) -> str:
+    lines = [
+        "| edit | warm store B | cold store B | warm fn rows | cold fn rows |",
+        "|---|---|---|---|---|",
+    ]
+    for it in result["iterations"]:
+        lines.append(
+            "| {label} | {wb:,} | {cb:,} | {wr:,} | {cr:,} |".format(
+                label=it["label"],
+                wb=it["warm"]["bytes_from_store"],
+                cb=it["cold"]["bytes_from_store"],
+                wr=it["warm"]["rows_to_user_fns"],
+                cr=it["cold"]["rows_to_user_fns"],
+            )
+        )
+    t = result["totals"]
+    lines.append(
+        f"| **total (warm iters)** | {t['warm_bytes_from_store']:,} | "
+        f"{t['cold_bytes_from_store']:,} | {t['warm_rows_to_user_fns']:,} | "
+        f"{t['cold_rows_to_user_fns']:,} |"
+    )
+    lines.append(
+        f"\nbytes ratio (cold/warm): {t['bytes_ratio']}×   "
+        f"rows ratio: {t['rows_ratio']}×   "
+        f"wall: {t['cold_wall_seconds']:.2f}s cold vs {t['warm_wall_seconds']:.2f}s warm"
+    )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless bytes and rows ratios are both >= 5x",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        t = result["totals"]
+        if t["bytes_ratio"] < 5 or t["rows_ratio"] < 5:
+            print(
+                f"FAIL: ratios under 5x (bytes {t['bytes_ratio']}x, "
+                f"rows {t['rows_ratio']}x)"
+            )
+            return 1
+        print(f"OK: bytes {t['bytes_ratio']}x, rows {t['rows_ratio']}x (>= 5x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

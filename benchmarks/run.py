@@ -42,6 +42,15 @@ def main() -> int:
     print(t2.format_table(r2))
     artifacts["table2"] = r2
 
+    _section("BENCH 3 — incremental re-execution: cold vs warm iteration loop")
+    from benchmarks import bench3_incremental as b3
+
+    r3i = b3.run(rows=20_000 if not args.full else 200_000)
+    print(b3.format_table(r3i))
+    artifacts["bench3"] = r3i["totals"]
+    with open(os.path.join(OUT_DIR, "BENCH_3.json"), "w") as f:
+        json.dump(r3i, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

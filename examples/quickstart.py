@@ -9,6 +9,11 @@ demonstrating the three §III-A behaviours:
   2. a *different* scan (fewer columns, wider window) pays only the delta,
   3. the re-run with a narrower window is served entirely from cache.
 
+Here the DAG's model nodes recompute on every run (the default,
+``incremental="none"``); see ``examples/incremental_iteration.py`` for the
+engine that caches *intermediate model outputs* differentially too, making
+warm iteration cost proportional to the edit.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 

@@ -24,13 +24,24 @@ Design choices reproduced exactly:
    are combined (paper: "cache elements with overlapping or adjacent filters
    can then be combined"), keeping the element count small so future scans
    need small UNIONs.
+
+The greedy window-subtraction machinery is NOT scan-specific: any node whose
+output is addressable by `(signature, sort-key window)` can be cached
+differentially.  :class:`DifferentialStore` is that generalization — elements
+are grouped by an arbitrary hashable *signature* (what identifies the
+computation: for table scans the table name, for pipeline model nodes the
+`(fn code hash, runtime, upstream signatures)` digest), and planning/insertion
+work per signature group exactly as Listing 3 works per table.
+:class:`DifferentialCache` is the table-scan specialization the paper
+describes; the pipeline executor uses a second `DifferentialStore` to cache
+intermediate `@model` outputs (see ``repro.pipeline.executor``).
 """
 
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,9 +50,23 @@ from repro.core.intervals import Interval, IntervalSet
 from repro.core.scan import Scan, scan_cost_bytes
 from repro.lake.catalog import Snapshot
 
-__all__ = ["CacheElement", "CachePlan", "CacheHit", "DifferentialCache"]
+__all__ = [
+    "CacheElement",
+    "CachePlan",
+    "CacheHit",
+    "DifferentialStore",
+    "DifferentialCache",
+    "FragmentPin",
+    "pins_for",
+    "snapshot_usable_window",
+]
 
 _ID = itertools.count()
+
+# Validity policy: which part of an element's window may still be served.
+# Scans check fragment pins against a snapshot; model nodes whose staleness is
+# fully encoded in the signature use the default (the whole window).
+UsableFn = Callable[["CacheElement"], IntervalSet]
 
 
 @dataclass(frozen=True)
@@ -61,13 +86,18 @@ class FragmentPin:
 @dataclass
 class CacheElement:
     elem_id: int
-    table: str
+    table: str  # provenance label: source table (scans) / pin table (models)
     sort_key: str
     columns: Tuple[str, ...]  # physical columns (includes sort key)
     window: IntervalSet
     pins: Tuple[FragmentPin, ...]
     data: Table  # sorted by sort_key; includes sort_key column
     last_used: int = 0
+    signature: Hashable = None  # group key in the DifferentialStore
+
+    def __post_init__(self) -> None:
+        if self.signature is None:
+            self.signature = self.table
 
     @property
     def nbytes(self) -> int:
@@ -99,7 +129,7 @@ class CacheHit:
 @dataclass
 class CachePlan:
     """Output of the greedy planner: which windows come from which cached
-    elements, and what residual must be fetched from object storage."""
+    elements, and what residual must be fetched/recomputed."""
 
     hits: List[CacheHit]
     residual: IntervalSet
@@ -115,12 +145,62 @@ class CachePlan:
         return self.baseline_cost_bytes - self.residual_cost_bytes
 
 
-class DifferentialCache:
-    """Greedy differential scan cache with LRU byte-budget eviction."""
+def pins_for(snapshot: Snapshot, window: IntervalSet) -> Tuple[FragmentPin, ...]:
+    """The fragment pins an element covering ``window`` under ``snapshot``
+    must carry — the single place the pin shape (inclusive ``key_max``) is
+    defined, shared by leaf-scan inserts and model-output inserts so
+    :func:`snapshot_usable_window`'s invariants cannot drift."""
+    from repro.core.scan import fragments_overlapping
+
+    return tuple(
+        FragmentPin(f.fragment_id, f.key_min, f.key_max)
+        for f in fragments_overlapping(snapshot, window)
+    )
+
+
+def snapshot_usable_window(elem: CacheElement, snapshot: Snapshot) -> IntervalSet:
+    """Differential invalidation against a snapshot (design choice 3).
+
+    Valid window = element window
+      − key ranges of element fragments *dropped* by the snapshot
+      − key ranges of snapshot fragments the element never saw.
+
+    This is the validity policy for any element whose rows were derived from
+    the fragments it pins — leaf scans, and model outputs pinning the leaf
+    fragments their residual was computed from.
+    """
+    live_ids = snapshot.fragment_ids
+    stale = IntervalSet(
+        [p.window for p in elem.pins if p.fragment_id not in live_ids]
+    )
+    unseen = IntervalSet(
+        [
+            Interval(f.key_min, f.key_max + 1)
+            for f in snapshot.fragments
+            if f.fragment_id not in elem.pin_ids
+            and elem.window.intersects(
+                IntervalSet([Interval(f.key_min, f.key_max + 1)])
+            )
+        ]
+    )
+    return elem.window.difference(stale).difference(unseen)
+
+
+class DifferentialStore:
+    """Greedy differential window store with LRU byte-budget eviction.
+
+    Elements are grouped by *signature*; within a group, :meth:`plan_window`
+    runs the paper's Listing 3 greedy subtraction and :meth:`insert_window`
+    stores a fresh residual and merges touching windows.  The store is policy-
+    free about validity: callers pass ``usable_fn`` (e.g. fragment-pin checks
+    against the current snapshot) and ``cost_fn`` (the `compute_cost` bound of
+    Listing 3) per call, so one store serves both table scans and
+    intermediate model outputs.
+    """
 
     def __init__(self, max_bytes: Optional[int] = None):
         self.max_bytes = max_bytes
-        self._elements: Dict[str, List[CacheElement]] = {}
+        self._elements: Dict[Hashable, List[CacheElement]] = {}
         self._clock = 0
         # observability counters (surface in benchmarks / EXPERIMENTS.md)
         self.lookups = 0
@@ -129,63 +209,46 @@ class DifferentialCache:
         self.evictions = 0
 
     # -- public API ----------------------------------------------------------
-    def elements(self, table: Optional[str] = None) -> List[CacheElement]:
-        if table is not None:
-            return list(self._elements.get(table, ()))
+    def elements(self, signature: Optional[Hashable] = None) -> List[CacheElement]:
+        if signature is not None:
+            return list(self._elements.get(signature, ()))
         return [e for lst in self._elements.values() for e in lst]
 
     @property
     def nbytes(self) -> int:
         return sum(e.nbytes for e in self.elements())
 
-    def usable_window(self, elem: CacheElement, snapshot: Snapshot) -> IntervalSet:
-        """Differential invalidation (design choice 3).
-
-        Valid window = element window
-          − key ranges of element fragments *dropped* by the snapshot
-          − key ranges of snapshot fragments the element never saw.
-        """
-        live_ids = snapshot.fragment_ids
-        stale = IntervalSet(
-            [p.window for p in elem.pins if p.fragment_id not in live_ids]
-        )
-        unseen = IntervalSet(
-            [
-                Interval(f.key_min, f.key_max + 1)
-                for f in snapshot.fragments
-                if f.fragment_id not in elem.pin_ids
-                and not elem.window.intersect(
-                    IntervalSet([Interval(f.key_min, f.key_max + 1)])
-                ).empty
-            ]
-        )
-        return elem.window.difference(stale).difference(unseen)
-
-    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str) -> CachePlan:
+    def plan_window(
+        self,
+        signature: Hashable,
+        window: IntervalSet,
+        columns: Sequence[str],
+        cost_fn: Callable[[IntervalSet], int],
+        usable_fn: Optional[UsableFn] = None,
+    ) -> CachePlan:
         """Paper Listing 3, iterated to a fixpoint.
 
-        Candidates: same table, projections ⊇ scan projections, non-empty
+        Candidates: same signature, columns ⊇ requested columns, non-empty
         usable window.  Each round picks the element whose subtraction lowers
-        the residual byte-cost the most (`compute_cost`); rounds stop when no
+        the residual cost the most (`compute_cost`); rounds stop when no
         element reduces cost — the greedy choice keeps the element count (and
         hence the final UNION) small, exactly the paper's argument.
         """
         self.lookups += 1
         self._clock += 1
-        phys = scan.physical_columns(sort_key)
-        need = set(phys)
-        baseline = scan_cost_bytes(snapshot, scan.window, phys)
+        need = set(columns)
+        baseline = cost_fn(window)
 
         candidates: List[Tuple[CacheElement, IntervalSet]] = []
-        for e in self._elements.get(scan.table, ()):  # pre-filter (paper: namespace/table/projection match)
+        for e in self._elements.get(signature, ()):  # pre-filter (paper: namespace/table/projection match)
             if not need.issubset(set(e.columns)):
                 continue
-            usable = self.usable_window(e, snapshot)
+            usable = usable_fn(e) if usable_fn is not None else e.window
             if usable.empty:
                 continue
             candidates.append((e, usable))
 
-        remaining = scan.window
+        remaining = window
         cost = baseline
         hits: List[CacheHit] = []
         used_ids: set = set()
@@ -198,7 +261,7 @@ class DifferentialCache:
                 if covered.empty:
                     continue
                 new_remaining = remaining.difference(covered)
-                new_cost = scan_cost_bytes(snapshot, new_remaining, phys)
+                new_cost = cost_fn(new_remaining)
                 if new_cost < cost and (best is None or new_cost < best[3]):
                     best = (e, covered, new_remaining, new_cost)
             if best is None:
@@ -221,44 +284,48 @@ class DifferentialCache:
             baseline_cost_bytes=baseline,
         )
 
-    def insert(
+    def insert_window(
         self,
-        scan: Scan,
-        snapshot: Snapshot,
+        signature: Hashable,
+        table: str,
         sort_key: str,
         window: IntervalSet,
         data: Table,
+        pins: Tuple[FragmentPin, ...] = (),
+        usable_fn: Optional[UsableFn] = None,
     ) -> Optional[CacheElement]:
-        """Store a freshly fetched residual as a new element, then merge."""
+        """Store a freshly computed residual as a new element, then merge
+        touching same-column windows within the signature group."""
         if window.empty:
             return None
         self._clock += 1
-        from repro.core.scan import fragments_overlapping
-
-        pins = tuple(
-            FragmentPin(f.fragment_id, f.key_min, f.key_max)
-            for f in fragments_overlapping(snapshot, window)
-        )
         elem = CacheElement(
             elem_id=next(_ID),
-            table=scan.table,
+            table=table,
             sort_key=sort_key,
             columns=tuple(sorted(data.column_names)),
             window=window,
             pins=pins,
             data=data,
             last_used=self._clock,
+            signature=signature,
         )
-        self._elements.setdefault(scan.table, []).append(elem)
-        self._merge_table(scan.table, snapshot)
+        self._elements.setdefault(signature, []).append(elem)
+        self._merge_group(signature, usable_fn)
         self._evict()
         return elem
 
+    def invalidate(self, signature: Hashable) -> None:
+        self._elements.pop(signature, None)
+
+    def clear(self) -> None:
+        self._elements.clear()
+
     # -- internals -----------------------------------------------------------
-    def _merge_table(self, table: str, snapshot: Snapshot) -> None:
+    def _merge_group(self, signature: Hashable, usable_fn: Optional[UsableFn]) -> None:
         """Combine elements with identical projections and touching windows
-        (validity re-checked against ``snapshot`` so merged rows agree)."""
-        elems = self._elements.get(table, [])
+        (validity re-checked through ``usable_fn`` so merged rows agree)."""
+        elems = self._elements.get(signature, [])
         by_cols: Dict[Tuple[str, ...], List[CacheElement]] = {}
         for e in elems:
             by_cols.setdefault(e.columns, []).append(e)
@@ -273,7 +340,7 @@ class DifferentialCache:
                         if self._touches(a.window, b.window):
                             group.pop(j)
                             group.pop(i)
-                            group.append(self._merge_pair(a, b, snapshot))
+                            group.append(self._merge_pair(a, b, usable_fn))
                             merged = True
                             break
                     if merged:
@@ -281,7 +348,7 @@ class DifferentialCache:
             out.extend(group)
         # a merge of two fully-invalidated elements leaves an empty window;
         # such an element can never serve anything again — drop it
-        self._elements[table] = [e for e in out if not e.window.empty]
+        self._elements[signature] = [e for e in out if not e.window.empty]
 
     @staticmethod
     def _touches(a: IntervalSet, b: IntervalSet) -> bool:
@@ -292,17 +359,17 @@ class DifferentialCache:
         return False
 
     def _merge_pair(
-        self, a: CacheElement, b: CacheElement, snapshot: Snapshot
+        self, a: CacheElement, b: CacheElement, usable_fn: Optional[UsableFn]
     ) -> CacheElement:
         # The two sides may have been assembled under DIFFERENT snapshots, so
-        # each contributes only its usable_window under the current one —
+        # each contributes only its usable window under the current one —
         # merging raw windows would let rows from dropped fragments (or
         # windows missing newly added rows) survive inside the merged
         # element with pins that make them look valid.  Inside the usable
         # overlap the rows are identical (same live fragments), so take b
         # only where a does not already cover.
-        a_use = self.usable_window(a, snapshot)
-        b_use = self.usable_window(b, snapshot)
+        a_use = usable_fn(a) if usable_fn is not None else a.window
+        b_use = usable_fn(b) if usable_fn is not None else b.window
         b_only = b_use.difference(a_use)
         window = a_use.union(b_use)
         parts = a.slice_window(a_use, a.columns) + b.slice_window(b_only, b.columns)
@@ -316,7 +383,7 @@ class DifferentialCache:
         pins = tuple(
             p
             for p in merged.values()
-            if not window.intersect(IntervalSet([p.window])).empty
+            if window.intersects(IntervalSet([p.window]))
         )
         self._clock += 1
         return CacheElement(
@@ -328,6 +395,7 @@ class DifferentialCache:
             pins=pins,
             data=data,
             last_used=self._clock,
+            signature=a.signature,
         )
 
     def _evict(self) -> None:
@@ -338,11 +406,50 @@ class DifferentialCache:
             if not all_elems:
                 return
             victim = min(all_elems, key=lambda e: e.last_used)
-            self._elements[victim.table].remove(victim)
+            self._elements[victim.signature].remove(victim)
             self.evictions += 1
 
-    def invalidate_table(self, table: str) -> None:
-        self._elements.pop(table, None)
 
-    def clear(self) -> None:
-        self._elements.clear()
+class DifferentialCache(DifferentialStore):
+    """The paper's differential *scan* cache: a :class:`DifferentialStore`
+    whose signatures are table names, whose validity policy is fragment-pin
+    invalidation against the scan's snapshot, and whose cost bound is the
+    physical bytes a residual scan would move from object storage."""
+
+    def usable_window(self, elem: CacheElement, snapshot: Snapshot) -> IntervalSet:
+        """Differential invalidation (design choice 3) — see
+        :func:`snapshot_usable_window`."""
+        return snapshot_usable_window(elem, snapshot)
+
+    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str) -> CachePlan:
+        phys = scan.physical_columns(sort_key)
+        return self.plan_window(
+            signature=scan.table,
+            window=scan.window,
+            columns=phys,
+            cost_fn=lambda w: scan_cost_bytes(snapshot, w, phys),
+            usable_fn=lambda e: snapshot_usable_window(e, snapshot),
+        )
+
+    def insert(
+        self,
+        scan: Scan,
+        snapshot: Snapshot,
+        sort_key: str,
+        window: IntervalSet,
+        data: Table,
+    ) -> Optional[CacheElement]:
+        """Store a freshly fetched residual as a new element, then merge."""
+        pins = pins_for(snapshot, window)
+        return self.insert_window(
+            signature=scan.table,
+            table=scan.table,
+            sort_key=sort_key,
+            window=window,
+            data=data,
+            pins=pins,
+            usable_fn=lambda e: snapshot_usable_window(e, snapshot),
+        )
+
+    def invalidate_table(self, table: str) -> None:
+        self.invalidate(table)

@@ -178,6 +178,21 @@ class IntervalSet:
                 out.append(Interval(lo, iv.hi))
         return IntervalSet(out)
 
+    def intersects(self, other: "IntervalSet") -> bool:
+        """True iff the two sets share any point — the boolean fast path the
+        differential planners use for pin/window overlap checks (no
+        intermediate IntervalSet is built)."""
+        a, b = self._ivs, other._ivs
+        i = j = 0
+        while i < len(a) and j < len(b):
+            if max(a[i].lo, b[j].lo) < min(a[i].hi, b[j].hi):
+                return True
+            if a[i].hi < b[j].hi:
+                i += 1
+            else:
+                j += 1
+        return False
+
     def covers(self, other: "IntervalSet") -> bool:
         return other.difference(self).empty
 

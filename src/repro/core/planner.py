@@ -16,6 +16,7 @@ post-predicate included) is implemented here rather than in
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -47,9 +48,10 @@ class ScanReport:
     bytes_from_store: int
     bytes_from_cache: int
     store_requests: int
-    cache_chunks: int
+    cache_chunks: int  # hit-served cache views ONLY (never the residual)
     fully_cached: bool
     simulated_seconds: float
+    residual_rows: int = 0  # rows fetched fresh from object storage
 
     @property
     def bytes_processed(self) -> int:
@@ -93,17 +95,23 @@ class ScanExecutor:
         phys = scan.physical_columns(meta.sort_key)
 
         before = self.store.stats.snapshot()
-        with self._lock:
-            plan = self.cache.plan(scan, snapshot, meta.sort_key)
-
+        # plan AND slice the hits under one lock acquisition: between a plan
+        # and its slicing, a concurrent insert may merge or evict the very
+        # elements the plan's hits reference — the slices (zero-copy views
+        # over immutable buffers) must be taken while the plan is still the
+        # cache's current truth
         chunks: List[Table] = []
         bytes_from_cache = 0
-        for hit in plan.hits:
-            views = hit.element.slice_window(hit.window, phys)
-            for v in views:
-                bytes_from_cache += v.nbytes
-            chunks.extend(views)
+        with self._lock:
+            plan = self.cache.plan(scan, snapshot, meta.sort_key)
+            for hit in plan.hits:
+                views = hit.element.slice_window(hit.window, phys)
+                for v in views:
+                    bytes_from_cache += v.nbytes
+                chunks.extend(views)
+        hit_chunks = len(chunks)
 
+        residual_rows = 0
         if not plan.residual.empty:
             fresh = read_window(
                 self.store, snapshot, plan.residual, phys, meta.sort_key, schema=meta.schema
@@ -111,6 +119,7 @@ class ScanExecutor:
             with self._lock:
                 self.cache.insert(scan, snapshot, meta.sort_key, plan.residual, fresh)
             if fresh.num_rows:
+                residual_rows = fresh.num_rows
                 chunks.append(fresh)
 
         delta = self.store.stats.delta(before)
@@ -123,9 +132,10 @@ class ScanExecutor:
                 bytes_from_store=delta.bytes_read,
                 bytes_from_cache=bytes_from_cache,
                 store_requests=delta.get_requests,
-                cache_chunks=len(chunks),
+                cache_chunks=hit_chunks,
                 fully_cached=plan.fully_cached,
                 simulated_seconds=delta.simulated_seconds,
+                residual_rows=residual_rows,
             )
         )
 
@@ -150,13 +160,26 @@ class ScanExecutor:
 
 class ResultCachingExecutor:
     """The paper's *result cache* baseline: memoize the fully-assembled output
-    under the hash of the exact inputs (predicate identity included)."""
+    under the hash of the exact inputs (predicate identity included).
 
-    def __init__(self, store: ObjectStore, catalog: Catalog):
+    ``max_bytes`` bounds the memo with LRU eviction — an unbounded memo would
+    hand the baseline infinite memory on long workloads and skew
+    Table-II-style comparisons against the (byte-budgeted) scan caches."""
+
+    def __init__(
+        self, store: ObjectStore, catalog: Catalog, max_bytes: Optional[int] = None
+    ):
         self.inner = ScanExecutor(store, catalog, cache=NoCache())
-        self._memo: Dict[tuple, ChunkedTable] = {}
+        self.max_bytes = max_bytes
+        self._memo: "OrderedDict[tuple, ChunkedTable]" = OrderedDict()
+        self._bytes = 0  # running memo size: eviction must not be O(n²)
         self.lookups = 0
         self.hits = 0
+        self.evictions = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
 
     @property
     def reports(self) -> List[ScanReport]:
@@ -191,6 +214,7 @@ class ResultCachingExecutor:
         )
         if key in self._memo:
             self.hits += 1
+            self._memo.move_to_end(key)  # LRU freshness
             # record a zero-byte report so workload traces stay comparable
             self.inner.reports.append(
                 ScanReport(table, snapshot.snapshot_id, tuple(sorted(columns)),
@@ -199,7 +223,17 @@ class ResultCachingExecutor:
             )
             return self._memo[key]
         out = self.inner.scan(table, columns, window, snapshot_id, predicate, sorted_output)
+        if self.max_bytes is not None and out.nbytes > self.max_bytes:
+            # a result bigger than the whole budget is not retained — and it
+            # must not churn out every hot entry on its way through
+            return out
         self._memo[key] = out
+        self._bytes += out.nbytes
+        if self.max_bytes is not None:
+            while self._bytes > self.max_bytes:  # evict LRU-first
+                _, evicted = self._memo.popitem(last=False)
+                self._bytes -= evicted.nbytes
+                self.evictions += 1
         return out
 
     def total_bytes_processed(self) -> int:

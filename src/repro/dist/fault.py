@@ -108,13 +108,25 @@ class HeartbeatMonitor:
 
 # ---------------------------------------------------------------- straggler
 class StragglerDetector:
-    """Flag workers persistently slower than the fleet's robust spread.
+    """Flag workers persistently slower than the fleet's robust spread OR
+    than their own learned baseline.
 
-    Per :meth:`check`, each worker's *latest* step time is scored as
-    ``z = (t - median) / (1.4826·MAD + small)``; a worker over
-    ``z_threshold`` for ``patience`` consecutive checks is flagged (once).
-    Median/MAD rather than mean/std: the straggler itself must not inflate
-    the spread it is judged against.
+    Per :meth:`check`, each worker's *latest* step time is judged two ways:
+
+    1. **Relative (fleet) test** — robust z-score
+       ``z = (t - median) / (1.4826·MAD + small)``; median/MAD rather than
+       mean/std so the straggler itself cannot inflate the spread it is
+       judged against.
+    2. **Self (EWMA) test** — each worker keeps an exponentially-weighted
+       moving average of its own *healthy* step times; a sample over
+       ``slowdown_factor ×`` that baseline is slow even when the whole fleet
+       degrades in lockstep — the case the relative test is structurally
+       blind to (the median moves with the slowdown, z stays ~0).
+       The baseline absorbs only non-slow samples, so a sustained slowdown
+       cannot launder itself into the norm.
+
+    Either test trips a *strike*; ``patience`` consecutive strikes flag the
+    worker (once).
     """
 
     def __init__(
@@ -122,6 +134,8 @@ class StragglerDetector:
         z_threshold: float = 3.0,
         patience: int = 2,
         min_relative_excess: float = 0.1,
+        ewma_alpha: float = 0.3,
+        slowdown_factor: float = 2.0,
     ):
         self.z_threshold = float(z_threshold)
         self.patience = int(patience)
@@ -129,12 +143,19 @@ class StragglerDetector:
         # median in absolute terms: on a near-identical fleet MAD collapses
         # to ~0 and the z-score alone would flag microsecond timer noise
         self.min_relative_excess = float(min_relative_excess)
+        self.ewma_alpha = float(ewma_alpha)
+        self.slowdown_factor = float(slowdown_factor)
         self._latest: Dict[str, float] = {}
+        self._ewma: Dict[str, float] = {}
         self._strikes: Dict[str, int] = {}
         self._flagged: set = set()
 
     def record(self, worker: str, step_time: float) -> None:
         self._latest[worker] = float(step_time)
+
+    def baseline(self, worker: str) -> Optional[float]:
+        """The worker's EWMA of healthy step times (None before first check)."""
+        return self._ewma.get(worker)
 
     def check(self) -> List[str]:
         """Workers newly crossing the patience threshold, sorted."""
@@ -149,10 +170,19 @@ class StragglerDetector:
         floor = self.min_relative_excess * abs(med)
         newly: List[str] = []
         for w, t in self._latest.items():
-            if (t - med) / denom > self.z_threshold and (t - med) > floor:
+            fleet_slow = (t - med) / denom > self.z_threshold and (t - med) > floor
+            base = self._ewma.get(w)
+            self_slow = base is not None and t > self.slowdown_factor * base
+            if fleet_slow or self_slow:
                 self._strikes[w] = self._strikes.get(w, 0) + 1
             else:
                 self._strikes[w] = 0
+                # only healthy samples feed the baseline (first sample seeds)
+                self._ewma[w] = (
+                    t
+                    if base is None
+                    else (1 - self.ewma_alpha) * base + self.ewma_alpha * t
+                )
             if self._strikes[w] >= self.patience and w not in self._flagged:
                 self._flagged.add(w)
                 newly.append(w)
@@ -163,6 +193,7 @@ class StragglerDetector:
         self._flagged.discard(worker)
         self._strikes.pop(worker, None)
         self._latest.pop(worker, None)
+        self._ewma.pop(worker, None)
 
     @property
     def flagged(self) -> List[str]:

@@ -57,6 +57,28 @@ def build_dag(project: Project) -> Dag:
         edges[name] = deps
         scan_leaves[name] = leaves
 
+        # incrementality contract is structural, so enforce it here: a
+        # rowwise node's output window must equal its input window, which is
+        # only well-defined for exactly one input; and slicing a residual out
+        # of an upstream model's output requires that output to carry a
+        # sort-key window — i.e. the upstream must itself be rowwise (scan
+        # leaves always qualify: the table's sort key windows them).
+        if mdef.incremental == "rowwise":
+            if len(mdef.inputs) != 1:
+                raise DagError(
+                    f"{name}: incremental='rowwise' requires exactly one "
+                    f"input, got {len(mdef.inputs)}"
+                )
+            ref = next(iter(mdef.inputs.values()))
+            if ref.name in project.models and (
+                project.models[ref.name].incremental != "rowwise"
+            ):
+                raise DagError(
+                    f"{name}: incremental='rowwise' requires its model input "
+                    f"{ref.name!r} to be rowwise too (its output has no "
+                    f"sort-key window to slice residuals from)"
+                )
+
     # Kahn topological sort
     indeg = {m: len(deps) for m, deps in edges.items()}
     ready = sorted(m for m, d in indeg.items() if d == 0)

@@ -30,11 +30,40 @@ Example (compare paper Listing 1)::
 
 from __future__ import annotations
 
+import hashlib
 import inspect
+import types
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-__all__ = ["Model", "ModelDef", "Project", "model", "runtime", "current_project"]
+__all__ = [
+    "Model",
+    "ModelDef",
+    "Project",
+    "model",
+    "runtime",
+    "current_project",
+    "code_fingerprint",
+    "INCREMENTAL_MODES",
+]
+
+# Per-model incrementality contract (the differential-caching analogue of the
+# paper's runtime decorator):
+#
+# - ``"none"``     — the default: the function is an arbitrary transformation
+#                    (joins, aggregates, window functions); its output can only
+#                    be reproduced by a full recompute, so every run re-executes
+#                    it on its full input.
+# - ``"rowwise"``  — the function is a pure per-row/per-key map: each output
+#                    row is a function of one input row alone; rows may be
+#                    *dropped* (per-row filters) but never created or
+#                    reordered, and the output's sort-key window equals its
+#                    input window.  Declaring it lets the executor cache the
+#                    node's output differentially and run the function only on
+#                    residual windows (see ``repro.pipeline.executor``).
+#                    A rowwise function that drops rows must return the sort
+#                    key column itself (the executor cannot position-align it).
+INCREMENTAL_MODES = ("none", "rowwise")
 
 
 @dataclass(frozen=True)
@@ -65,6 +94,7 @@ class ModelDef:
     runtime: str = "numpy"  # "numpy" | "jax"
     materialize: bool = False  # publish output back to the catalog as a table
     runtime_opts: Dict[str, Any] = field(default_factory=dict)
+    incremental: str = "none"  # see INCREMENTAL_MODES
 
 
 class Project:
@@ -113,10 +143,21 @@ def model(
     name: Optional[str] = None,
     materialize: bool = False,
     project: Optional[Project] = None,
+    incremental: str = "none",
 ) -> Callable[[Callable], Callable]:
     """``@model()`` — register a transformation; DAG edges come from the
     function's ``Model`` defaults (paper: "The DAG structure is implicitly
-    expressed through function inputs")."""
+    expressed through function inputs").
+
+    ``incremental="rowwise"`` declares the per-row purity contract (see
+    :data:`INCREMENTAL_MODES`), letting the executor re-run the function only
+    on windows whose upstream rows actually changed.  A rowwise model's
+    output always carries its sort-key column (the executor attaches it,
+    position-aligned, when the function does not return it)."""
+    if incremental not in INCREMENTAL_MODES:
+        raise ValueError(
+            f"incremental must be one of {INCREMENTAL_MODES}, got {incremental!r}"
+        )
 
     def deco(fn: Callable) -> Callable:
         rt = getattr(fn, "__repro_runtime__", "numpy")
@@ -128,12 +169,80 @@ def model(
             runtime=rt,
             materialize=materialize,
             runtime_opts=opts,
+            incremental=incremental,
         )
         (project or _DEFAULT_PROJECT).add(mdef)
         fn.__repro_model__ = mdef
         return fn
 
     return deco
+
+
+def code_fingerprint(fn: Callable) -> str:
+    """Best-effort content hash of a model function's *behaviour*: bytecode
+    (recursing into nested code objects), referenced names, constants,
+    closure cell values, and defaults.  Two functions with the same
+    fingerprint compute the same mapping; an edited body, changed constant,
+    or different closed-over value changes the fingerprint — which is what
+    invalidates the node (and, through signature chaining, everything
+    downstream) in the differential model store.
+
+    Captured-by-reference state the hash cannot see (e.g. a mutated global
+    read inside the body) is out of contract, exactly like the paper's
+    assumption that a model is a pure function of its declared inputs."""
+    h = hashlib.sha256()
+
+    def feed_value(v: object) -> None:
+        # repr() is LOSSY for arrays (numpy elides interior values with
+        # '...'), so two different closed-over weight vectors could
+        # fingerprint-equal and silently serve stale cached outputs — hash
+        # array contents by bytes, and recurse into containers so arrays
+        # nested in tuples/dicts get the same treatment
+        import numpy as np
+
+        if isinstance(v, np.ndarray):
+            h.update(b"<ndarray>")
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        elif isinstance(v, (tuple, list)):
+            h.update(b"<seq>")
+            for item in v:
+                feed_value(item)
+        elif isinstance(v, dict):
+            h.update(b"<map>")
+            for k in sorted(v, key=repr):
+                feed_value(k)
+                feed_value(v[k])
+        else:
+            h.update(repr(v).encode())
+
+    def feed(code: types.CodeType) -> None:
+        h.update(code.co_code)
+        h.update(",".join(code.co_names).encode())
+        h.update(",".join(code.co_varnames).encode())
+        for const in code.co_consts:
+            if isinstance(const, types.CodeType):
+                feed(const)
+            else:
+                h.update(repr(const).encode())
+
+    feed(fn.__code__)
+    for cell in fn.__closure__ or ():
+        try:
+            feed_value(cell.cell_contents)
+        except ValueError:  # unfilled cell
+            h.update(b"<empty-cell>")
+    for d in fn.__defaults__ or ():
+        # Model references are the node's *structural* inputs — the physical
+        # plan hashes them separately (minus the sort-key window, which is
+        # the differential dimension).  Folding their repr in here would turn
+        # every window edit into a code edit and defeat residual planning.
+        if isinstance(d, Model):
+            h.update(b"<model-ref>")
+        else:
+            feed_value(d)
+    return h.hexdigest()
 
 
 def runtime(kind: str = "numpy", **opts: Any) -> Callable[[Callable], Callable]:

@@ -1,37 +1,64 @@
-"""The data-plane worker: executes a physical plan.
+"""The data-plane worker: an incremental re-execution engine.
 
 Semantics from the paper (Fig. 2/3):
 
-- system scans run first (through the shared :class:`ScanExecutor`, i.e. the
-  differential cache) and feed user functions as columnar tables;
+- system scans run through the shared :class:`ScanExecutor`, i.e. the
+  differential cache, and feed user functions as columnar tables;
 - model→model handoffs are in-memory and zero-copy;
 - the ``jax`` runtime receives ``{column: jnp.ndarray}`` — the "second
   language" demonstrating that the cache sits *below* language choice;
 - ``materialize=True`` publishes a model's output back to the catalog as an
   Iceberg-style table (a new snapshot), closing the loop for downstream DAGs.
 
-A :class:`Workspace` bundles store+catalog+cache and persists across runs —
-the cache is shared by every user/pipeline in the workspace, which is what
-makes the paper's multi-user §III-A workload work.
+Beyond the paper's leaf scans, the cache sits below EVERY node: a
+:class:`Workspace` holds a second :class:`DifferentialStore` for intermediate
+``@model`` outputs.  A node declared ``incremental="rowwise"`` is planned
+exactly like a scan —
+
+1. look up cache elements under the node's *signature* (code hash, runtime,
+   upstream signatures — computed by ``compile_plan``);
+2. serve the cached windows that are still valid under the current leaf
+   snapshot (model elements pin the leaf fragments their rows were derived
+   from, so append/overwrite invalidation reuses the scan machinery);
+3. run the user function only on the *residual* window's rows;
+4. UNION hit views + fresh rows zero-copy, store the residual back.
+
+Warm iteration cost is therefore proportional to the *edit* (rows whose
+inputs actually changed), not to the pipeline: re-running an unchanged
+project recomputes nothing; widening a window or appending upstream rows
+recomputes only the delta; editing a function's code changes its signature
+and (through signature chaining) recomputes it and its descendants from
+scratch — automatically, with no user annotations beyond the contract.
+
+A :class:`Workspace` bundles store+catalog+both caches and persists across
+runs — the caches are shared by every user/pipeline in the workspace, which
+is what makes the paper's multi-user §III-A workload work.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.cache import DifferentialCache
-from repro.core.columnar import ChunkedTable, Table
+from repro.core.cache import (
+    DifferentialCache,
+    DifferentialStore,
+    pins_for,
+    snapshot_usable_window,
+)
+from repro.core.columnar import ChunkedTable, Table, concat_tables
+from repro.core.intervals import IntervalSet
 from repro.core.planner import ScanExecutor
-from repro.lake.catalog import Catalog
+from repro.lake.catalog import Catalog, Snapshot
 from repro.lake.s3sim import ObjectStore
 from repro.pipeline.dag import build_dag
 from repro.pipeline.dsl import Project
 from repro.pipeline.filters import parse_filter
-from repro.pipeline.physical import PhysicalPlan, compile_plan
+from repro.pipeline.physical import PhysicalPlan, SystemScanStep, UserFnStep, compile_plan
 
 __all__ = ["Workspace", "RunResult", "run_project"]
 
@@ -44,23 +71,36 @@ class RunResult:
     simulated_seconds: float
     wall_seconds: float
     plan: PhysicalPlan
+    # incremental-engine ledger: how much work the user functions actually did
+    rows_to_user_fns: int = 0
+    bytes_from_model_cache: int = 0
+    node_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
 
 class Workspace:
     """Long-lived execution context: one object store, one catalog, one
-    differential cache shared by all users and languages."""
+    differential scan cache, and one differential *model-output* store,
+    shared by all users and languages."""
 
     def __init__(
         self,
         root: str,
         cache: Optional[Any] = None,
         rows_per_fragment: int = 1 << 16,
+        model_cache_bytes: Optional[int] = None,
     ):
         self.store = ObjectStore(root)
         self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
         self.scans = ScanExecutor(
             self.store, self.catalog, cache=cache if cache is not None else DifferentialCache()
         )
+        # intermediate @model outputs, keyed by node signature; windows are
+        # sort-key windows of the node's rowwise chain.  Like the scan
+        # executor, plan+slice and insert happen under one lock so a
+        # concurrent run's insert can't merge/evict an element between
+        # planning a hit and taking its views
+        self.model_store = DifferentialStore(max_bytes=model_cache_bytes)
+        self._model_lock = threading.Lock()
 
     # -- running -------------------------------------------------------------
     def run(self, project: Project, verbose: bool = False) -> RunResult:
@@ -76,51 +116,270 @@ class Workspace:
             print(plan.describe())
         t0 = time.perf_counter()
         before = self.store.stats.snapshot()
+        reports_before = len(self.scans.reports)
 
-        # 1) system scans (the cached, differential part)
-        scanned: List[ChunkedTable] = []
-        bytes_from_cache = 0
-        for s in plan.scans:
-            meta = self.catalog.table(s.table)
-            parsed = parse_filter(s.predicate_filter, meta.sort_key)
-            out = self.scans.scan(
-                s.table,
-                s.columns,
-                window=s.window,
-                snapshot_id=s.snapshot_id,
-                predicate=parsed.predicate_fn(),
-            )
-            scanned.append(out)
-            bytes_from_cache += self.scans.reports[-1].bytes_from_cache
-
-        # 2) user functions, topological order
         results: Dict[str, Table] = {}
+        node_stats: Dict[str, Dict[str, int]] = {}
+        # resolve each leaf table's snapshot ONCE per run: chained rowwise
+        # nodes must plan against the same snapshot their upstream's rows
+        # came from, or a commit landing mid-run would let a downstream node
+        # pin fragments whose rows its input never contained
+        leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot] = {}
         for step in plan.steps:
-            kwargs: Dict[str, Any] = {}
-            for arg, (kind, ref) in step.bindings:
-                if kind == "scan":
-                    kwargs[arg] = scanned[ref]
-                else:
-                    kwargs[arg] = results[ref]
             fn = dag.project[step.model].fn
-            out = _invoke(fn, step.runtime, kwargs)
+            if step.incremental == "rowwise":
+                out, stats = self._run_rowwise(step, plan, fn, results, leaf_snapshots)
+            else:
+                out, stats = self._run_full(step, plan, fn, results)
             results[step.model] = out
+            node_stats[step.model] = stats
             if step.materialize:
-                self._materialize(step.model, out)
+                # rowwise outputs are canonicalized to sorted column order,
+                # so "first column" is NOT the sort key — use the plan's
+                self._materialize(step.model, out, sort_key=step.sort_key)
 
         delta = self.store.stats.delta(before)
         return RunResult(
             outputs=results,
             bytes_from_store=delta.bytes_read,
-            bytes_from_cache=bytes_from_cache,
+            bytes_from_cache=sum(
+                r.bytes_from_cache for r in self.scans.reports[reports_before:]
+            ),
             simulated_seconds=delta.simulated_seconds,
             wall_seconds=time.perf_counter() - t0,
             plan=plan,
+            rows_to_user_fns=sum(s["fresh_rows"] for s in node_stats.values()),
+            bytes_from_model_cache=sum(
+                s["model_cache_bytes"] for s in node_stats.values()
+            ),
+            node_stats=node_stats,
         )
 
-    def _materialize(self, model_name: str, table: Table) -> None:
+    # -- node execution: full recompute (incremental="none") -----------------
+    def _exec_scan(self, s: SystemScanStep, window: Optional[IntervalSet] = None) -> ChunkedTable:
+        meta = self.catalog.table(s.table)
+        parsed = parse_filter(s.predicate_filter, meta.sort_key)
+        return self.scans.scan(
+            s.table,
+            s.columns,
+            window=window if window is not None else s.window,
+            snapshot_id=s.snapshot_id,
+            predicate=parsed.predicate_fn(),
+        )
+
+    def _run_full(
+        self,
+        step: UserFnStep,
+        plan: PhysicalPlan,
+        fn: Callable,
+        results: Dict[str, Table],
+    ) -> Tuple[Table, Dict[str, int]]:
+        kwargs: Dict[str, Any] = {}
+        rows = 0
+        for arg, (kind, ref) in step.bindings:
+            if kind == "scan":
+                kwargs[arg] = self._exec_scan(plan.scans[ref])
+            else:
+                kwargs[arg] = results[ref]
+            rows += kwargs[arg].num_rows
+        out = _invoke(fn, step.runtime, kwargs)
+        return out, {"fresh_rows": rows, "cached_rows": 0, "model_cache_bytes": 0}
+
+    # -- node execution: differential (incremental="rowwise") ----------------
+    def _leaf_snapshot(
+        self,
+        step: UserFnStep,
+        leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
+    ) -> Snapshot:
+        key = (step.leaf_table, step.leaf_snapshot_id)
+        if key not in leaf_snapshots:
+            if step.leaf_snapshot_id is not None:
+                snap = self.catalog.snapshot(step.leaf_table, step.leaf_snapshot_id)
+            else:
+                snap = self.catalog.current_snapshot(step.leaf_table)
+            leaf_snapshots[key] = snap
+        return leaf_snapshots[key]
+
+    def _residual_input(
+        self,
+        step: UserFnStep,
+        plan: PhysicalPlan,
+        results: Dict[str, Table],
+        residual: IntervalSet,
+        snapshot: Snapshot,
+    ) -> Table:
+        """The node's input restricted to the residual window, sorted by the
+        sort key and always carrying the sort-key column."""
+        (arg, (kind, ref)) = step.bindings[0]
+        if kind == "scan":
+            s = plan.scans[ref]
+            # the sort key must ride along so the engine can window the
+            # output; the scan cache itself is below this call
+            cols = tuple(sorted(set(s.columns) | {step.sort_key}))
+            s_with_key = SystemScanStep(
+                model=s.model,
+                arg=s.arg,
+                table=s.table,
+                columns=cols,
+                window_pairs=s.window_pairs,
+                predicate_filter=s.predicate_filter,
+                snapshot_id=snapshot.snapshot_id,
+            )
+            chunked = self._exec_scan(s_with_key, window=residual)
+            if not chunked.chunks:
+                # zero rows in the residual (e.g. a window widened beyond the
+                # data): keep the input schema-complete so the fn and the
+                # windowing below still see the declared columns
+                schema = self.catalog.table(s.table).schema
+                dt = lambda n: np.dtype(schema[n]) if n in schema else np.int64
+                return Table({n: np.empty(0, dtype=dt(n)) for n in cols})
+            return chunked.combine().sort_by(step.sort_key)
+        upstream = results[ref]  # rowwise upstream: sorted, carries the key
+        keys = upstream.column(step.sort_key)
+        parts: List[Table] = []
+        for iv in residual:
+            lo = int(np.searchsorted(keys, iv.lo, side="left"))
+            hi = int(np.searchsorted(keys, iv.hi, side="left"))
+            if hi > lo:
+                parts.append(upstream.slice(lo, hi))
+        if not parts:
+            return upstream.slice(0, 0)
+        return concat_tables(parts)
+
+    def _run_rowwise(
+        self,
+        step: UserFnStep,
+        plan: PhysicalPlan,
+        fn: Callable,
+        results: Dict[str, Table],
+        leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
+    ) -> Tuple[Table, Dict[str, int]]:
+        snapshot = self._leaf_snapshot(step, leaf_snapshots)
+        if step.window.empty:
+            # degenerate filter (e.g. BETWEEN 5 AND 1): run the fn once on an
+            # empty, schema-complete input — nothing to cache or serve
+            (arg, _binding) = step.bindings[0]
+            in_tbl = self._residual_input(
+                step, plan, results, IntervalSet.empty_set(), snapshot
+            )
+            out = _invoke(fn, step.runtime, {arg: in_tbl})
+            return self._windowed_output(step, in_tbl, out), {
+                "fresh_rows": 0,
+                "cached_rows": 0,
+                "model_cache_bytes": 0,
+            }
+        usable_fn = lambda e: snapshot_usable_window(e, snapshot)
+        hit_chunks: List[Table] = []
+        cached_rows = 0
+        cache_bytes = 0
+        with self._model_lock:
+            # cost is row-extent, not fragment bytes: serving ANY cached rows
+            # saves user-function compute, even inside a partially-covered
+            # fragment (unlike a physical scan, which must re-read the whole
+            # fragment's column chunks either way)
+            mplan = self.model_store.plan_window(
+                signature=step.signature,
+                window=step.window,
+                columns=(),
+                cost_fn=lambda w: w.measure(),
+                usable_fn=usable_fn,
+            )
+            for hit in mplan.hits:
+                for view in hit.element.slice_window(hit.window, hit.element.columns):
+                    hit_chunks.append(view)
+                    cached_rows += view.num_rows
+                    cache_bytes += view.nbytes
+
+        fresh: Optional[Table] = None
+        fresh_rows = 0
+        if not mplan.residual.empty:
+            (arg, _binding) = step.bindings[0]
+            in_tbl = self._residual_input(step, plan, results, mplan.residual, snapshot)
+            if in_tbl.num_rows == 0 and hit_chunks:
+                # nothing to compute; keep the output schema from a hit view
+                fresh = hit_chunks[0].slice(0, 0)
+            else:
+                fresh_rows = in_tbl.num_rows
+                out = _invoke(fn, step.runtime, {arg: in_tbl})
+                fresh = self._windowed_output(step, in_tbl, out)
+            pins = pins_for(snapshot, mplan.residual)
+            with self._model_lock:
+                self.model_store.insert_window(
+                    signature=step.signature,
+                    table=step.leaf_table,
+                    sort_key=step.sort_key,
+                    window=mplan.residual,
+                    data=fresh,
+                    pins=pins,
+                    usable_fn=usable_fn,
+                )
+
+        chunks = hit_chunks + ([fresh] if fresh is not None else [])
+        assembled = ChunkedTable(chunks)
+        if len(assembled.chunks) == 1:
+            # zero-copy fast path: a single chunk (one cache view, or one
+            # fresh residual) is already sorted by the key
+            out_tbl = assembled.chunks[0]
+        else:
+            out_tbl = assembled.combine().sort_by(step.sort_key)
+        return out_tbl, {
+            "fresh_rows": fresh_rows,
+            "cached_rows": cached_rows,
+            "model_cache_bytes": cache_bytes,
+        }
+
+    def _windowed_output(self, step: UserFnStep, in_tbl: Table, out: Table) -> Table:
+        """Enforce the rowwise contract and return the output sorted by the
+        sort key, with the key column present (attached position-aligned when
+        the function did not return it).  Columns are put in sorted order —
+        the canonical layout cache elements store — so cold and warm
+        assemblies are chunk-compatible and byte-identical."""
+        if out.num_rows > in_tbl.num_rows:
+            raise ValueError(
+                f"{step.model}: incremental='rowwise' functions must not "
+                f"create rows ({in_tbl.num_rows} in, {out.num_rows} out)"
+            )
+        in_keys = in_tbl.column(step.sort_key)
+        if out.num_rows == in_tbl.num_rows:
+            # rows neither dropped nor reordered (the contract): restore the
+            # EXACT input key column position-aligned, whether or not the fn
+            # echoed one — runtimes may round-trip dtypes (jax x32 truncates
+            # int64 to int32) and the key is the cache's addressing
+            # dimension, so it must stay bit-exact
+            cols = {n: out.column(n) for n in out.column_names}
+            cols[step.sort_key] = in_keys
+            out = Table(cols)
+        else:
+            if step.sort_key not in out.column_names:
+                raise ValueError(
+                    f"{step.model}: a rowwise function that drops rows must "
+                    f"return the sort key column {step.sort_key!r} (the "
+                    f"engine cannot position-align it)"
+                )
+            out_keys = np.asarray(out.column(step.sort_key))
+            if out_keys.dtype != in_keys.dtype:
+                # a runtime narrowed the key (jax x32): cast back and verify
+                # losslessness — wrapped values cannot address the cache
+                cast = out_keys.astype(in_keys.dtype)
+                if out_keys.size and not np.isin(cast, in_keys).all():
+                    raise ValueError(
+                        f"{step.model}: sort key {step.sort_key!r} came back "
+                        f"as {out_keys.dtype} with values outside the input "
+                        f"keys — the runtime truncated it (jax x32?); avoid "
+                        f"dropping rows in this runtime or keep keys within "
+                        f"its integer range"
+                    )
+                cols = {n: out.column(n) for n in out.column_names}
+                cols[step.sort_key] = cast
+                out = Table(cols)
+        return out.select(sorted(out.column_names)).sort_by(step.sort_key)
+
+    def _materialize(
+        self, model_name: str, table: Table, sort_key: Optional[str] = None
+    ) -> None:
         full = f"models.{model_name}"
-        sort_key = table.column_names[0]
+        if sort_key is None or sort_key not in table.column_names:
+            sort_key = table.column_names[0]
         try:
             self.catalog.table(full)
         except KeyError:

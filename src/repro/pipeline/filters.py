@@ -94,6 +94,17 @@ class ParsedFilter:
     def predicate_columns(self) -> Tuple[str, ...]:
         return tuple(sorted({c for c, _, _ in self.predicates}))
 
+    def predicate_signature(self) -> tuple:
+        """Canonical, hashable identity of the filter's *residual* semantics:
+        the sorted post-predicates.  Two filter strings that denote the same
+        post-predicate (whitespace, clause order, ``=`` vs ``==``) compare
+        equal — this is what node signatures hash, so cosmetic filter edits
+        never invalidate the differential model store.  The sort-key window
+        is deliberately excluded: it is the *differential dimension* the
+        executor plans incrementally (widen → residual recompute, narrow →
+        full hit), not part of the node's identity."""
+        return tuple(sorted(self.predicates))
+
 
 class _Parser:
     def __init__(self, tokens: List[Tuple[str, str]], sort_key: str):

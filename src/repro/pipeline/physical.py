@@ -4,16 +4,33 @@ For every scan leaf the control plane inserts a **system scan step** ahead
 of the user function — the decoupling that (a) shields users from data
 management and (b) is the hook where the differential cache lives.  Model-to-
 model edges become zero-copy in-memory handoffs.
+
+The plan also carries each node's *differential identity*:
+
+- ``signature`` — a digest of everything that determines the node's output
+  rows other than the upstream data itself: the function's code fingerprint,
+  its runtime, its incrementality contract, and the signatures of its inputs
+  (for scan leaves: table, projections, canonical filter, snapshot pin).
+  A code edit or upstream redefinition changes the signature, which
+  invalidates the node — and, by construction, every node downstream of it.
+- ``window`` / ``sort_key`` — the sort-key extent the node's output covers,
+  propagated up rowwise chains so the executor can plan intermediate outputs
+  like scans (cached windows + residual recompute).
+- ``leaf_table`` / ``leaf_snapshot_id`` — the catalog table at the root of
+  the node's rowwise chain.  Model cache elements pin that table's
+  fragments, so append/overwrite invalidation of intermediate outputs
+  reuses the exact snapshot logic leaf scans use.
 """
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.intervals import IntervalSet
 from repro.pipeline.dag import Dag
-from repro.pipeline.dsl import Model, ModelDef
+from repro.pipeline.dsl import Model, ModelDef, code_fingerprint
 from repro.pipeline.filters import ParsedFilter, parse_filter
 
 __all__ = ["SystemScanStep", "UserFnStep", "PhysicalPlan", "compile_plan"]
@@ -43,6 +60,18 @@ class UserFnStep:
     materialize: bool
     # inputs: arg -> ("scan", scan index) or ("model", parent name)
     bindings: Tuple[Tuple[str, Tuple[str, object]], ...]
+    # differential identity (see module docstring); populated for every node,
+    # consumed by the executor only when incremental != "none"
+    incremental: str = "none"
+    signature: str = ""
+    window_pairs: tuple = ()
+    sort_key: Optional[str] = None
+    leaf_table: Optional[str] = None
+    leaf_snapshot_id: Optional[str] = None
+
+    @property
+    def window(self) -> IntervalSet:
+        return IntervalSet.from_pairs(self.window_pairs)
 
 
 @dataclass
@@ -62,8 +91,13 @@ class PhysicalPlan:
                 f"{arg}<-{kind}:{ref}" for arg, (kind, ref) in st.bindings
             )
             tag = " MATERIALIZE" if st.materialize else ""
-            lines.append(f"RUN [{st.runtime}] {st.model}({srcs}){tag}")
+            inc = f" INCREMENTAL[{st.incremental}]" if st.incremental != "none" else ""
+            lines.append(f"RUN [{st.runtime}] {st.model}({srcs}){tag}{inc}")
         return "\n".join(lines)
+
+
+def _digest(parts: tuple) -> str:
+    return hashlib.sha256(repr(parts).encode()).hexdigest()
 
 
 def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
@@ -71,12 +105,27 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
     control plane fetches this from catalog metadata)."""
     scans: List[SystemScanStep] = []
     steps: List[UserFnStep] = []
+    # per-node differential identity, accumulated in topological order so a
+    # node's signature can fold in its parents' (the signature chain)
+    sigs: Dict[str, str] = {}
+    windows: Dict[str, IntervalSet] = {}
+    node_sort_key: Dict[str, Optional[str]] = {}
+    leaves_of: Dict[str, Tuple[Optional[str], Optional[str]]] = {}
+
     for name in dag.order:
         mdef: ModelDef = dag.project[name]
         bindings: List[Tuple[str, Tuple[str, object]]] = []
+        sig_inputs: List[tuple] = []
+        in_window: Optional[IntervalSet] = None
+        in_sort_key: Optional[str] = None
+        in_leaf: Tuple[Optional[str], Optional[str]] = (None, None)
         for arg, ref in mdef.inputs.items():
             if ref.name in dag.project.models:
                 bindings.append((arg, ("model", ref.name)))
+                sig_inputs.append(("model", sigs[ref.name]))
+                in_window = windows[ref.name]
+                in_sort_key = node_sort_key[ref.name]
+                in_leaf = leaves_of[ref.name]
             else:
                 sort_key = sort_keys[ref.name]
                 parsed = parse_filter(ref.filter, sort_key)
@@ -97,12 +146,40 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 )
                 bindings.append((arg, ("scan", len(scans))))
                 scans.append(step)
+                sig_inputs.append(
+                    # NOTE: the window is absent on purpose — it is the
+                    # differential dimension, not part of the node identity
+                    ("scan", ref.name, cols, parsed.predicate_signature(), ref.snapshot_id)
+                )
+                in_window = parsed.window
+                in_sort_key = sort_key
+                in_leaf = (ref.name, ref.snapshot_id)
+        sigs[name] = _digest(
+            (
+                code_fingerprint(mdef.fn),
+                mdef.runtime,
+                mdef.incremental,
+                tuple(sig_inputs),
+            )
+        )
+        # rowwise nodes have exactly one input (dag validation), so the last
+        # assignment IS the single input; multi-input "none" nodes keep a
+        # best-effort window that downstream rowwise nodes can never consume
+        windows[name] = in_window if in_window is not None else IntervalSet.empty_set()
+        node_sort_key[name] = in_sort_key
+        leaves_of[name] = in_leaf
         steps.append(
             UserFnStep(
                 model=name,
                 runtime=mdef.runtime,
                 materialize=mdef.materialize,
                 bindings=tuple(bindings),
+                incremental=mdef.incremental,
+                signature=sigs[name],
+                window_pairs=windows[name].to_pairs(),
+                sort_key=node_sort_key[name],
+                leaf_table=leaves_of[name][0],
+                leaf_snapshot_id=leaves_of[name][1],
             )
         )
     return PhysicalPlan(scans=scans, steps=steps)

@@ -14,6 +14,12 @@ _SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
+# repo root too, so tests can drive the benchmark workloads (BENCH_3 asserts
+# the incremental-engine acceptance ratios on the same loop CI smokes)
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if _ROOT not in sys.path:
+    sys.path.insert(1, _ROOT)
+
 try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:

@@ -124,6 +124,55 @@ def test_straggler_single_spike_not_flagged():
         assert det.check() == []
 
 
+def test_straggler_fleet_wide_slowdown_trips_ewma():
+    """All workers degrading together never trips the relative z-score (the
+    median moves with the slowdown) — the per-worker EWMA baseline must
+    catch it."""
+    det = StragglerDetector(z_threshold=3.0, patience=2)
+    flagged = []
+    for step in range(8):
+        for w in range(8):
+            t = 1.0 + 0.01 * w  # healthy fleet, learns the baseline
+            if step >= 4:
+                t *= 3.0  # every worker slows down 3× at step 4
+            det.record(f"w{w}", t)
+        flagged += det.check()
+    assert flagged == [f"w{w}" for w in range(8)]
+
+
+def test_straggler_ewma_not_poisoned_by_slowdown():
+    """A sustained slowdown must not launder itself into the baseline: after
+    the fleet degrades, the EWMA stays at the healthy level (only non-slow
+    samples feed it), so the slow state keeps striking."""
+    det = StragglerDetector(patience=2)
+    for step in range(4):
+        for w in range(4):
+            det.record(f"w{w}", 1.0)
+        det.check()
+    healthy = det.baseline("w0")
+    assert healthy == pytest.approx(1.0)
+    for step in range(5):
+        for w in range(4):
+            det.record(f"w{w}", 3.0)
+        det.check()
+    assert det.baseline("w0") == pytest.approx(healthy)  # unchanged
+    assert set(det.flagged) == {"w0", "w1", "w2", "w3"}
+
+
+def test_straggler_gradual_drift_within_factor_absorbed():
+    """Slow drift under ``slowdown_factor`` per step is absorbed into the
+    baseline rather than flagged — the detector targets step changes, not
+    capacity planning."""
+    det = StragglerDetector(patience=2, slowdown_factor=2.0)
+    t = 1.0
+    for step in range(10):
+        for w in range(4):
+            det.record(f"w{w}", t)
+        assert det.check() == []
+        t *= 1.3  # 30% per-step drift, always under the 2× trigger
+    assert det.flagged == []
+
+
 # ------------------------------------------------- restart coordinator + e2e
 def test_failure_rollback_and_exact_replay(tmp_path):
     """Full FT story: train, checkpoint, kill a worker mid-run, roll back,

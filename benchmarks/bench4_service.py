@@ -1,0 +1,220 @@
+"""BENCH_4: multi-tenant service — cold vs shared-warm cost per tenant.
+
+The service's claim (paper §III-A, at service scale): a differential cache
+shared across tenants means the SECOND tenant running an
+identical-signature DAG over an overlapping window pays only its residual —
+the windows the first tenant computed are served from the shared store.
+
+Scenario (one :class:`~repro.service.PipelineService`, N tenants):
+
+- tenant 0 runs the 4-stage iteration pipeline over ``[0, 0.8·rows]``
+  (its own cold run — it pays full price and fills the shared store);
+- tenants 1..N-1 then run the SAME pipeline over overlapping windows
+  (some nested, some widened past tenant 0's), concurrently through the
+  scheduler;
+- each warm tenant is compared against its own **cold** run (a fresh
+  service, same catalog history): bytes moved from the object store and
+  rows through user functions.
+
+Emits ``BENCH_4.json`` with per-tenant warm/cold ledgers, the shared-store
+counters (cross-tenant hits/rows, evictions) and the warm:cold ratios.
+``--check`` exits non-zero unless every warm tenant with a window widened
+beyond the shared coverage still moves >= 3x fewer bytes than its cold run
+(nested-window tenants are near-infinite and gated at >= 3x too), with
+outputs bitwise-equal to the cold runs — the acceptance gate.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench4_service [--rows N] [--tenants K] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.workloads import iteration_project, write_events
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_4.json"
+)
+
+
+def _ledger(res, wall: float) -> Dict[str, float]:
+    return {
+        "bytes_from_store": int(res.bytes_from_store),
+        "rows_to_user_fns": int(res.rows_to_user_fns),
+        "bytes_from_model_cache": int(res.bytes_from_model_cache),
+        "bytes_from_scan_cache": int(res.bytes_from_cache),
+        "wall_seconds": round(wall, 6),
+    }
+
+
+def _tenant_windows(rows: int, tenants: int) -> List[int]:
+    """Tenant 0 covers [0, 0.8 rows]; the warm tenants alternate nested and
+    widened-overlapping windows."""
+    base = int(0.8 * rows)
+    out = [base]
+    for i in range(1, tenants):
+        if i % 2 == 1:
+            out.append(rows)  # widened past the shared coverage: pays residual
+        else:
+            out.append(int(0.6 * rows))  # nested: fully served
+    return out
+
+
+def run(rows: int = 20_000, tenants: int = 4) -> Dict:
+    from repro.service import PipelineService
+
+    # fragment size scales with the workload so the residual's fragment
+    # rounding doesn't dominate the ratio at small --rows (CI smoke)
+    rows_per_fragment = max(256, rows // 10)
+    windows = _tenant_windows(rows, tenants)
+    names = [f"tenant{i}" for i in range(tenants)]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # -- shared: one service; tenant0 cold-fills, the rest run warm
+        # (concurrently, through the scheduler's admission queue)
+        with PipelineService(
+            os.path.join(tmp, "shared"), workers=min(4, tenants),
+            rows_per_fragment=rows_per_fragment,
+        ) as svc:
+            write_events(svc.catalog, rows)
+            t0 = time.perf_counter()
+            r0 = svc.session(names[0]).run(iteration_project(hi=windows[0]))
+            shared = [("cold-fill", _ledger(r0, time.perf_counter() - t0), r0)]
+            t1 = time.perf_counter()
+            handles = [
+                svc.submit(names[i], iteration_project(hi=windows[i]))
+                for i in range(1, tenants)
+            ]
+            svc.drain()
+            wall_warm = time.perf_counter() - t1
+            for i, h in enumerate(handles, start=1):
+                if h.state != "DONE":
+                    raise h.error
+                shared.append(
+                    (f"warm-{i}", _ledger(h.result, h.wall_seconds), h.result)
+                )
+            store_stats = svc.model_store.stats()
+            scan_stats = svc.scan_cache.stats()
+
+        # -- cold: each warm tenant alone in a fresh service
+        per_tenant: List[Dict] = []
+        for i in range(1, tenants):
+            with PipelineService(
+                os.path.join(tmp, f"cold-{i}"), workers=1,
+                rows_per_fragment=rows_per_fragment
+            ) as cold_svc:
+                write_events(cold_svc.catalog, rows)
+                t0 = time.perf_counter()
+                rc = cold_svc.session(names[i]).run(iteration_project(hi=windows[i]))
+                cold = _ledger(rc, time.perf_counter() - t0)
+
+            label, warm, rw = shared[i]
+            # bitwise equality: the shared-warm output IS the cold output
+            for name, table in rc.outputs.items():
+                wtab = rw.outputs[name]
+                assert table.column_names == wtab.column_names, (label, name)
+                for col in table.column_names:
+                    np.testing.assert_array_equal(
+                        table.column(col), wtab.column(col),
+                        err_msg=f"{label}:{name}:{col}",
+                    )
+            kind = "widened" if windows[i] > windows[0] else "nested"
+            per_tenant.append(
+                {
+                    "tenant": names[i],
+                    "window_hi": windows[i],
+                    "kind": kind,
+                    "warm": warm,
+                    "cold": cold,
+                    "bytes_ratio": round(
+                        cold["bytes_from_store"] / max(warm["bytes_from_store"], 1), 2
+                    ),
+                    "rows_ratio": round(
+                        cold["rows_to_user_fns"] / max(warm["rows_to_user_fns"], 1), 2
+                    ),
+                }
+            )
+
+    return {
+        "workload": "multi-tenant-service",
+        "rows": rows,
+        "tenants": tenants,
+        "cold_fill": shared[0][1],
+        "warm_tenants": per_tenant,
+        "warm_wall_seconds": round(wall_warm, 6),
+        "min_bytes_ratio": min(t["bytes_ratio"] for t in per_tenant),
+        "min_rows_ratio": min(t["rows_ratio"] for t in per_tenant),
+        "model_store": store_stats,
+        "scan_cache": {
+            k: v for k, v in scan_stats.items() if not isinstance(v, dict)
+        },
+    }
+
+
+def format_table(result: Dict) -> str:
+    lines = [
+        "| tenant | window | kind | warm store B | cold store B | ratio | warm fn rows | cold fn rows | ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for t in result["warm_tenants"]:
+        lines.append(
+            "| {tenant} | [0,{hi}] | {kind} | {wb:,} | {cb:,} | {br}x | {wr:,} | {cr:,} | {rr}x |".format(
+                tenant=t["tenant"], hi=t["window_hi"], kind=t["kind"],
+                wb=t["warm"]["bytes_from_store"], cb=t["cold"]["bytes_from_store"],
+                br=t["bytes_ratio"], wr=t["warm"]["rows_to_user_fns"],
+                cr=t["cold"]["rows_to_user_fns"], rr=t["rows_ratio"],
+            )
+        )
+    ms = result["model_store"]
+    lines.append(
+        f"\ncross-tenant reuse: {ms['cross_tenant_hits']} hits / "
+        f"{ms['cross_tenant_rows']:,} rows served across tenants; "
+        f"min ratios: bytes {result['min_bytes_ratio']}x, "
+        f"rows {result['min_rows_ratio']}x"
+    )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless every warm tenant beats its cold run >= 3x",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows, tenants=args.tenants)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        ok = result["min_bytes_ratio"] >= 3 and result["min_rows_ratio"] >= 3
+        if not ok:
+            print(
+                f"FAIL: a warm tenant under 3x (bytes {result['min_bytes_ratio']}x, "
+                f"rows {result['min_rows_ratio']}x)"
+            )
+            return 1
+        print(
+            f"OK: every warm tenant >= 3x vs its cold run "
+            f"(bytes {result['min_bytes_ratio']}x, rows {result['min_rows_ratio']}x)"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

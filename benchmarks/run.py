@@ -51,6 +51,19 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_3.json"), "w") as f:
         json.dump(r3i, f, indent=1)
 
+    _section("BENCH 4 — multi-tenant service: cold vs shared-warm per tenant")
+    from benchmarks import bench4_service as b4
+
+    r4s = b4.run(rows=20_000 if not args.full else 200_000)
+    print(b4.format_table(r4s))
+    artifacts["bench4"] = {
+        "min_bytes_ratio": r4s["min_bytes_ratio"],
+        "min_rows_ratio": r4s["min_rows_ratio"],
+        "cross_tenant_hits": r4s["model_store"]["cross_tenant_hits"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_4.json"), "w") as f:
+        json.dump(r4s, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

@@ -31,11 +31,11 @@ __all__ = ["ScanCache", "NoCache"]
 class NoCache:
     """Every scan goes to object storage (the cold baseline)."""
 
-    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str) -> CachePlan:
+    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str, tenant=None) -> CachePlan:
         cost = scan_cost_bytes(snapshot, scan.window, scan.physical_columns(sort_key))
         return CachePlan([], scan.window, cost, cost)
 
-    def insert(self, scan, snapshot, sort_key, window, data) -> None:
+    def insert(self, scan, snapshot, sort_key, window, data, tenant=None) -> None:
         return None
 
 
@@ -60,7 +60,7 @@ class ScanCache:
             scan.window.to_pairs(),
         )
 
-    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str) -> CachePlan:
+    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str, tenant=None) -> CachePlan:
         self.lookups += 1
         key = self._key(scan, snapshot, sort_key)
         baseline = scan_cost_bytes(snapshot, scan.window, scan.physical_columns(sort_key))
@@ -80,7 +80,7 @@ class ScanCache:
             return CachePlan([CacheHit(elem, window)], IntervalSet(), 0, baseline)
         return CachePlan([], scan.window, baseline, baseline)
 
-    def insert(self, scan: Scan, snapshot: Snapshot, sort_key, window, data) -> None:
+    def insert(self, scan: Scan, snapshot: Snapshot, sort_key, window, data, tenant=None) -> None:
         key = self._key(scan, snapshot, sort_key)
         self._store[key] = (window, data)
         self._order.append(key)

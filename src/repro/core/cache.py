@@ -40,6 +40,7 @@ intermediate `@model` outputs (see ``repro.pipeline.executor``).
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
@@ -94,6 +95,7 @@ class CacheElement:
     data: Table  # sorted by sort_key; includes sort_key column
     last_used: int = 0
     signature: Hashable = None  # group key in the DifferentialStore
+    owner: Optional[str] = None  # tenant that paid for these bytes (service)
 
     def __post_init__(self) -> None:
         if self.signature is None:
@@ -202,6 +204,12 @@ class DifferentialStore:
         self.max_bytes = max_bytes
         self._elements: Dict[Hashable, List[CacheElement]] = {}
         self._clock = 0
+        # The store's concurrency discipline lives HERE, not in its callers:
+        # every executor sharing this store must plan+slice (and insert)
+        # under this one lock, so two Workspaces injected with the same
+        # store serialize correctly.  Reentrant because service-layer
+        # subclasses compose base operations while already holding it.
+        self.lock = threading.RLock()
         # observability counters (surface in benchmarks / EXPERIMENTS.md)
         self.lookups = 0
         self.full_hits = 0
@@ -225,6 +233,7 @@ class DifferentialStore:
         columns: Sequence[str],
         cost_fn: Callable[[IntervalSet], int],
         usable_fn: Optional[UsableFn] = None,
+        tenant: Optional[str] = None,
     ) -> CachePlan:
         """Paper Listing 3, iterated to a fixpoint.
 
@@ -293,6 +302,7 @@ class DifferentialStore:
         data: Table,
         pins: Tuple[FragmentPin, ...] = (),
         usable_fn: Optional[UsableFn] = None,
+        tenant: Optional[str] = None,
     ) -> Optional[CacheElement]:
         """Store a freshly computed residual as a new element, then merge
         touching same-column windows within the signature group."""
@@ -309,6 +319,7 @@ class DifferentialStore:
             data=data,
             last_used=self._clock,
             signature=signature,
+            owner=tenant,
         )
         self._elements.setdefault(signature, []).append(elem)
         self._merge_group(signature, usable_fn)
@@ -377,14 +388,20 @@ class DifferentialStore:
             data = concat_tables(parts).sort_by(a.sort_key)
         else:
             data = a.data.slice(0, 0)
-        merged = {p.fragment_id: p for p in a.pins}
-        merged.update({p.fragment_id: p for p in b.pins})
-        # keep only pins that still back some row range of the new window
-        pins = tuple(
-            p
-            for p in merged.values()
-            if window.intersects(IntervalSet([p.window]))
-        )
+        # keep only pins that back rows a side actually CONTRIBUTED: a pin of
+        # a's for a region a did not contribute (its usable window excluded
+        # it — e.g. the fragment was dropped by a newer snapshot) must not
+        # survive into the merged element, or it would keep re-invalidating
+        # a window whose rows b just recomputed against the live fragments —
+        # the merged element could then never serve that window again
+        merged: Dict[str, FragmentPin] = {}
+        for p in a.pins:
+            if a_use.intersects(IntervalSet([p.window])):
+                merged[p.fragment_id] = p
+        for p in b.pins:
+            if b_use.intersects(IntervalSet([p.window])):
+                merged.setdefault(p.fragment_id, p)
+        pins = tuple(merged.values())
         self._clock += 1
         return CacheElement(
             elem_id=next(_ID),
@@ -396,6 +413,9 @@ class DifferentialStore:
             data=data,
             last_used=self._clock,
             signature=a.signature,
+            # merged bytes stay attributed to the side that inserted first;
+            # exact split accounting is not worth tracking per-row owners
+            owner=a.owner if a.owner is not None else b.owner,
         )
 
     def _evict(self) -> None:
@@ -421,7 +441,13 @@ class DifferentialCache(DifferentialStore):
         :func:`snapshot_usable_window`."""
         return snapshot_usable_window(elem, snapshot)
 
-    def plan(self, scan: Scan, snapshot: Snapshot, sort_key: str) -> CachePlan:
+    def plan(
+        self,
+        scan: Scan,
+        snapshot: Snapshot,
+        sort_key: str,
+        tenant: Optional[str] = None,
+    ) -> CachePlan:
         phys = scan.physical_columns(sort_key)
         return self.plan_window(
             signature=scan.table,
@@ -429,6 +455,7 @@ class DifferentialCache(DifferentialStore):
             columns=phys,
             cost_fn=lambda w: scan_cost_bytes(snapshot, w, phys),
             usable_fn=lambda e: snapshot_usable_window(e, snapshot),
+            tenant=tenant,
         )
 
     def insert(
@@ -438,6 +465,7 @@ class DifferentialCache(DifferentialStore):
         sort_key: str,
         window: IntervalSet,
         data: Table,
+        tenant: Optional[str] = None,
     ) -> Optional[CacheElement]:
         """Store a freshly fetched residual as a new element, then merge."""
         pins = pins_for(snapshot, window)
@@ -449,6 +477,7 @@ class DifferentialCache(DifferentialStore):
             data=data,
             pins=pins,
             usable_fn=lambda e: snapshot_usable_window(e, snapshot),
+            tenant=tenant,
         )
 
     def invalidate_table(self, table: str) -> None:

@@ -67,12 +67,19 @@ class ScanExecutor:
         store: ObjectStore,
         catalog: Catalog,
         cache: Optional[Union[DifferentialCache, ScanCache, NoCache]] = None,
+        tenant: Optional[str] = None,
     ):
         self.store = store
         self.catalog = catalog
         self.cache = cache if cache is not None else DifferentialCache()
+        self.tenant = tenant  # attribution when the cache is tenant-aware
         self.reports: List[ScanReport] = []
-        self._lock = threading.Lock()
+        # the plan+slice / insert critical sections must serialize across
+        # EVERY executor sharing this cache object (repro.service gives each
+        # tenant session its own executor over one shared cache), so the
+        # lock is the cache's own when it has one; baseline caches without a
+        # lock fall back to a private one (single-executor use)
+        self._lock = getattr(self.cache, "lock", None) or threading.Lock()
 
     # -- the system function -------------------------------------------------
     def scan(
@@ -94,7 +101,10 @@ class ScanExecutor:
         scan = Scan(table, snapshot.snapshot_id, tuple(columns), window)
         phys = scan.physical_columns(meta.sort_key)
 
-        before = self.store.stats.snapshot()
+        # thread-local ledger: per-scan deltas stay exact when concurrent
+        # runs (repro.service workers) share this object store
+        ledger = self.store.thread_stats()
+        before = ledger.snapshot()
         # plan AND slice the hits under one lock acquisition: between a plan
         # and its slicing, a concurrent insert may merge or evict the very
         # elements the plan's hits reference — the slices (zero-copy views
@@ -103,7 +113,7 @@ class ScanExecutor:
         chunks: List[Table] = []
         bytes_from_cache = 0
         with self._lock:
-            plan = self.cache.plan(scan, snapshot, meta.sort_key)
+            plan = self.cache.plan(scan, snapshot, meta.sort_key, tenant=self.tenant)
             for hit in plan.hits:
                 views = hit.element.slice_window(hit.window, phys)
                 for v in views:
@@ -117,12 +127,15 @@ class ScanExecutor:
                 self.store, snapshot, plan.residual, phys, meta.sort_key, schema=meta.schema
             )
             with self._lock:
-                self.cache.insert(scan, snapshot, meta.sort_key, plan.residual, fresh)
+                self.cache.insert(
+                    scan, snapshot, meta.sort_key, plan.residual, fresh,
+                    tenant=self.tenant,
+                )
             if fresh.num_rows:
                 residual_rows = fresh.num_rows
                 chunks.append(fresh)
 
-        delta = self.store.stats.delta(before)
+        delta = ledger.delta(before)
         self.reports.append(
             ScanReport(
                 table=table,

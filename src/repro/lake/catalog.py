@@ -152,13 +152,20 @@ class Catalog:
         return meta
 
     def table(self, full_name: str) -> TableMeta:
-        if full_name not in self._tables:
-            ptr = self._read_ptr(full_name)
-            if ptr is None:
-                raise KeyError(f"no such table {full_name}")
-            ns, name = full_name.rsplit(".", 1)
-            self._tables[full_name] = TableMeta(ns, name, ptr["schema"], ptr["sort_key"])
-        return self._tables[full_name]
+        # filling the cache must hold the commit lock: a concurrent schema
+        # swap (full republish of a materialized model) pops the entry, and
+        # an unlocked check-then-act here could re-cache the pre-swap schema
+        # permanently
+        with self._lock:
+            if full_name not in self._tables:
+                ptr = self._read_ptr(full_name)
+                if ptr is None:
+                    raise KeyError(f"no such table {full_name}")
+                ns, name = full_name.rsplit(".", 1)
+                self._tables[full_name] = TableMeta(
+                    ns, name, ptr["schema"], ptr["sort_key"]
+                )
+            return self._tables[full_name]
 
     def list_tables(self) -> List[str]:
         return sorted(
@@ -187,6 +194,31 @@ class Catalog:
             raise KeyError(f"no such table {full_name}")
         return self.snapshot(full_name, ptr["current_snapshot"])
 
+    def pointer_state(self, full_name: str) -> Tuple[Snapshot, Dict[str, str]]:
+        """One consistent pointer read: ``(current snapshot, properties)``.
+        Callers needing both (the incremental materializer) must not issue
+        two reads — a commit between them would pair a snapshot with another
+        commit's properties."""
+        with self._lock:
+            ptr = self._read_ptr(full_name)
+            if ptr is None:
+                raise KeyError(f"no such table {full_name}")
+            snap = self.snapshot(full_name, ptr["current_snapshot"])
+            return snap, dict(ptr.get("properties", {}))
+
+    # -- table properties ---------------------------------------------------
+    def table_property(self, full_name: str, key: str) -> Optional[str]:
+        """A string property riding on the table pointer (Iceberg table
+        properties).  Properties change atomically WITH a commit (see the
+        ``properties`` argument of :meth:`append`/:meth:`overwrite_range`),
+        so a reader observing snapshot S observes the properties written by
+        S's commit — the incremental materializer relies on this to pair a
+        published signature with the fragment set it describes."""
+        ptr = self._read_ptr(full_name)
+        if ptr is None:
+            raise KeyError(f"no such table {full_name}")
+        return ptr.get("properties", {}).get(key)
+
     def history(self, full_name: str) -> List[Snapshot]:
         out = []
         snap: Optional[Snapshot] = self.current_snapshot(full_name)
@@ -203,6 +235,8 @@ class Catalog:
         dropped_ids: frozenset,
         operation: str,
         expected_parent: Optional[str],
+        properties: Optional[Dict[str, str]] = None,
+        schema: Optional[Dict[str, str]] = None,
     ) -> Snapshot:
         with self._lock:
             ptr = self._read_ptr(full_name)
@@ -223,6 +257,13 @@ class Catalog:
             )
             self._persist_snapshot(full_name, snap)
             ptr["current_snapshot"] = snap.snapshot_id
+            if properties:
+                ptr.setdefault("properties", {}).update(properties)
+            if schema is not None:
+                # full-republish path (materialized model changed shape): the
+                # new fragment set carries the new schema, swap it atomically
+                ptr["schema"] = dict(schema)
+                self._tables.pop(full_name, None)  # drop cached TableMeta
             self._write_ptr(full_name, ptr)
             return snap
 
@@ -238,11 +279,17 @@ class Catalog:
         return out
 
     def append(
-        self, full_name: str, data: Table, expected_parent: Optional[str] = None
+        self,
+        full_name: str,
+        data: Table,
+        expected_parent: Optional[str] = None,
+        properties: Optional[Dict[str, str]] = None,
     ) -> Snapshot:
         meta = self.table(full_name)
         frags = self._fragmentize(full_name, data, meta.sort_key)
-        return self._commit(full_name, frags, frozenset(), "append", expected_parent)
+        return self._commit(
+            full_name, frags, frozenset(), "append", expected_parent, properties
+        )
 
     def overwrite_range(
         self,
@@ -251,19 +298,42 @@ class Catalog:
         hi: int,
         data: Optional[Table] = None,
         expected_parent: Optional[str] = None,
+        properties: Optional[Dict[str, str]] = None,
+        schema: Optional[Dict[str, str]] = None,
     ) -> Snapshot:
         """Drop every fragment overlapping ``[lo, hi)`` (rewriting the
         survivors outside the window) and optionally add new rows.
 
         This is the mutation path that exercises "free" cache invalidation.
         """
+        return self.overwrite_ranges(
+            full_name, [(lo, hi)], data, expected_parent, properties, schema
+        )
+
+    def overwrite_ranges(
+        self,
+        full_name: str,
+        ranges: Sequence[Tuple[int, int]],
+        data: Optional[Table] = None,
+        expected_parent: Optional[str] = None,
+        properties: Optional[Dict[str, str]] = None,
+        schema: Optional[Dict[str, str]] = None,
+    ) -> Snapshot:
+        """:meth:`overwrite_range` over several disjoint windows in ONE
+        atomic commit: drop every fragment overlapping any window, rewrite
+        surviving rows outside all of them, add ``data``.  The incremental
+        materializer publishes its whole diff (overwritten + deleted +
+        appended windows) through one call, so readers never observe a
+        torn, mid-publish table state."""
         meta = self.table(full_name)
         cur = self.current_snapshot(full_name)
         dropped = frozenset(
-            f.fragment_id for f in cur.fragments if f.overlaps(lo, hi)
+            f.fragment_id
+            for f in cur.fragments
+            if any(f.overlaps(lo, hi) for lo, hi in ranges)
         )
         new_frags: List[FragmentMeta] = []
-        # rewrite surviving rows of dropped fragments (outside the window)
+        # rewrite surviving rows of dropped fragments (outside every window)
         from repro.lake.fragments import read_fragment_columns
 
         for f in cur.fragments:
@@ -271,9 +341,13 @@ class Catalog:
                 continue
             tbl = read_fragment_columns(self.store, f, list(meta.schema))
             keys = tbl.column(meta.sort_key)
-            keep = (keys < lo) | (keys >= hi)
+            keep = np.ones(len(keys), dtype=bool)
+            for lo, hi in ranges:
+                keep &= (keys < lo) | (keys >= hi)
             if keep.any():
                 new_frags.extend(self._fragmentize(full_name, tbl.filter(keep), meta.sort_key))
         if data is not None and data.num_rows:
             new_frags.extend(self._fragmentize(full_name, data, meta.sort_key))
-        return self._commit(full_name, new_frags, dropped, "overwrite", expected_parent)
+        return self._commit(
+            full_name, new_frags, dropped, "overwrite", expected_parent, properties, schema
+        )

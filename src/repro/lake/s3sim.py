@@ -88,6 +88,39 @@ class ObjectStore:
         self.latency = latency or LatencyModel()
         self._lock = threading.Lock()
         self._sizes: Dict[str, int] = {}
+        # per-thread ledger: with many concurrent runs sharing one store
+        # (repro.service), the global ledger interleaves traffic from all of
+        # them; a run measures ITS bytes against the calling thread's ledger
+        self._tls = threading.local()
+
+    def thread_stats(self) -> StoreStats:
+        """The calling thread's private ledger (one run executes on one
+        thread, so per-run deltas against this ledger are exact even under
+        concurrency; single-threaded it mirrors ``stats``)."""
+        st = getattr(self._tls, "stats", None)
+        if st is None:
+            st = self._tls.stats = StoreStats()
+        return st
+
+    def _record(
+        self, gets: int = 0, puts: int = 0, read: int = 0, written: int = 0,
+        secs: float = 0.0,
+    ) -> None:
+        """Apply one I/O event to both ledgers (global under the lock, the
+        thread-local one lock-free)."""
+        with self._lock:
+            self._tally(self.stats, gets, puts, read, written, secs)
+        self._tally(self.thread_stats(), gets, puts, read, written, secs)
+
+    @staticmethod
+    def _tally(
+        st: StoreStats, gets: int, puts: int, read: int, written: int, secs: float
+    ) -> None:
+        st.get_requests += gets
+        st.put_requests += puts
+        st.bytes_read += read
+        st.bytes_written += written
+        st.simulated_seconds += secs
 
     # -- paths -------------------------------------------------------------
     def _path(self, key: str) -> str:
@@ -114,19 +147,15 @@ class ObjectStore:
             f.write(data)
         os.replace(tmp, path)  # atomic publish
         with self._lock:
-            self.stats.put_requests += 1
-            self.stats.bytes_written += len(data)
             self._sizes[key] = len(data)
+        self._record(puts=1, written=len(data))
 
     def get_range(self, key: str, start: int, length: int) -> bytes:
         """Range-byte GET — the paper's atomic physical operation."""
         with open(self._path(key), "rb") as f:
             f.seek(start)
             data = f.read(length)
-        with self._lock:
-            self.stats.get_requests += 1
-            self.stats.bytes_read += len(data)
-            self.stats.simulated_seconds += self.latency.seconds(len(data))
+        self._record(gets=1, read=len(data), secs=self.latency.seconds(len(data)))
         return data
 
     def get(self, key: str) -> bytes:

@@ -242,6 +242,15 @@ def code_fingerprint(fn: Callable) -> str:
             h.update(b"<model-ref>")
         else:
             feed_value(d)
+    # keyword-only defaults live in __kwdefaults__, not __defaults__ — an
+    # edited `*, gain=2.0` must invalidate like any other constant edit
+    for k in sorted(fn.__kwdefaults__ or {}):
+        h.update(k.encode())
+        d = fn.__kwdefaults__[k]
+        if isinstance(d, Model):
+            h.update(b"<model-ref>")
+        else:
+            feed_value(d)
     return h.hexdigest()
 
 

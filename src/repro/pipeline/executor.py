@@ -37,6 +37,7 @@ is what makes the paper's multi-user §III-A workload work.
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from dataclasses import dataclass, field
@@ -51,7 +52,7 @@ from repro.core.cache import (
     snapshot_usable_window,
 )
 from repro.core.columnar import ChunkedTable, Table, concat_tables
-from repro.core.intervals import IntervalSet
+from repro.core.intervals import NEG_INF, POS_INF, Interval, IntervalSet
 from repro.core.planner import ScanExecutor
 from repro.lake.catalog import Catalog, Snapshot
 from repro.lake.s3sim import ObjectStore
@@ -88,22 +89,67 @@ class Workspace:
         cache: Optional[Any] = None,
         rows_per_fragment: int = 1 << 16,
         model_cache_bytes: Optional[int] = None,
+        *,
+        store: Optional[ObjectStore] = None,
+        catalog: Optional[Catalog] = None,
+        model_store: Optional[DifferentialStore] = None,
+        tenant: Optional[str] = None,
     ):
-        self.store = ObjectStore(root)
-        self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        # every collaborator is injectable so repro.service can hand many
+        # tenant workspaces ONE object store, ONE catalog, ONE scan cache and
+        # ONE model store; defaults keep the single-user construction
+        # (`Workspace(root)`) byte-for-byte identical to before
+        if catalog is not None and rows_per_fragment != 1 << 16:
+            raise ValueError(
+                "rows_per_fragment applies to the workspace-built catalog; "
+                "an injected catalog keeps its own"
+            )
+        if model_store is not None and model_cache_bytes is not None:
+            raise ValueError(
+                "model_cache_bytes applies to the workspace-built model "
+                "store; an injected store keeps its own budget"
+            )
+        self.store = store if store is not None else ObjectStore(root)
+        self.catalog = (
+            catalog
+            if catalog is not None
+            else Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        )
         self.scans = ScanExecutor(
-            self.store, self.catalog, cache=cache if cache is not None else DifferentialCache()
+            self.store,
+            self.catalog,
+            cache=cache if cache is not None else DifferentialCache(),
+            tenant=tenant,
         )
         # intermediate @model outputs, keyed by node signature; windows are
-        # sort-key windows of the node's rowwise chain.  Like the scan
-        # executor, plan+slice and insert happen under one lock so a
-        # concurrent run's insert can't merge/evict an element between
-        # planning a hit and taking its views
-        self.model_store = DifferentialStore(max_bytes=model_cache_bytes)
-        self._model_lock = threading.Lock()
+        # sort-key windows of the node's rowwise chain.  Plan+slice and
+        # insert happen under the STORE's lock (not a per-workspace one) so
+        # a concurrent run's insert — possibly through a different Workspace
+        # sharing the store — can't merge/evict an element between planning
+        # a hit and taking its views
+        self.model_store = (
+            model_store
+            if model_store is not None
+            else DifferentialStore(max_bytes=model_cache_bytes)
+        )
+        self._model_lock = self.model_store.lock
+        self.tenant = tenant
 
     # -- running -------------------------------------------------------------
-    def run(self, project: Project, verbose: bool = False) -> RunResult:
+    def run(
+        self,
+        project: Project,
+        verbose: bool = False,
+        snapshot_pins: Optional[Dict[str, str]] = None,
+    ) -> RunResult:
+        """Execute ``project``.  ``snapshot_pins`` maps catalog table names to
+        snapshot ids and applies wherever the user did not pin one explicitly
+        (``Model(snapshot_id=…)`` wins) — tenant sessions use it to run every
+        scan against the session's frozen view of the lake.  Pins are an
+        execution-time choice, NOT part of node signatures: two tenants
+        running the same DAG under different pins share cache elements
+        wherever their snapshots' fragments agree (validity is re-checked
+        per run through fragment pins)."""
         dag = build_dag(project)
         sort_keys = {
             t: self.catalog.table(t).sort_key
@@ -115,8 +161,19 @@ class Workspace:
         if verbose:
             print(plan.describe())
         t0 = time.perf_counter()
-        before = self.store.stats.snapshot()
+        # thread-local ledger: exact per-run attribution even when many
+        # service workers drive one shared object store concurrently
+        ledger = self.store.thread_stats()
+        before = ledger.snapshot()
         reports_before = len(self.scans.reports)
+        # liveness tick: a shared store reclaims signatures no plan has
+        # referenced for N runs (plain stores have no such hook).  The scan
+        # cache ticks too — its "signatures" are table names, so tables no
+        # run has scanned for N runs are reclaimed the same way
+        for shared in (self.model_store, self.scans.cache):
+            begin_run = getattr(shared, "begin_run", None)
+            if begin_run is not None:
+                begin_run()
 
         results: Dict[str, Table] = {}
         node_stats: Dict[str, Dict[str, int]] = {}
@@ -125,20 +182,28 @@ class Workspace:
         # came from, or a commit landing mid-run would let a downstream node
         # pin fragments whose rows its input never contained
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot] = {}
+        pins = snapshot_pins or {}
         for step in plan.steps:
             fn = dag.project[step.model].fn
             if step.incremental == "rowwise":
-                out, stats = self._run_rowwise(step, plan, fn, results, leaf_snapshots)
+                out, stats = self._run_rowwise(
+                    step, plan, fn, results, leaf_snapshots, pins
+                )
             else:
-                out, stats = self._run_full(step, plan, fn, results)
+                out, stats = self._run_full(step, plan, fn, results, pins)
             results[step.model] = out
             node_stats[step.model] = stats
             if step.materialize:
-                # rowwise outputs are canonicalized to sorted column order,
-                # so "first column" is NOT the sort key — use the plan's
-                self._materialize(step.model, out, sort_key=step.sort_key)
+                # the leaf snapshot this run's rows were derived from is the
+                # publication's validity anchor (see _materialize)
+                leaf_snap = (
+                    self._leaf_snapshot(step, leaf_snapshots, pins)
+                    if step.incremental == "rowwise" and step.leaf_table
+                    else None
+                )
+                self._materialize(step, out, leaf_snap)
 
-        delta = self.store.stats.delta(before)
+        delta = ledger.delta(before)
         return RunResult(
             outputs=results,
             bytes_from_store=delta.bytes_read,
@@ -156,14 +221,22 @@ class Workspace:
         )
 
     # -- node execution: full recompute (incremental="none") -----------------
-    def _exec_scan(self, s: SystemScanStep, window: Optional[IntervalSet] = None) -> ChunkedTable:
+    def _exec_scan(
+        self,
+        s: SystemScanStep,
+        window: Optional[IntervalSet] = None,
+        pins: Optional[Dict[str, str]] = None,
+    ) -> ChunkedTable:
         meta = self.catalog.table(s.table)
         parsed = parse_filter(s.predicate_filter, meta.sort_key)
+        snapshot_id = s.snapshot_id
+        if snapshot_id is None and pins:
+            snapshot_id = pins.get(s.table)
         return self.scans.scan(
             s.table,
             s.columns,
             window=window if window is not None else s.window,
-            snapshot_id=s.snapshot_id,
+            snapshot_id=snapshot_id,
             predicate=parsed.predicate_fn(),
         )
 
@@ -173,12 +246,13 @@ class Workspace:
         plan: PhysicalPlan,
         fn: Callable,
         results: Dict[str, Table],
+        pins: Dict[str, str],
     ) -> Tuple[Table, Dict[str, int]]:
         kwargs: Dict[str, Any] = {}
         rows = 0
         for arg, (kind, ref) in step.bindings:
             if kind == "scan":
-                kwargs[arg] = self._exec_scan(plan.scans[ref])
+                kwargs[arg] = self._exec_scan(plan.scans[ref], pins=pins)
             else:
                 kwargs[arg] = results[ref]
             rows += kwargs[arg].num_rows
@@ -190,11 +264,15 @@ class Workspace:
         self,
         step: UserFnStep,
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
+        pins: Dict[str, str],
     ) -> Snapshot:
-        key = (step.leaf_table, step.leaf_snapshot_id)
+        snapshot_id = step.leaf_snapshot_id
+        if snapshot_id is None and pins:
+            snapshot_id = pins.get(step.leaf_table)
+        key = (step.leaf_table, snapshot_id)
         if key not in leaf_snapshots:
-            if step.leaf_snapshot_id is not None:
-                snap = self.catalog.snapshot(step.leaf_table, step.leaf_snapshot_id)
+            if snapshot_id is not None:
+                snap = self.catalog.snapshot(step.leaf_table, snapshot_id)
             else:
                 snap = self.catalog.current_snapshot(step.leaf_table)
             leaf_snapshots[key] = snap
@@ -235,16 +313,8 @@ class Workspace:
                 return Table({n: np.empty(0, dtype=dt(n)) for n in cols})
             return chunked.combine().sort_by(step.sort_key)
         upstream = results[ref]  # rowwise upstream: sorted, carries the key
-        keys = upstream.column(step.sort_key)
-        parts: List[Table] = []
-        for iv in residual:
-            lo = int(np.searchsorted(keys, iv.lo, side="left"))
-            hi = int(np.searchsorted(keys, iv.hi, side="left"))
-            if hi > lo:
-                parts.append(upstream.slice(lo, hi))
-        if not parts:
-            return upstream.slice(0, 0)
-        return concat_tables(parts)
+        rows = self._rows_in(upstream, upstream.column(step.sort_key), residual)
+        return rows if rows is not None else upstream.slice(0, 0)
 
     def _run_rowwise(
         self,
@@ -253,8 +323,9 @@ class Workspace:
         fn: Callable,
         results: Dict[str, Table],
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
+        snap_pins: Dict[str, str],
     ) -> Tuple[Table, Dict[str, int]]:
-        snapshot = self._leaf_snapshot(step, leaf_snapshots)
+        snapshot = self._leaf_snapshot(step, leaf_snapshots, snap_pins)
         if step.window.empty:
             # degenerate filter (e.g. BETWEEN 5 AND 1): run the fn once on an
             # empty, schema-complete input — nothing to cache or serve
@@ -269,50 +340,58 @@ class Workspace:
                 "model_cache_bytes": 0,
             }
         usable_fn = lambda e: snapshot_usable_window(e, snapshot)
-        hit_chunks: List[Table] = []
-        cached_rows = 0
-        cache_bytes = 0
-        with self._model_lock:
-            # cost is row-extent, not fragment bytes: serving ANY cached rows
-            # saves user-function compute, even inside a partially-covered
-            # fragment (unlike a physical scan, which must re-read the whole
-            # fragment's column chunks either way)
-            mplan = self.model_store.plan_window(
-                signature=step.signature,
-                window=step.window,
-                columns=(),
-                cost_fn=lambda w: w.measure(),
-                usable_fn=usable_fn,
-            )
-            for hit in mplan.hits:
-                for view in hit.element.slice_window(hit.window, hit.element.columns):
-                    hit_chunks.append(view)
-                    cached_rows += view.num_rows
-                    cache_bytes += view.nbytes
-
-        fresh: Optional[Table] = None
-        fresh_rows = 0
-        if not mplan.residual.empty:
-            (arg, _binding) = step.bindings[0]
-            in_tbl = self._residual_input(step, plan, results, mplan.residual, snapshot)
-            if in_tbl.num_rows == 0 and hit_chunks:
-                # nothing to compute; keep the output schema from a hit view
-                fresh = hit_chunks[0].slice(0, 0)
-            else:
-                fresh_rows = in_tbl.num_rows
-                out = _invoke(fn, step.runtime, {arg: in_tbl})
-                fresh = self._windowed_output(step, in_tbl, out)
-            pins = pins_for(snapshot, mplan.residual)
+        # hold a signature read-pin for the whole node execution: a shared
+        # store must not liveness/LRU-reclaim the signature group an
+        # in-flight run is working against (plain stores: no-op)
+        reading = getattr(self.model_store, "reading", None)
+        read_pin = reading(step.signature) if reading else contextlib.nullcontext()
+        with read_pin:
+            hit_chunks: List[Table] = []
+            cached_rows = 0
+            cache_bytes = 0
             with self._model_lock:
-                self.model_store.insert_window(
+                # cost is row-extent, not fragment bytes: serving ANY cached
+                # rows saves user-function compute, even inside a partially-
+                # covered fragment (unlike a physical scan, which must
+                # re-read the whole fragment's column chunks either way)
+                mplan = self.model_store.plan_window(
                     signature=step.signature,
-                    table=step.leaf_table,
-                    sort_key=step.sort_key,
-                    window=mplan.residual,
-                    data=fresh,
-                    pins=pins,
+                    window=step.window,
+                    columns=(),
+                    cost_fn=lambda w: w.measure(),
                     usable_fn=usable_fn,
+                    tenant=self.tenant,
                 )
+                for hit in mplan.hits:
+                    for view in hit.element.slice_window(hit.window, hit.element.columns):
+                        hit_chunks.append(view)
+                        cached_rows += view.num_rows
+                        cache_bytes += view.nbytes
+
+            fresh: Optional[Table] = None
+            fresh_rows = 0
+            if not mplan.residual.empty:
+                (arg, _binding) = step.bindings[0]
+                in_tbl = self._residual_input(step, plan, results, mplan.residual, snapshot)
+                if in_tbl.num_rows == 0 and hit_chunks:
+                    # nothing to compute; keep the output schema from a hit view
+                    fresh = hit_chunks[0].slice(0, 0)
+                else:
+                    fresh_rows = in_tbl.num_rows
+                    out = _invoke(fn, step.runtime, {arg: in_tbl})
+                    fresh = self._windowed_output(step, in_tbl, out)
+                pins = pins_for(snapshot, mplan.residual)
+                with self._model_lock:
+                    self.model_store.insert_window(
+                        signature=step.signature,
+                        table=step.leaf_table,
+                        sort_key=step.sort_key,
+                        window=mplan.residual,
+                        data=fresh,
+                        pins=pins,
+                        usable_fn=usable_fn,
+                        tenant=self.tenant,
+                    )
 
         chunks = hit_chunks + ([fresh] if fresh is not None else [])
         assembled = ChunkedTable(chunks)
@@ -374,17 +453,162 @@ class Workspace:
                 out = Table(cols)
         return out.select(sorted(out.column_names)).sort_by(step.sort_key)
 
+    # -- incremental materialization -----------------------------------------
+    @staticmethod
+    def _rows_in(table: Table, keys: np.ndarray, window: IntervalSet) -> Optional[Table]:
+        """``table``'s rows whose sort key lies inside ``window`` (table is
+        sorted by the key); None when the window holds no rows."""
+        parts: List[Table] = []
+        for iv in window:
+            lo = int(np.searchsorted(keys, iv.lo, side="left"))
+            hi = int(np.searchsorted(keys, iv.hi, side="left"))
+            if hi > lo:
+                parts.append(table.slice(lo, hi))
+        if not parts:
+            return None
+        return concat_tables(parts)
+
+    @staticmethod
+    def _changed_since_publish(pub_leaf: Snapshot, cur_leaf: Snapshot) -> IntervalSet:
+        """Key windows whose leaf fragments differ between the snapshot the
+        published rows were derived from and the one this run used — the
+        exact regions where published rows may disagree with the run's
+        output (same signature implies same values everywhere else)."""
+        if pub_leaf.snapshot_id == cur_leaf.snapshot_id:
+            return IntervalSet.empty_set()
+        pub_ids, cur_ids = pub_leaf.fragment_ids, cur_leaf.fragment_ids
+        changed = [
+            Interval(int(f.key_min), int(f.key_max) + 1)
+            for f in pub_leaf.fragments
+            if f.fragment_id not in cur_ids
+        ] + [
+            Interval(int(f.key_min), int(f.key_max) + 1)
+            for f in cur_leaf.fragments
+            if f.fragment_id not in pub_ids
+        ]
+        return IntervalSet(changed)
+
     def _materialize(
-        self, model_name: str, table: Table, sort_key: Optional[str] = None
+        self, step: UserFnStep, table: Table, leaf_snapshot: Optional[Snapshot]
     ) -> None:
+        """Publish a model's output to the catalog *incrementally*.
+
+        The published table mirrors the latest run's output.  For a rowwise
+        node whose signature matches the last publish, only the diff is
+        committed — instead of re-appending the full output every run (which
+        both grew the table unboundedly and duplicated rows):
+
+        - windows whose *leaf fragments* changed between the publication's
+          recorded leaf snapshot and this run's are overwritten (keying on
+          the published state, not on "recomputed this run", matters: a
+          window another run already freshened into the shared cache arrives
+          here as a cache hit, yet still must be republished);
+        - windows of the run the table never covered are appended;
+        - windows the run no longer covers are deleted.
+
+        A signature change (code/schema edit), a non-rowwise node, or a
+        publication without recorded provenance republishes in full.  The
+        whole diff lands in ONE atomic commit (``overwrite_ranges``) carrying
+        the ``signature`` + ``leaf_snapshot`` provenance properties, so
+        concurrent readers see either the previous or the new publication —
+        never a torn mix — and an interrupted publish leaves provenance
+        untouched for the retry to re-derive the same diff.
+
+        The commit is optimistic (``expected_parent``): under the service,
+        two tenants materializing the same model race on the catalog CAS and
+        the loser's :class:`~repro.lake.catalog.CommitConflict` propagates to
+        the session retry loop.
+        """
+        model_name = step.model
         full = f"models.{model_name}"
+        # rowwise outputs are canonicalized to sorted column order, so
+        # "first column" is NOT the sort key — use the plan's when present
+        sort_key = step.sort_key
         if sort_key is None or sort_key not in table.column_names:
             sort_key = table.column_names[0]
+        table = table.sort_by(sort_key)
+        sig = step.signature or ""
         try:
-            self.catalog.table(full)
+            meta = self.catalog.table(full)
+            created = False
         except KeyError:
-            self.catalog.create_table("models", model_name, table.schema(), sort_key)
-        self.catalog.append(full, table.sort_by(sort_key))
+            try:
+                meta = self.catalog.create_table(
+                    "models", model_name, table.schema(), sort_key
+                )
+                created = True
+            except FileExistsError:
+                # lost a concurrent create race: treat the winner's table as
+                # pre-existing; the CAS on the commits below still protects
+                # the content (losers raise CommitConflict -> session retry)
+                meta = self.catalog.table(full)
+                created = False
+        cur, published = self.catalog.pointer_state(full)
+        published_sig = published.get("signature")
+        published_leaf_id = published.get("leaf_snapshot")
+        props = {"signature": sig}
+        if leaf_snapshot is not None:
+            props["leaf_snapshot"] = leaf_snapshot.snapshot_id
+
+        if (
+            created
+            or leaf_snapshot is None
+            or published_sig != sig
+            or not published_leaf_id
+        ):
+            # first publish / arbitrary transformation / code or schema edit
+            # / unknown provenance: mirror the full output
+            if not cur.fragments:
+                if table.num_rows:
+                    self.catalog.append(
+                        full, table, expected_parent=cur.snapshot_id, properties=props
+                    )
+                return
+            new_schema = table.schema()
+            self.catalog.overwrite_range(
+                full,
+                NEG_INF,
+                POS_INF,
+                data=table,
+                expected_parent=cur.snapshot_id,
+                properties=props,
+                schema=new_schema if new_schema != meta.schema else None,
+            )
+            return
+
+        # same signature, rowwise, known provenance: differential publish
+        # against the windows the current fragment set covers
+        pub_window = IntervalSet(
+            [Interval(int(f.key_min), int(f.key_max) + 1) for f in cur.fragments]
+        )
+        new_window = step.window
+        keys = table.column(sort_key)
+        pub_leaf = self.catalog.snapshot(step.leaf_table, published_leaf_id)
+        stale = self._changed_since_publish(pub_leaf, leaf_snapshot)
+
+        # the diff, all of it landing in one commit:
+        # - deleted: published but outside this run's output (narrowed filter)
+        # - rewritten: published windows whose leaf rows changed since the
+        #   recorded publication
+        # - added: windows the table never covered (widened filter, appended
+        #   upstream rows — whether recomputed or cache-served)
+        deleted = pub_window.difference(new_window)
+        rewritten = stale.intersect(pub_window).intersect(new_window)
+        added = new_window.difference(pub_window)
+        rows = self._rows_in(table, keys, rewritten.union(added))
+        drop = deleted.union(rewritten)
+        if not drop.empty:
+            self.catalog.overwrite_ranges(
+                full,
+                drop.to_pairs(),
+                data=rows,
+                expected_parent=cur.snapshot_id,
+                properties=props,
+            )
+        elif rows is not None:
+            self.catalog.append(
+                full, rows, expected_parent=cur.snapshot_id, properties=props
+            )
 
 
 def _to_table(value: Any) -> Table:

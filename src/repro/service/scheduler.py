@@ -1,0 +1,318 @@
+"""The FaaS control plane: admission queue + worker pool over shared state.
+
+:class:`PipelineService` is the process that the paper's setting implies but
+the single-user :class:`~repro.pipeline.executor.Workspace` could not
+express: many data scientists submit pipeline runs against one lakehouse,
+and the service executes them concurrently over ONE object store, ONE
+catalog, ONE differential scan cache and ONE differential model store — so
+a window one tenant paid to compute is served for free to every other
+tenant whose plan subtracts it.
+
+Scheduling discipline:
+
+- **bounded in-flight runs** — ``workers`` threads is the concurrency cap;
+  ``max_queued`` (optional) bounds admission, rejecting with
+  :class:`QueueFull` beyond it;
+- **per-tenant fairness** — runnable tenants are served round-robin, one
+  in-flight run per tenant (which also keeps each session's ledger
+  attributable), so a tenant submitting 100 runs cannot starve one
+  submitting 1;
+- **run states** — ``QUEUED → RUNNING → DONE | FAILED`` on the
+  :class:`RunHandle`; ``FAILED`` carries the exception (after the session's
+  commit-retry budget is exhausted, for writing runs).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Union
+
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+from repro.pipeline.dsl import Project
+from repro.pipeline.executor import RunResult, Workspace
+from repro.service.session import TenantSession
+from repro.service.store import SharedScanCache, SharedStore
+
+__all__ = ["PipelineService", "RunHandle", "ServiceReport", "QueueFull",
+           "QUEUED", "RUNNING", "DONE", "FAILED"]
+
+QUEUED, RUNNING, DONE, FAILED = "QUEUED", "RUNNING", "DONE", "FAILED"
+
+
+class QueueFull(RuntimeError):
+    """Admission rejected: the service's queue is at ``max_queued``."""
+
+
+@dataclass
+class RunHandle:
+    """One submitted pipeline run; the service's unit of scheduling."""
+
+    run_id: int
+    tenant: str
+    project: Project
+    state: str = QUEUED
+    result: Optional[RunResult] = None
+    error: Optional[BaseException] = None
+    wall_seconds: float = 0.0
+    _done: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    def wait(self, timeout: Optional[float] = None) -> "RunHandle":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"run {self.run_id} still {self.state}")
+        return self
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+@dataclass
+class ServiceReport:
+    """What the service did: per-run ledgers plus cross-tenant reuse."""
+
+    runs: List[Dict[str, Any]]
+    tenants: Dict[str, Dict[str, int]]
+    model_store: Dict[str, Any]
+    scan_cache: Dict[str, Any]
+    commit_conflicts: int
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "runs": self.runs,
+            "tenants": self.tenants,
+            "model_store": self.model_store,
+            "scan_cache": self.scan_cache,
+            "commit_conflicts": self.commit_conflicts,
+        }
+
+
+class PipelineService:
+    """A multi-tenant pipeline service over one shared differential cache.
+
+    ``tenant_quota_bytes`` / ``model_cache_bytes`` / ``scan_cache_bytes``
+    bound the shared stores (global LRU spans tenants); ``liveness_runs``
+    reclaims signatures absent from any plan for that many runs.  Use as a
+    context manager or call :meth:`shutdown`.
+    """
+
+    def __init__(
+        self,
+        root: str,
+        workers: int = 4,
+        rows_per_fragment: int = 1 << 16,
+        *,
+        scan_cache_bytes: Optional[int] = None,
+        model_cache_bytes: Optional[int] = None,
+        tenant_quota_bytes: Optional[Union[int, Dict[str, int]]] = None,
+        liveness_runs: Optional[int] = None,
+        max_queued: Optional[int] = None,
+        max_commit_retries: int = 5,
+        max_run_history: int = 4096,
+    ):
+        self.store = ObjectStore(root)
+        self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        self.scan_cache = SharedScanCache(
+            max_bytes=scan_cache_bytes, liveness_runs=liveness_runs
+        )
+        self.model_store = SharedStore(
+            max_bytes=model_cache_bytes,
+            liveness_runs=liveness_runs,
+            tenant_quota_bytes=tenant_quota_bytes,
+        )
+        self.max_queued = max_queued
+        self.max_commit_retries = max_commit_retries
+        self._sessions: Dict[str, TenantSession] = {}
+        self._sessions_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._queues: Dict[str, Deque[RunHandle]] = {}
+        self._rr: Deque[str] = deque()  # round-robin order over tenants
+        self._active: set = set()  # tenants with an in-flight run
+        self._queued_count = 0
+        # a long-running service must not retain every RunHandle (each holds
+        # the run's full output tables): completed handles leave _pending and
+        # only a bounded, compact ledger survives for report()
+        self._pending: List[RunHandle] = []
+        self._run_log: Deque[Dict[str, Any]] = deque(maxlen=max_run_history)
+        self._tenant_totals: Dict[str, Dict[str, int]] = {}
+        self._seq = 0
+        self._shutdown = False
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"repro-service-{i}", daemon=True)
+            for i in range(workers)
+        ]
+        for t in self._workers:
+            t.start()
+
+    # -- sessions ------------------------------------------------------------
+    def session(self, tenant_id: str, pin_tables: bool = True) -> TenantSession:
+        """The tenant's session, created (and its snapshots pinned) on first
+        use.  All sessions share the service's store, catalog and caches —
+        only pins and ledgers are per-tenant."""
+        with self._sessions_lock:
+            if tenant_id not in self._sessions:
+                ws = Workspace(
+                    self.store.root,
+                    cache=self.scan_cache,
+                    store=self.store,
+                    catalog=self.catalog,
+                    model_store=self.model_store,
+                    tenant=tenant_id,
+                )
+                self._sessions[tenant_id] = TenantSession(
+                    tenant_id,
+                    ws,
+                    pin_tables=pin_tables,
+                    max_commit_retries=self.max_commit_retries,
+                )
+            return self._sessions[tenant_id]
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, tenant_id: str, project: Project) -> RunHandle:
+        """Queue a run for ``tenant_id``; returns immediately with a
+        :class:`RunHandle` (``.wait()`` blocks until DONE/FAILED)."""
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("service is shut down")
+            if self.max_queued is not None and self._queued_count >= self.max_queued:
+                raise QueueFull(
+                    f"admission queue at max_queued={self.max_queued}"
+                )
+            self._seq += 1
+            handle = RunHandle(run_id=self._seq, tenant=tenant_id, project=project)
+            if tenant_id not in self._queues:
+                self._queues[tenant_id] = deque()
+                self._rr.append(tenant_id)
+            self._queues[tenant_id].append(handle)
+            self._queued_count += 1
+            self._pending.append(handle)
+            self._cond.notify()
+        return handle
+
+    def run(self, tenant_id: str, project: Project) -> RunResult:
+        """Submit + wait; raises the run's error on failure."""
+        handle = self.submit(tenant_id, project).wait()
+        if handle.state == FAILED:
+            raise handle.error
+        return handle.result
+
+    # -- worker loop ---------------------------------------------------------
+    def _next_runnable(self) -> Optional[RunHandle]:
+        """Round-robin pick: first tenant in rr order with queued work and no
+        in-flight run; that tenant rotates to the back.  Caller holds _cond."""
+        for _ in range(len(self._rr)):
+            tenant = self._rr[0]
+            self._rr.rotate(-1)
+            if tenant not in self._active and self._queues.get(tenant):
+                handle = self._queues[tenant].popleft()
+                self._active.add(tenant)
+                self._queued_count -= 1
+                return handle
+        return None
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                handle = self._next_runnable()
+                while handle is None:
+                    if self._shutdown:
+                        return
+                    self._cond.wait()
+                    handle = self._next_runnable()
+                handle.state = RUNNING
+            t0 = time.perf_counter()
+            try:
+                session = self.session(handle.tenant)
+                handle.result = session.run(handle.project)
+                handle.state = DONE
+            except BaseException as exc:  # a failed run must never kill a worker
+                handle.error = exc
+                handle.state = FAILED
+            finally:
+                handle.wall_seconds = time.perf_counter() - t0
+                with self._cond:
+                    self._active.discard(handle.tenant)
+                    # retire the handle into the compact ledger; the caller's
+                    # own reference (with .result) stays valid
+                    self._run_log.append(self._summary(handle))
+                    if handle.result is not None:
+                        r = handle.result
+                        t = self._tenant_totals.setdefault(
+                            handle.tenant,
+                            {"runs": 0, "bytes_from_store": 0,
+                             "rows_to_user_fns": 0, "bytes_from_model_cache": 0},
+                        )
+                        t["runs"] += 1
+                        t["bytes_from_store"] += int(r.bytes_from_store)
+                        t["rows_to_user_fns"] += int(r.rows_to_user_fns)
+                        t["bytes_from_model_cache"] += int(r.bytes_from_model_cache)
+                    try:
+                        self._pending.remove(handle)
+                    except ValueError:  # pragma: no cover - defensive
+                        pass
+                    self._cond.notify_all()
+                handle._done.set()
+
+    @staticmethod
+    def _summary(h: RunHandle) -> Dict[str, Any]:
+        entry: Dict[str, Any] = {
+            "run_id": h.run_id,
+            "tenant": h.tenant,
+            "state": h.state,
+            "wall_seconds": round(h.wall_seconds, 6),
+        }
+        if h.result is not None:
+            r = h.result
+            entry.update(
+                bytes_from_store=int(r.bytes_from_store),
+                bytes_from_scan_cache=int(r.bytes_from_cache),
+                bytes_from_model_cache=int(r.bytes_from_model_cache),
+                rows_to_user_fns=int(r.rows_to_user_fns),
+            )
+        if h.error is not None:
+            entry["error"] = repr(h.error)
+        return entry
+
+    # -- lifecycle -----------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted run has finished."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            pending = list(self._pending)
+        for h in pending:
+            h.wait(None if deadline is None else max(0.0, deadline - time.monotonic()))
+
+    def shutdown(self, wait: bool = True) -> None:
+        if wait:
+            self.drain()
+        with self._cond:
+            self._shutdown = True
+            self._cond.notify_all()
+        for t in self._workers:
+            t.join(timeout=10)
+
+    def __enter__(self) -> "PipelineService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(wait=exc == (None, None, None))
+
+    # -- reporting -----------------------------------------------------------
+    def report(self) -> ServiceReport:
+        """Completed runs come from the bounded ledger (oldest entries roll
+        off past ``max_run_history``); queued/running runs are listed live."""
+        with self._cond:
+            runs = list(self._run_log) + [self._summary(h) for h in self._pending]
+            tenants = {t: dict(v) for t, v in self._tenant_totals.items()}
+        with self._sessions_lock:  # workers create sessions concurrently
+            conflicts = sum(s.commit_conflicts for s in self._sessions.values())
+        return ServiceReport(
+            runs=runs,
+            tenants=tenants,
+            model_store=self.model_store.stats(),
+            scan_cache=self.scan_cache.stats(),
+            commit_conflicts=conflicts,
+        )

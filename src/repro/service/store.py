@@ -1,0 +1,246 @@
+"""The process-wide differential store behind the multi-tenant service.
+
+A :class:`~repro.core.cache.DifferentialStore` already carries the locking
+discipline (callers plan+slice and insert under ``store.lock``) and a global
+LRU byte budget.  :class:`SharedStore` adds what a *service* needs on top:
+
+- **tenant attribution** — every inserted element records the tenant that
+  paid for its bytes (``CacheElement.owner``); hits against another tenant's
+  elements are counted as *cross-tenant reuse*, the paper's headline win of
+  a cache "shared transparently across users, schemas and time windows";
+- **per-tenant byte quotas** — a tenant over its quota loses its own
+  least-recently-used elements first, so one heavy tenant cannot starve the
+  others out of the global budget;
+- **per-signature reader counts** — an in-flight run holds a read pin on the
+  signature group it executes against (:meth:`reading`); pinned groups are
+  exempt from every eviction path, so a concurrent tenant's insert can never
+  reclaim the group mid-run;
+- **signature-liveness eviction** — signatures no plan has referenced for
+  ``liveness_runs`` runs are reclaimed wholesale (ROADMAP (e): elements
+  under superseded code versions used to linger until the byte budget
+  happened to push them out).
+
+Thread safety: every public method takes the store's reentrant lock, and the
+executors that share the store hold the same lock across their plan+slice
+and insert critical sections, so plans never reference merged-away or
+evicted elements ("no torn reads").
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.cache import (
+    CacheElement,
+    CachePlan,
+    DifferentialCache,
+    DifferentialStore,
+    UsableFn,
+)
+from repro.core.columnar import Table
+from repro.core.intervals import IntervalSet
+
+__all__ = ["SharedStore", "SharedScanCache"]
+
+
+class SharedStore(DifferentialStore):
+    """A :class:`DifferentialStore` hardened for concurrent multi-tenant use.
+
+    ``tenant_quota_bytes`` is either one uniform per-tenant cap or a
+    ``{tenant: cap}`` mapping (missing tenants are uncapped).  Budgets are
+    *soft* while signatures hold read pins: bytes pinned by in-flight runs
+    are never reclaimed, so the store can transiently exceed its budgets by
+    the pinned working set.
+    """
+
+    def __init__(
+        self,
+        max_bytes: Optional[int] = None,
+        liveness_runs: Optional[int] = None,
+        tenant_quota_bytes: Optional[Union[int, Dict[str, int]]] = None,
+    ):
+        super().__init__(max_bytes=max_bytes)
+        self.liveness_runs = liveness_runs
+        self.tenant_quota_bytes = tenant_quota_bytes
+        self._readers: Dict[Hashable, int] = {}  # signature -> active readers
+        self._last_seen: Dict[Hashable, int] = {}  # signature -> run_seq
+        self.run_seq = 0
+        # service observability (surfaced in ServiceReport / BENCH_4)
+        self.liveness_evictions = 0
+        self.quota_evictions = 0
+        self.cross_tenant_hits = 0
+        self.cross_tenant_rows = 0
+
+    # -- run lifecycle -------------------------------------------------------
+    def begin_run(self) -> None:
+        """Called once per pipeline run (the executor's hook).  Advances the
+        liveness clock and reclaims signature groups absent from any plan or
+        insert for ``liveness_runs`` runs — unless a reader pins them."""
+        with self.lock:
+            self.run_seq += 1
+            if self.liveness_runs is None:
+                return
+            horizon = self.run_seq - self.liveness_runs
+            for sig in list(self._elements):
+                if self._readers.get(sig):
+                    continue
+                if self._last_seen.setdefault(sig, self.run_seq) <= horizon:
+                    self.liveness_evictions += len(self._elements[sig])
+                    del self._elements[sig]
+                    self._last_seen.pop(sig, None)
+
+    @contextmanager
+    def reading(self, signature: Hashable):
+        """Pin ``signature`` for the duration of a run's node execution: no
+        eviction path (LRU, quota, liveness) may reclaim a pinned group."""
+        with self.lock:
+            self._readers[signature] = self._readers.get(signature, 0) + 1
+        try:
+            yield
+        finally:
+            with self.lock:
+                n = self._readers.get(signature, 1) - 1
+                if n > 0:
+                    self._readers[signature] = n
+                else:
+                    self._readers.pop(signature, None)
+
+    # -- store surface (tenant-aware) ---------------------------------------
+    def plan_window(
+        self,
+        signature: Hashable,
+        window: IntervalSet,
+        columns: Sequence[str],
+        cost_fn: Callable[[IntervalSet], int],
+        usable_fn: Optional[UsableFn] = None,
+        tenant: Optional[str] = None,
+    ) -> CachePlan:
+        with self.lock:
+            self._last_seen[signature] = self.run_seq
+            plan = super().plan_window(
+                signature, window, columns, cost_fn, usable_fn, tenant=tenant
+            )
+            if tenant is not None:
+                for hit in plan.hits:
+                    owner = hit.element.owner
+                    if owner is not None and owner != tenant:
+                        self.cross_tenant_hits += 1
+                        self.cross_tenant_rows += self._hit_rows(hit)
+            return plan
+
+    @staticmethod
+    def _hit_rows(hit) -> int:
+        """Exact rows a hit serves (window.measure() would count key extent,
+        which is astronomically wrong for unbounded no-filter windows)."""
+        keys = hit.element.data.column(hit.element.sort_key)
+        return sum(
+            int(np.searchsorted(keys, iv.hi, side="left"))
+            - int(np.searchsorted(keys, iv.lo, side="left"))
+            for iv in hit.window
+        )
+
+    def insert_window(
+        self,
+        signature: Hashable,
+        table: str,
+        sort_key: str,
+        window: IntervalSet,
+        data: Table,
+        pins: Tuple = (),
+        usable_fn: Optional[UsableFn] = None,
+        tenant: Optional[str] = None,
+    ) -> Optional[CacheElement]:
+        with self.lock:
+            self._last_seen[signature] = self.run_seq
+            elem = super().insert_window(
+                signature, table, sort_key, window, data, pins, usable_fn, tenant=tenant
+            )
+            self._enforce_tenant_quota(tenant)
+            return elem
+
+    # -- accounting ----------------------------------------------------------
+    def tenant_bytes(self, tenant: str) -> int:
+        with self.lock:
+            return sum(e.nbytes for e in self.elements() if e.owner == tenant)
+
+    def stats(self) -> Dict[str, int]:
+        with self.lock:
+            per_tenant: Dict[str, int] = {}
+            for e in self.elements():  # one pass, not one per tenant
+                if e.owner is not None:
+                    per_tenant[e.owner] = per_tenant.get(e.owner, 0) + e.nbytes
+            return {
+                "nbytes": self.nbytes,
+                "elements": len(self.elements()),
+                "lookups": self.lookups,
+                "full_hits": self.full_hits,
+                "partial_hits": self.partial_hits,
+                "evictions": self.evictions,
+                "quota_evictions": self.quota_evictions,
+                "liveness_evictions": self.liveness_evictions,
+                "cross_tenant_hits": self.cross_tenant_hits,
+                "cross_tenant_rows": self.cross_tenant_rows,
+                "tenant_bytes": dict(sorted(per_tenant.items())),
+            }
+
+    # -- eviction ------------------------------------------------------------
+    def _quota_for(self, tenant: Optional[str]) -> Optional[int]:
+        if tenant is None:
+            return None
+        if isinstance(self.tenant_quota_bytes, dict):
+            return self.tenant_quota_bytes.get(tenant)
+        return self.tenant_quota_bytes
+
+    def _enforce_tenant_quota(self, tenant: Optional[str]) -> None:
+        quota = self._quota_for(tenant)
+        if quota is None:
+            return
+        # one scan, then decrement while evicting — this runs under the
+        # store-wide lock, so a per-victim rescan would stall every tenant
+        owned_bytes = 0
+        evictable: List[CacheElement] = []
+        for e in self.elements():
+            if e.owner != tenant:
+                continue
+            owned_bytes += e.nbytes
+            if not self._readers.get(e.signature):
+                evictable.append(e)
+        evictable.sort(key=lambda e: e.last_used)  # LRU first
+        for victim in evictable:
+            if owned_bytes <= quota:
+                return
+            self._elements[victim.signature].remove(victim)
+            owned_bytes -= victim.nbytes
+            self.quota_evictions += 1
+            self.evictions += 1
+
+    def _evict(self) -> None:
+        # global LRU across ALL tenants, skipping read-pinned signatures
+        # (called by the base class inside insert_window, lock already held);
+        # one scan then decrement, like _enforce_tenant_quota
+        if self.max_bytes is None:
+            return
+        total = 0
+        evictable: List[CacheElement] = []
+        for e in self.elements():
+            total += e.nbytes
+            if not self._readers.get(e.signature):
+                evictable.append(e)
+        evictable.sort(key=lambda e: e.last_used)  # LRU first
+        for victim in evictable:
+            if total <= self.max_bytes:
+                return
+            self._elements[victim.signature].remove(victim)
+            total -= victim.nbytes
+            self.evictions += 1
+
+
+class SharedScanCache(SharedStore, DifferentialCache):
+    """The service's *scan* cache: :class:`DifferentialCache` semantics
+    (table-name signatures, fragment-pin invalidation, physical-byte cost)
+    over the shared store's machinery.  Tenant sessions each own a
+    :class:`~repro.core.planner.ScanExecutor` but all executors share this
+    one object — and therefore its lock, budget and liveness clock."""

@@ -1,0 +1,243 @@
+"""BENCH_5: tiered differential cache — cold vs warm-restart vs coalesced.
+
+The PR-4 service died with its process: every restart re-paid the full cold
+fill of BENCH_4, and two in-flight runs planning the same residual both
+computed it.  This bench measures the two fixes on the BENCH_4 workload:
+
+- **cold**: a fresh spill-backed service over a fresh lake runs the
+  multi-tenant iteration workload (tenant 0 cold-fills, tenants 1..N-1 run
+  concurrently over nested/widened windows).  Clean shutdown parks every
+  cache element in the spill tier (IPC files + sidecar manifests under the
+  service's object store).
+- **warm restart**: a NEW service over the SAME root rebuilds both stores'
+  indexes from the manifests and replays the identical workload.  Served
+  windows promote via ``read_ipc(mmap=True)`` — only manifests and IPC
+  headers are read eagerly — so bytes-from-store must drop ≥5× with
+  bitwise-equal outputs (the acceptance gate).
+- **coalesced**: N tenants submit the *identical* pipeline concurrently to
+  a fresh service.  With in-flight residual coalescing, the residual user
+  fns execute exactly once: the duplicate-work counter (total
+  ``rows_to_user_fns`` across all N runs minus a single run's) must be 0.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench5_tiered [--rows N] [--tenants K] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.workloads import iteration_project, write_events
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_5.json"
+)
+
+
+def _tenant_windows(rows: int, tenants: int) -> List[int]:
+    """Tenant 0 covers [0, 0.8 rows]; the rest alternate widened and nested
+    windows (the BENCH_4 shape)."""
+    base = int(0.8 * rows)
+    out = [base]
+    for i in range(1, tenants):
+        out.append(rows if i % 2 == 1 else int(0.6 * rows))
+    return out
+
+
+def _run_workload(svc, names: List[str], windows: List[int]) -> Dict[str, object]:
+    """Tenant 0 sequentially (the fill), the rest concurrently through the
+    scheduler — exactly the BENCH_4 discipline."""
+    results = {names[0]: svc.session(names[0]).run(iteration_project(hi=windows[0]))}
+    handles = [
+        svc.submit(names[i], iteration_project(hi=windows[i]))
+        for i in range(1, len(names))
+    ]
+    svc.drain()
+    for i, h in enumerate(handles, start=1):
+        if h.state != "DONE":
+            raise h.error
+        results[names[i]] = h.result
+    return results
+
+
+def _assert_equal_outputs(a, b, label: str) -> None:
+    for name, table in a.outputs.items():
+        other = b.outputs[name]
+        assert table.column_names == other.column_names, (label, name)
+        for col in table.column_names:
+            np.testing.assert_array_equal(
+                table.column(col), other.column(col), err_msg=f"{label}:{name}:{col}"
+            )
+
+
+def run(rows: int = 20_000, tenants: int = 4) -> Dict:
+    from repro.service import PipelineService
+
+    rows_per_fragment = max(256, rows // 10)
+    windows = _tenant_windows(rows, tenants)
+    names = [f"tenant{i}" for i in range(tenants)]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        root = os.path.join(tmp, "tiered")
+
+        # -- phase 1: cold fill on a spill-backed service
+        with PipelineService(
+            root, workers=min(4, tenants), rows_per_fragment=rows_per_fragment,
+            spill=True,
+        ) as svc:
+            write_events(svc.catalog, rows)
+            before = svc.store.stats.snapshot()
+            t0 = time.perf_counter()
+            cold_results = _run_workload(svc, names, windows)
+            cold_wall = time.perf_counter() - t0
+            cold_bytes = svc.store.stats.delta(before).bytes_read
+            cold_store = svc.model_store.stats()
+
+        # -- phase 2: restart over the same root; the spill manifests are
+        # the only state carried over (both stores start demoted-warm).
+        # The fresh ObjectStore's ledger starts at zero, so the restore
+        # reads (manifests) are charged to the warm phase.
+        t0 = time.perf_counter()
+        with PipelineService(
+            root, workers=min(4, tenants), rows_per_fragment=rows_per_fragment,
+            spill=True,
+        ) as svc2:
+            restored = (
+                svc2.model_store.spill_restored + svc2.scan_cache.spill_restored
+            )
+            warm_results = _run_workload(svc2, names, windows)
+            warm_wall = time.perf_counter() - t0
+            warm_bytes = svc2.store.stats.bytes_read
+            warm_store = svc2.model_store.stats()
+            warm_rows = sum(r.rows_to_user_fns for r in warm_results.values())
+            warm_spill_bytes = sum(
+                r.bytes_from_spill for r in warm_results.values()
+            )
+
+        for name in names:
+            _assert_equal_outputs(cold_results[name], warm_results[name], name)
+
+        # -- phase 3: N tenants, identical pipeline, concurrently — the
+        # duplicate-work gate (exactly one residual execution)
+        coal_root = os.path.join(tmp, "coalesced")
+        with PipelineService(
+            coal_root, workers=tenants, rows_per_fragment=rows_per_fragment
+        ) as svc3:
+            write_events(svc3.catalog, rows)
+            project_hi = windows[0]
+            handles = [
+                svc3.submit(n, iteration_project(hi=project_hi)) for n in names
+            ]
+            svc3.drain()
+            for h in handles:
+                if h.state != "DONE":
+                    raise h.error
+            total_rows = sum(h.result.rows_to_user_fns for h in handles)
+            coalesced_waits = (
+                svc3.model_store.coalesced_waits + svc3.scan_cache.coalesced_waits
+            )
+            coal_ref = handles[0].result
+
+        with PipelineService(
+            os.path.join(tmp, "single"), workers=1,
+            rows_per_fragment=rows_per_fragment,
+        ) as svc4:
+            write_events(svc4.catalog, rows)
+            ref = svc4.session("solo").run(iteration_project(hi=project_hi))
+        for h in handles:
+            _assert_equal_outputs(h.result, ref, f"coalesced:{h.tenant}")
+        duplicate_rows = total_rows - ref.rows_to_user_fns
+
+    return {
+        "workload": "tiered-cache-restart+coalescing",
+        "rows": rows,
+        "tenants": tenants,
+        "cold": {
+            "bytes_from_store": int(cold_bytes),
+            "wall_seconds": round(cold_wall, 6),
+            "demotions": cold_store["demotions"],
+        },
+        "warm_restart": {
+            "bytes_from_store": int(warm_bytes),
+            "wall_seconds": round(warm_wall, 6),
+            "rows_to_user_fns": int(warm_rows),
+            "bytes_from_spill": int(warm_spill_bytes),
+            "elements_restored": int(restored),
+            "promotions": warm_store["promotions"],
+        },
+        "restart_bytes_ratio": round(cold_bytes / max(warm_bytes, 1), 2),
+        "coalesced": {
+            "concurrent_runs": tenants,
+            "total_rows_to_user_fns": int(total_rows),
+            "single_run_rows": int(ref.rows_to_user_fns),
+            "duplicate_rows": int(duplicate_rows),
+            "coalesced_waits": int(coalesced_waits),
+        },
+    }
+
+
+def format_table(result: Dict) -> str:
+    c, w = result["cold"], result["warm_restart"]
+    co = result["coalesced"]
+    lines = [
+        "| phase | store bytes | fn rows | notes |",
+        "|---|---|---|---|",
+        f"| cold (spill fill) | {c['bytes_from_store']:,} | - | "
+        f"{c['demotions']} demotions |",
+        f"| warm restart | {w['bytes_from_store']:,} | {w['rows_to_user_fns']:,} | "
+        f"{w['elements_restored']} elements restored, {w['promotions']} promotions, "
+        f"{w['bytes_from_spill']:,} B from spill |",
+        f"| coalesced x{co['concurrent_runs']} | - | {co['total_rows_to_user_fns']:,} | "
+        f"single run = {co['single_run_rows']:,} rows; duplicates = "
+        f"{co['duplicate_rows']}; waits = {co['coalesced_waits']} |",
+        f"\nrestart bytes ratio (cold/warm): {result['restart_bytes_ratio']}x",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless restart-warm >= 5x fewer store bytes and "
+        "duplicate residual rows == 0",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows, tenants=args.tenants)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        ok = (
+            result["restart_bytes_ratio"] >= 5
+            and result["coalesced"]["duplicate_rows"] == 0
+        )
+        if not ok:
+            print(
+                f"FAIL: restart ratio {result['restart_bytes_ratio']}x (need >=5), "
+                f"duplicate rows {result['coalesced']['duplicate_rows']} (need 0)"
+            )
+            return 1
+        print(
+            f"OK: restart-warm {result['restart_bytes_ratio']}x fewer store bytes, "
+            f"0 duplicate residual rows across {args.tenants} concurrent runs"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

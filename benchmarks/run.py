@@ -64,6 +64,19 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_4.json"), "w") as f:
         json.dump(r4s, f, indent=1)
 
+    _section("BENCH 5 — tiered cache: cold vs warm-restart vs coalesced")
+    from benchmarks import bench5_tiered as b5
+
+    r5 = b5.run(rows=20_000 if not args.full else 200_000)
+    print(b5.format_table(r5))
+    artifacts["bench5"] = {
+        "restart_bytes_ratio": r5["restart_bytes_ratio"],
+        "duplicate_rows": r5["coalesced"]["duplicate_rows"],
+        "coalesced_waits": r5["coalesced"]["coalesced_waits"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_5.json"), "w") as f:
+        json.dump(r5, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

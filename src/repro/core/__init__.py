@@ -6,7 +6,8 @@ planner/executor that realizes logical dataframes from object storage.
 from repro.core.intervals import Interval, IntervalSet
 from repro.core.columnar import ChunkedTable, Table, concat_tables, read_ipc, write_ipc
 from repro.core.scan import Scan, fragments_overlapping, read_window, scan_cost_bytes
-from repro.core.cache import CacheElement, CachePlan, DifferentialCache
+from repro.core.cache import CacheElement, CachePlan, DifferentialCache, DifferentialStore
+from repro.core.spill import SpillTier
 from repro.core.baselines import NoCache, ScanCache
 from repro.core.planner import ResultCachingExecutor, ScanExecutor, ScanReport
 
@@ -25,6 +26,8 @@ __all__ = [
     "CacheElement",
     "CachePlan",
     "DifferentialCache",
+    "DifferentialStore",
+    "SpillTier",
     "ScanCache",
     "NoCache",
     "ScanExecutor",

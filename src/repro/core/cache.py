@@ -58,11 +58,18 @@ __all__ = [
     "DifferentialStore",
     "DifferentialCache",
     "FragmentPin",
+    "next_elem_id",
     "pins_for",
     "snapshot_usable_window",
 ]
 
 _ID = itertools.count()
+
+
+def next_elem_id() -> int:
+    """Fresh element id (shared counter, so restored spill elements can't
+    collide with elements created in-process)."""
+    return next(_ID)
 
 # Validity policy: which part of an element's window may still be served.
 # Scans check fragment pins against a snapshot; model nodes whose staleness is
@@ -92,18 +99,34 @@ class CacheElement:
     columns: Tuple[str, ...]  # physical columns (includes sort key)
     window: IntervalSet
     pins: Tuple[FragmentPin, ...]
-    data: Table  # sorted by sort_key; includes sort_key column
+    data: Optional[Table]  # sorted by sort_key; None while demoted to spill
     last_used: int = 0
     signature: Hashable = None  # group key in the DifferentialStore
     owner: Optional[str] = None  # tenant that paid for these bytes (service)
+    spill: Optional[object] = None  # SpillEntry when a spill copy exists
 
     def __post_init__(self) -> None:
         if self.signature is None:
             self.signature = self.table
 
     @property
+    def resident(self) -> bool:
+        """Whether the payload is in the RAM tier (demoted elements keep
+        window/pins/columns in RAM — enough to plan against — but their rows
+        live only in the spill tier until promoted)."""
+        return self.data is not None
+
+    @property
     def nbytes(self) -> int:
-        return self.data.nbytes
+        """RAM-tier bytes: a demoted element holds no payload in memory."""
+        return self.data.nbytes if self.data is not None else 0
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Payload bytes wherever they live (RAM or spill)."""
+        if self.data is not None:
+            return self.data.nbytes
+        return self.spill.nbytes if self.spill is not None else 0
 
     @property
     def pin_ids(self) -> frozenset:
@@ -111,6 +134,12 @@ class CacheElement:
 
     def slice_window(self, window: IntervalSet, columns: Sequence[str]) -> List[Table]:
         """Zero-copy chunks of this element's rows inside ``window``."""
+        if self.data is None:
+            raise RuntimeError(
+                f"element {self.elem_id} is demoted; the planner promotes "
+                f"hits before handing them out — slicing a demoted element "
+                f"is a store-discipline bug"
+            )
         keys = self.data.column(self.sort_key)
         view = self.data.select(list(columns))
         chunks: List[Table] = []
@@ -137,6 +166,7 @@ class CachePlan:
     residual: IntervalSet
     residual_cost_bytes: int
     baseline_cost_bytes: int  # cost had there been no cache
+    promoted_spill_bytes: int = 0  # payload bytes promoted spill -> RAM for hits
 
     @property
     def fully_cached(self) -> bool:
@@ -189,7 +219,8 @@ def snapshot_usable_window(elem: CacheElement, snapshot: Snapshot) -> IntervalSe
 
 
 class DifferentialStore:
-    """Greedy differential window store with LRU byte-budget eviction.
+    """Greedy differential window store: a RAM tier with LRU byte-budget
+    eviction over an optional **spill tier** of IPC files in object storage.
 
     Elements are grouped by *signature*; within a group, :meth:`plan_window`
     runs the paper's Listing 3 greedy subtraction and :meth:`insert_window`
@@ -198,10 +229,19 @@ class DifferentialStore:
     against the current snapshot) and ``cost_fn`` (the `compute_cost` bound of
     Listing 3) per call, so one store serves both table scans and
     intermediate model outputs.
+
+    With a ``spill`` tier (:class:`~repro.core.spill.SpillTier`), eviction
+    *demotes* payloads to object storage instead of dropping them: the
+    element stays in the index (window/pins/columns are tiny), its rows move
+    to an IPC file, and a later plan that hits it promotes the payload back
+    via mmap — zero-copy until touched.  The effective cache capacity is
+    therefore the spill store, not RAM, and a fresh store over a populated
+    spill root starts warm (the tier rebuilds the index from manifests).
     """
 
-    def __init__(self, max_bytes: Optional[int] = None):
+    def __init__(self, max_bytes: Optional[int] = None, spill=None):
         self.max_bytes = max_bytes
+        self.spill = spill
         self._elements: Dict[Hashable, List[CacheElement]] = {}
         self._clock = 0
         # The store's concurrency discipline lives HERE, not in its callers:
@@ -215,6 +255,14 @@ class DifferentialStore:
         self.full_hits = 0
         self.partial_hits = 0
         self.evictions = 0
+        self.demotions = 0
+        self.promotions = 0
+        self.bytes_from_spill = 0  # cumulative payload bytes promoted
+        self.spill_restored = 0
+        if spill is not None:
+            for elem in spill.restore():
+                self._elements.setdefault(elem.signature, []).append(elem)
+                self.spill_restored += 1
 
     # -- public API ----------------------------------------------------------
     def elements(self, signature: Optional[Hashable] = None) -> List[CacheElement]:
@@ -224,7 +272,16 @@ class DifferentialStore:
 
     @property
     def nbytes(self) -> int:
+        """RAM-tier bytes (demoted payloads count 0 — see ``spill_nbytes``)."""
         return sum(e.nbytes for e in self.elements())
+
+    @property
+    def spill_nbytes(self) -> int:
+        """Payload bytes currently demoted to the spill tier."""
+        return sum(
+            e.spill.nbytes for e in self.elements()
+            if e.data is None and e.spill is not None
+        )
 
     def plan_window(
         self,
@@ -286,11 +343,29 @@ class DifferentialStore:
             self.full_hits += 1
         elif hits:
             self.partial_hits += 1
+        # spilled windows ARE hits: promote the chosen elements' payloads
+        # back into the RAM tier (mmap — zero-copy until touched) so the
+        # caller can slice them under the same lock acquisition
+        promoted = 0
+        for h in hits:
+            e = h.element
+            if e.data is None:
+                e.data = self.spill.load(e.spill)
+                self.promotions += 1
+                promoted += e.data.nbytes
+                self.bytes_from_spill += e.data.nbytes
+        if promoted:
+            # promotions grew the RAM tier: demote back down to budget, but
+            # never THIS plan's hits — the caller slices them right after,
+            # so the budget is soft by the plan's working set (same
+            # discipline as read-pinned signatures in the shared store)
+            self._evict(protect=frozenset(h.element.elem_id for h in hits))
         return CachePlan(
             hits=hits,
             residual=remaining,
             residual_cost_bytes=cost,
             baseline_cost_bytes=baseline,
+            promoted_spill_bytes=promoted,
         )
 
     def insert_window(
@@ -327,15 +402,34 @@ class DifferentialStore:
         return elem
 
     def invalidate(self, signature: Hashable) -> None:
-        self._elements.pop(signature, None)
+        for e in self._elements.pop(signature, ()):
+            self._drop_spill_entry(e)
 
     def clear(self) -> None:
+        for e in self.elements():
+            self._drop_spill_entry(e)
         self._elements.clear()
+
+    def demote_all(self) -> None:
+        """Park every resident payload in the spill tier (no-op without
+        one).  A service calls this at shutdown so the next process over the
+        same spill root restarts warm; elements already spilled just drop
+        their RAM reference (the spill copy is still authoritative)."""
+        if self.spill is None:
+            return
+        with self.lock:
+            for e in self.elements():
+                if e.data is not None:
+                    self._demote(e)
 
     # -- internals -----------------------------------------------------------
     def _merge_group(self, signature: Hashable, usable_fn: Optional[UsableFn]) -> None:
         """Combine elements with identical projections and touching windows
-        (validity re-checked through ``usable_fn`` so merged rows agree)."""
+        (validity re-checked through ``usable_fn`` so merged rows agree).
+
+        Only RESIDENT pairs merge: merging a demoted element would force a
+        promotion on every insert, and leaving it un-merged is always
+        correct — the greedy planner handles overlapping elements."""
         elems = self._elements.get(signature, [])
         by_cols: Dict[Tuple[str, ...], List[CacheElement]] = {}
         for e in elems:
@@ -348,10 +442,18 @@ class DifferentialStore:
                 for i in range(len(group)):
                     for j in range(i + 1, len(group)):
                         a, b = group[i], group[j]
-                        if self._touches(a.window, b.window):
+                        if (
+                            a.data is not None
+                            and b.data is not None
+                            and self._touches(a.window, b.window)
+                        ):
                             group.pop(j)
                             group.pop(i)
                             group.append(self._merge_pair(a, b, usable_fn))
+                            # the sides' spill copies (if any) no longer
+                            # describe a live element — GC them
+                            self._drop_spill_entry(a)
+                            self._drop_spill_entry(b)
                             merged = True
                             break
                     if merged:
@@ -359,6 +461,9 @@ class DifferentialStore:
             out.extend(group)
         # a merge of two fully-invalidated elements leaves an empty window;
         # such an element can never serve anything again — drop it
+        dropped = [e for e in out if e.window.empty]
+        for e in dropped:
+            self._drop_spill_entry(e)
         self._elements[signature] = [e for e in out if not e.window.empty]
 
     @staticmethod
@@ -418,15 +523,45 @@ class DifferentialStore:
             owner=a.owner if a.owner is not None else b.owner,
         )
 
-    def _evict(self) -> None:
+    def _drop_spill_entry(self, elem: CacheElement) -> None:
+        """GC an element's spill objects (it is leaving the index, or its
+        spill copy no longer describes a live element)."""
+        if elem.spill is not None and self.spill is not None:
+            self.spill.drop(elem.spill)
+            elem.spill = None
+
+    def _demote(self, elem: CacheElement) -> None:
+        """Move ``elem``'s payload out of the RAM tier.  With a spill tier
+        (and a spillable element) the payload is parked as an IPC file — or
+        simply dereferenced when a clean spill copy already exists; without
+        one, the element is dropped entirely (the pre-spill behavior).
+
+        Always safe for concurrent readers: handed-out slices are views over
+        immutable buffers that outlive the store's reference."""
+        if self.spill is not None and (
+            elem.spill is not None or self.spill.spillable(elem)
+        ):
+            if elem.spill is None:
+                elem.spill = self.spill.spill(elem)
+            elem.data = None
+            self.demotions += 1
+        else:
+            self._elements[elem.signature].remove(elem)
+            self._drop_spill_entry(elem)
+
+    def _evict(self, protect: frozenset = frozenset()) -> None:
         if self.max_bytes is None:
             return
+        # LRU over RESIDENT elements only — demoted ones hold no RAM
         while self.nbytes > self.max_bytes:
-            all_elems = self.elements()
-            if not all_elems:
+            resident = [
+                e for e in self.elements()
+                if e.data is not None and e.elem_id not in protect
+            ]
+            if not resident:
                 return
-            victim = min(all_elems, key=lambda e: e.last_used)
-            self._elements[victim.signature].remove(victim)
+            victim = min(resident, key=lambda e: e.last_used)
+            self._demote(victim)
             self.evictions += 1
 
 

@@ -168,7 +168,13 @@ class ChunkedTable:
         )
 
     def column(self, name: str) -> np.ndarray:
-        return self.combine().column(name)
+        """One logical column — concatenates ONLY the requested column's
+        chunks (``combine()`` would materialize every column to read one)."""
+        if len(self.chunks) == 1:
+            return self.chunks[0].column(name)
+        if not self.chunks:
+            return Table({}).column(name)  # KeyError, like combine() would
+        return np.concatenate([c.column(name) for c in self.chunks])
 
     def sort_by(self, name: str) -> Table:
         return self.combine().sort_by(name)
@@ -187,38 +193,52 @@ def concat_tables(tables: Sequence[Table]) -> Table:
 # the Arrow-IPC row of paper Table I.
 # ---------------------------------------------------------------------------
 
-def write_ipc(table: Table, path: str) -> int:
-    """Serialize ``table``; returns bytes written."""
+def write_ipc(table: Table, dest) -> int:
+    """Serialize ``table`` to ``dest`` (a path or a writable binary file
+    object); returns total bytes written.
+
+    Column buffers are handed to the file layer as ``memoryview``s over the
+    arrays themselves — serialization never holds a second copy of a column
+    (the old ``tobytes()`` + pad-concatenation path transiently doubled the
+    table's footprint, which matters when spilling a large cache element)."""
     cols = []
     offset = 0
-    bufs: List[bytes] = []
+    arrs: List[Tuple[np.ndarray, int]] = []
     for name in table.column_names:
-        arr = np.ascontiguousarray(table.column(name))
-        raw = arr.tobytes()
-        pad = (-len(raw)) % 64  # 64-byte alignment like Arrow
+        arr = table.column(name)
+        if not arr.flags.c_contiguous:
+            arr = np.ascontiguousarray(arr)
+        pad = (-arr.nbytes) % 64  # 64-byte alignment like Arrow
         cols.append(
             {
                 "name": name,
                 "dtype": arr.dtype.str,
                 "rows": int(arr.shape[0]),
                 "offset": offset,
-                "nbytes": len(raw),
+                "nbytes": int(arr.nbytes),
             }
         )
-        bufs.append(raw + b"\0" * pad)
-        offset += len(raw) + pad
+        arrs.append((arr, pad))
+        offset += arr.nbytes + pad
     header = json.dumps({"columns": cols}).encode()
-    with open(path, "wb") as f:
+    head_pad = (-(len(_MAGIC) + 8 + len(header))) % 64
+
+    def _write(f) -> None:
         f.write(_MAGIC)
         f.write(struct.pack("<Q", len(header)))
         f.write(header)
-        body_start = f.tell()
-        pad = (-body_start) % 64
-        f.write(b"\0" * pad)
-        for raw in bufs:
-            f.write(raw)
-        total = f.tell()
-    return total
+        f.write(b"\0" * head_pad)
+        for arr, pad in arrs:
+            f.write(memoryview(arr).cast("B"))  # zero-copy buffer handoff
+            if pad:
+                f.write(b"\0" * pad)
+
+    if hasattr(dest, "write"):
+        _write(dest)
+    else:
+        with open(dest, "wb") as f:
+            _write(f)
+    return len(_MAGIC) + 8 + len(header) + head_pad + offset
 
 
 def read_ipc(path: str, mmap: bool = True) -> Table:

@@ -52,6 +52,8 @@ class ScanReport:
     fully_cached: bool
     simulated_seconds: float
     residual_rows: int = 0  # rows fetched fresh from object storage
+    bytes_from_spill: int = 0  # payload bytes promoted spill -> RAM for hits
+    coalesced_waits: int = 0  # replans after subscribing to another's claim
 
     @property
     def bytes_processed(self) -> int:
@@ -109,31 +111,58 @@ class ScanExecutor:
         # and its slicing, a concurrent insert may merge or evict the very
         # elements the plan's hits reference — the slices (zero-copy views
         # over immutable buffers) must be taken while the plan is still the
-        # cache's current truth
-        chunks: List[Table] = []
-        bytes_from_cache = 0
-        with self._lock:
-            plan = self.cache.plan(scan, snapshot, meta.sort_key, tenant=self.tenant)
-            for hit in plan.hits:
-                views = hit.element.slice_window(hit.window, phys)
-                for v in views:
-                    bytes_from_cache += v.nbytes
-                chunks.extend(views)
-        hit_chunks = len(chunks)
+        # cache's current truth.  Shared caches also coalesce: claiming the
+        # residual in the SAME critical section as the plan means of N
+        # concurrent identical scans exactly one reads the residual from
+        # object storage and the rest subscribe, replan, and hit.
+        claimer = getattr(self.cache, "claim_residual", None)
+        claim = None
+        waits = 0
+        spill_bytes = 0  # accumulated across replan rounds (see executor)
+        try:
+            while True:
+                chunks: List[Table] = []
+                bytes_from_cache = 0
+                wait_event = None
+                with self._lock:
+                    plan = self.cache.plan(
+                        scan, snapshot, meta.sort_key, tenant=self.tenant
+                    )
+                    spill_bytes += plan.promoted_spill_bytes
+                    if claimer is not None and not plan.residual.empty:
+                        claim, wait_event = claimer(
+                            scan.table, plan.residual, phys,
+                            snapshot_id=snapshot.snapshot_id,
+                        )
+                    if wait_event is None:
+                        for hit in plan.hits:
+                            views = hit.element.slice_window(hit.window, phys)
+                            for v in views:
+                                bytes_from_cache += v.nbytes
+                            chunks.extend(views)
+                if wait_event is None:
+                    break
+                waits += 1
+                wait_event.wait(timeout=60.0)
+            hit_chunks = len(chunks)
 
-        residual_rows = 0
-        if not plan.residual.empty:
-            fresh = read_window(
-                self.store, snapshot, plan.residual, phys, meta.sort_key, schema=meta.schema
-            )
-            with self._lock:
-                self.cache.insert(
-                    scan, snapshot, meta.sort_key, plan.residual, fresh,
-                    tenant=self.tenant,
+            residual_rows = 0
+            if not plan.residual.empty:
+                fresh = read_window(
+                    self.store, snapshot, plan.residual, phys, meta.sort_key,
+                    schema=meta.schema,
                 )
-            if fresh.num_rows:
-                residual_rows = fresh.num_rows
-                chunks.append(fresh)
+                with self._lock:
+                    self.cache.insert(
+                        scan, snapshot, meta.sort_key, plan.residual, fresh,
+                        tenant=self.tenant,
+                    )
+                if fresh.num_rows:
+                    residual_rows = fresh.num_rows
+                    chunks.append(fresh)
+        finally:
+            if claim is not None:
+                self.cache.release_residual(claim)
 
         delta = ledger.delta(before)
         self.reports.append(
@@ -149,6 +178,8 @@ class ScanExecutor:
                 fully_cached=plan.fully_cached,
                 simulated_seconds=delta.simulated_seconds,
                 residual_rows=residual_rows,
+                bytes_from_spill=spill_bytes,
+                coalesced_waits=waits,
             )
         )
 

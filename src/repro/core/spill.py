@@ -1,0 +1,179 @@
+"""The spill tier: cache elements parked as IPC files in the object store.
+
+The paper's cache "works transparently across programming languages, schemas
+and time windows" precisely because its elements are columnar *artifacts* in
+object storage, not process memory.  :class:`SpillTier` gives the in-memory
+:class:`~repro.core.cache.DifferentialStore` that second tier:
+
+- **demotion** streams an element's payload through ``write_ipc`` into the
+  object store (no second in-memory copy of the buffers) and records the
+  element's full identity — signature, window, pins, columns, owner — in a
+  JSON *sidecar manifest*;
+- **promotion** memory-maps the payload back (``read_ipc(mmap=True)``), so a
+  spilled window re-enters the RAM tier zero-copy until touched; only the
+  IPC header is read eagerly, and those bytes go through ``get_range`` so
+  the store's ledger stays exact;
+- **restart warm-up**: a fresh store pointed at a populated spill root
+  rebuilds its element index from the manifests alone (payloads stay on
+  disk, demoted) — a restarted service starts warm instead of paying the
+  full cold fill.
+
+Spill objects are write-once (one immutable IPC file + one manifest per
+element) and are garbage-collected when their element is merged away,
+invalidated, or liveness-evicted.  An element, once spilled, never changes
+(merges create *new* elements), so re-demoting a promoted element is free:
+the existing spill copy is still authoritative and demotion just drops the
+RAM reference.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import uuid
+from typing import List
+
+from repro.core.cache import CacheElement, FragmentPin, next_elem_id
+from repro.core.columnar import Table, read_ipc, write_ipc
+from repro.core.intervals import Interval, IntervalSet
+from repro.lake.s3sim import ObjectStore
+
+__all__ = ["SpillEntry", "SpillTier"]
+
+
+class SpillEntry:
+    """One spilled element: where its payload and manifest live."""
+
+    __slots__ = ("data_key", "manifest_key", "nbytes")
+
+    def __init__(self, data_key: str, manifest_key: str, nbytes: int):
+        self.data_key = data_key
+        self.manifest_key = manifest_key
+        self.nbytes = nbytes  # payload bytes as they were in RAM
+
+    def __repr__(self) -> str:  # pragma: no cover - debug sugar
+        return f"SpillEntry({self.data_key}, {self.nbytes}B)"
+
+
+class SpillTier:
+    """IPC-file spill tier behind an :class:`ObjectStore`.
+
+    ``prefix`` namespaces this tier's keys inside the store (a service runs
+    one tier for the scan cache and one for the model store over the same
+    store, so restart warm-up and byte attribution ride the same root).
+    ``mmap=False`` forces eager promotion reads (useful in tests)."""
+
+    def __init__(self, store: ObjectStore, prefix: str = "_spill", mmap: bool = True):
+        self.store = store
+        self.prefix = prefix.rstrip("/")
+        self.mmap = mmap
+        # observability (surfaced through the owning store's stats())
+        self.spills = 0
+        self.promotions = 0
+        self.bytes_spilled = 0
+        self.bytes_promoted = 0
+
+    # -- identity ------------------------------------------------------------
+    @staticmethod
+    def spillable(elem: CacheElement) -> bool:
+        """Only elements whose signature survives a JSON round-trip can be
+        re-indexed after a restart; every signature the system produces is a
+        string (table names for scans, hex digests for model nodes)."""
+        return isinstance(elem.signature, str)
+
+    # -- demote --------------------------------------------------------------
+    def spill(self, elem: CacheElement) -> SpillEntry:
+        """Write ``elem``'s payload + manifest; returns the entry.  The
+        caller (the store, under its lock) drops the RAM payload after."""
+        assert elem.data is not None, "cannot spill a demoted element"
+        eid = uuid.uuid4().hex[:16]
+        data_key = f"{self.prefix}/data/{eid}.ripc"
+        manifest_key = f"{self.prefix}/manifest/{eid}.json"
+        with self.store.put_stream(data_key) as f:
+            write_ipc(elem.data, f)
+        manifest = {
+            "signature": elem.signature,
+            "table": elem.table,
+            "sort_key": elem.sort_key,
+            "columns": list(elem.columns),
+            "window": [[iv.lo, iv.hi] for iv in elem.window],
+            "pins": [[p.fragment_id, p.key_min, p.key_max] for p in elem.pins],
+            "owner": elem.owner,
+            "nbytes": int(elem.data.nbytes),
+            "data_key": data_key,
+        }
+        try:
+            self.store.put(manifest_key, json.dumps(manifest).encode())
+        except BaseException:
+            # no manifest -> no restore/drop path would ever reclaim the
+            # data object; don't leave the orphan behind
+            try:
+                self.store.delete(data_key)
+            except OSError:  # pragma: no cover - best-effort cleanup
+                pass
+            raise
+        self.spills += 1
+        self.bytes_spilled += int(elem.data.nbytes)
+        return SpillEntry(data_key, manifest_key, int(elem.data.nbytes))
+
+    # -- promote -------------------------------------------------------------
+    def load(self, entry: SpillEntry) -> Table:
+        """Bring a spilled payload back: the IPC header is read eagerly
+        (through ``get_range``, so it lands on the ledger) and the column
+        buffers are memory-mapped — zero-copy until touched."""
+        head = self.store.get_range(entry.data_key, 0, 16)
+        (hlen,) = struct.unpack("<Q", head[8:16])
+        self.store.get_range(entry.data_key, 16, hlen)
+        tbl = read_ipc(self.store.local_path(entry.data_key), mmap=self.mmap)
+        self.promotions += 1
+        self.bytes_promoted += tbl.nbytes
+        return tbl
+
+    # -- GC ------------------------------------------------------------------
+    def drop(self, entry: SpillEntry) -> None:
+        """Delete a spilled element's objects (merge-away / invalidation /
+        liveness eviction).  Readers holding mmap views of the payload keep
+        them — the unlinked file's pages survive until the views die."""
+        for key in (entry.data_key, entry.manifest_key):
+            try:
+                self.store.delete(key)
+            except FileNotFoundError:  # pragma: no cover - already gone
+                pass
+
+    # -- restart warm-up -----------------------------------------------------
+    def restore(self) -> List[CacheElement]:
+        """Rebuild demoted elements from every manifest under this tier's
+        prefix.  Manifest bytes are read through the store API (accounted);
+        payloads stay spilled until a plan promotes them."""
+        out: List[CacheElement] = []
+        for key in self.store.list(f"{self.prefix}/manifest/"):
+            m = json.loads(self.store.get(key))
+            entry = SpillEntry(m["data_key"], key, int(m["nbytes"]))
+            out.append(
+                CacheElement(
+                    elem_id=next_elem_id(),
+                    table=m["table"],
+                    sort_key=m["sort_key"],
+                    columns=tuple(m["columns"]),
+                    window=IntervalSet(
+                        [Interval(int(lo), int(hi)) for lo, hi in m["window"]]
+                    ),
+                    pins=tuple(
+                        FragmentPin(fid, int(kmin), int(kmax))
+                        for fid, kmin, kmax in m["pins"]
+                    ),
+                    data=None,
+                    signature=m["signature"],
+                    owner=m["owner"],
+                    spill=entry,
+                )
+            )
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        """Payload bytes currently parked in this tier (manifest-recorded
+        sizes; cheap enough to recompute from the store's size index)."""
+        return sum(
+            self.store.size(k) for k in self.store.list(f"{self.prefix}/data/")
+        )

@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import os
 import threading
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Iterator, Optional
 
 __all__ = ["StoreStats", "LatencyModel", "ObjectStore"]
 
@@ -149,6 +150,44 @@ class ObjectStore:
         with self._lock:
             self._sizes[key] = len(data)
         self._record(puts=1, written=len(data))
+
+    @contextmanager
+    def put_stream(self, key: str) -> Iterator:
+        """Streaming variant of :meth:`put`: yields a writable binary file
+        the caller fills incrementally (e.g. ``write_ipc`` spilling a cache
+        element without a second in-memory copy of its buffers).  On clean
+        exit the object is atomically published and the written bytes are
+        accounted; on error the partial upload is discarded."""
+        path = self._path(key)
+        if os.path.exists(path):
+            raise FileExistsError(f"object {key!r} is immutable")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        try:
+            with open(tmp, "wb") as f:
+                yield f
+                size = f.tell()
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        os.replace(tmp, path)  # atomic publish
+        with self._lock:
+            self._sizes[key] = size
+        self._record(puts=1, written=size)
+
+    def local_path(self, key: str) -> str:
+        """Filesystem path of an existing object, for zero-copy (mmap)
+        readers.  Bytes touched through the returned path are NOT on the
+        ledger — callers pair this with explicit :meth:`get_range` reads for
+        whatever they touch eagerly (the spill tier reads the IPC header
+        through the API and memory-maps the column payloads)."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no such object {key!r}")
+        return path
 
     def get_range(self, key: str, start: int, length: int) -> bytes:
         """Range-byte GET — the paper's atomic physical operation."""

@@ -76,6 +76,11 @@ class RunResult:
     rows_to_user_fns: int = 0
     bytes_from_model_cache: int = 0
     node_stats: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    # tiered-cache ledger: payload bytes promoted spill -> RAM for this run
+    # (scan cache + model store), and residuals this run did NOT compute
+    # because it subscribed to another run's in-flight claim
+    bytes_from_spill: int = 0
+    coalesced_waits: int = 0
 
 
 class Workspace:
@@ -204,12 +209,11 @@ class Workspace:
                 self._materialize(step, out, leaf_snap)
 
         delta = ledger.delta(before)
+        scan_reports = self.scans.reports[reports_before:]
         return RunResult(
             outputs=results,
             bytes_from_store=delta.bytes_read,
-            bytes_from_cache=sum(
-                r.bytes_from_cache for r in self.scans.reports[reports_before:]
-            ),
+            bytes_from_cache=sum(r.bytes_from_cache for r in scan_reports),
             simulated_seconds=delta.simulated_seconds,
             wall_seconds=time.perf_counter() - t0,
             plan=plan,
@@ -218,6 +222,14 @@ class Workspace:
                 s["model_cache_bytes"] for s in node_stats.values()
             ),
             node_stats=node_stats,
+            bytes_from_spill=sum(
+                s.get("bytes_from_spill", 0) for s in node_stats.values()
+            )
+            + sum(r.bytes_from_spill for r in scan_reports),
+            coalesced_waits=sum(
+                s.get("coalesced_waits", 0) for s in node_stats.values()
+            )
+            + sum(r.coalesced_waits for r in scan_reports),
         )
 
     # -- node execution: full recompute (incremental="none") -----------------
@@ -345,53 +357,90 @@ class Workspace:
         # in-flight run is working against (plain stores: no-op)
         reading = getattr(self.model_store, "reading", None)
         read_pin = reading(step.signature) if reading else contextlib.nullcontext()
-        with read_pin:
-            hit_chunks: List[Table] = []
-            cached_rows = 0
-            cache_bytes = 0
-            with self._model_lock:
-                # cost is row-extent, not fragment bytes: serving ANY cached
-                # rows saves user-function compute, even inside a partially-
-                # covered fragment (unlike a physical scan, which must
-                # re-read the whole fragment's column chunks either way)
-                mplan = self.model_store.plan_window(
-                    signature=step.signature,
-                    window=step.window,
-                    columns=(),
-                    cost_fn=lambda w: w.measure(),
-                    usable_fn=usable_fn,
-                    tenant=self.tenant,
-                )
-                for hit in mplan.hits:
-                    for view in hit.element.slice_window(hit.window, hit.element.columns):
-                        hit_chunks.append(view)
-                        cached_rows += view.num_rows
-                        cache_bytes += view.nbytes
+        # residual coalescing (shared stores only): claim the residual under
+        # the SAME lock acquisition as the plan, so of N concurrent runs
+        # planning an overlapping residual exactly one computes it and the
+        # rest subscribe to its claim, then replan against the inserted rows
+        claimer = getattr(self.model_store, "claim_residual", None)
+        claim = None
+        waits = 0
+        # accumulated across replan rounds: promotions a discarded plan
+        # triggered are still this run's doing (the elements stay resident
+        # for the final plan, which then reports 0 for them)
+        spill_bytes = 0
+        try:
+            with read_pin:
+                while True:
+                    hit_chunks: List[Table] = []
+                    cached_rows = 0
+                    cache_bytes = 0
+                    wait_event = None
+                    with self._model_lock:
+                        # cost is row-extent, not fragment bytes: serving ANY
+                        # cached rows saves user-function compute, even inside
+                        # a partially-covered fragment (unlike a physical
+                        # scan, which must re-read the whole fragment's
+                        # column chunks either way)
+                        mplan = self.model_store.plan_window(
+                            signature=step.signature,
+                            window=step.window,
+                            columns=(),
+                            cost_fn=lambda w: w.measure(),
+                            usable_fn=usable_fn,
+                            tenant=self.tenant,
+                        )
+                        if claimer is not None and not mplan.residual.empty:
+                            claim, wait_event = claimer(
+                                step.signature,
+                                mplan.residual,
+                                snapshot_id=snapshot.snapshot_id,
+                            )
+                        spill_bytes += mplan.promoted_spill_bytes
+                        if wait_event is None:
+                            for hit in mplan.hits:
+                                for view in hit.element.slice_window(
+                                    hit.window, hit.element.columns
+                                ):
+                                    hit_chunks.append(view)
+                                    cached_rows += view.num_rows
+                                    cache_bytes += view.nbytes
+                    if wait_event is None:
+                        break
+                    # another run is computing an overlapping residual: wait
+                    # (no lock held) and replan — its insert becomes our hit.
+                    # The timeout is defensive; owners release in a finally.
+                    waits += 1
+                    wait_event.wait(timeout=60.0)
 
-            fresh: Optional[Table] = None
-            fresh_rows = 0
-            if not mplan.residual.empty:
-                (arg, _binding) = step.bindings[0]
-                in_tbl = self._residual_input(step, plan, results, mplan.residual, snapshot)
-                if in_tbl.num_rows == 0 and hit_chunks:
-                    # nothing to compute; keep the output schema from a hit view
-                    fresh = hit_chunks[0].slice(0, 0)
-                else:
-                    fresh_rows = in_tbl.num_rows
-                    out = _invoke(fn, step.runtime, {arg: in_tbl})
-                    fresh = self._windowed_output(step, in_tbl, out)
-                pins = pins_for(snapshot, mplan.residual)
-                with self._model_lock:
-                    self.model_store.insert_window(
-                        signature=step.signature,
-                        table=step.leaf_table,
-                        sort_key=step.sort_key,
-                        window=mplan.residual,
-                        data=fresh,
-                        pins=pins,
-                        usable_fn=usable_fn,
-                        tenant=self.tenant,
+                fresh: Optional[Table] = None
+                fresh_rows = 0
+                if not mplan.residual.empty:
+                    (arg, _binding) = step.bindings[0]
+                    in_tbl = self._residual_input(
+                        step, plan, results, mplan.residual, snapshot
                     )
+                    if in_tbl.num_rows == 0 and hit_chunks:
+                        # nothing to compute; keep the output schema from a hit view
+                        fresh = hit_chunks[0].slice(0, 0)
+                    else:
+                        fresh_rows = in_tbl.num_rows
+                        out = _invoke(fn, step.runtime, {arg: in_tbl})
+                        fresh = self._windowed_output(step, in_tbl, out)
+                    pins = pins_for(snapshot, mplan.residual)
+                    with self._model_lock:
+                        self.model_store.insert_window(
+                            signature=step.signature,
+                            table=step.leaf_table,
+                            sort_key=step.sort_key,
+                            window=mplan.residual,
+                            data=fresh,
+                            pins=pins,
+                            usable_fn=usable_fn,
+                            tenant=self.tenant,
+                        )
+        finally:
+            if claim is not None:
+                self.model_store.release_residual(claim)
 
         chunks = hit_chunks + ([fresh] if fresh is not None else [])
         assembled = ChunkedTable(chunks)
@@ -405,6 +454,8 @@ class Workspace:
             "fresh_rows": fresh_rows,
             "cached_rows": cached_rows,
             "model_cache_bytes": cache_bytes,
+            "bytes_from_spill": spill_bytes,
+            "coalesced_waits": waits,
         }
 
     def _windowed_output(self, step: UserFnStep, in_tbl: Table, out: Table) -> Table:

@@ -9,8 +9,10 @@ service:
 - :mod:`repro.service.store` — :class:`SharedStore` /
   :class:`SharedScanCache`: process-wide differential stores with the
   scan-executor locking discipline, a global LRU byte budget spanning
-  tenants, per-tenant quotas, per-signature reader counts and
-  signature-liveness eviction;
+  tenants, per-tenant quotas, per-signature reader counts,
+  signature-liveness eviction, an optional spill tier (RAM over IPC files
+  in the object store — capacity beyond RAM, warm restarts) and in-flight
+  residual coalescing (N concurrent identical residuals compute once);
 - :mod:`repro.service.session` — :class:`TenantSession`: per-tenant snapshot
   pinning (time travel) and commit-retry for writing runs;
 - :mod:`repro.service.scheduler` — :class:`PipelineService`: admission queue
@@ -30,7 +32,7 @@ from repro.service.scheduler import (
     ServiceReport,
 )
 from repro.service.session import TenantSession
-from repro.service.store import SharedScanCache, SharedStore
+from repro.service.store import ResidualClaim, SharedScanCache, SharedStore
 
 __all__ = [
     "PipelineService",
@@ -40,6 +42,7 @@ __all__ = [
     "TenantSession",
     "SharedScanCache",
     "SharedStore",
+    "ResidualClaim",
     "QUEUED",
     "RUNNING",
     "DONE",

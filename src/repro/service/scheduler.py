@@ -34,6 +34,7 @@ from repro.lake.catalog import Catalog
 from repro.lake.s3sim import ObjectStore
 from repro.pipeline.dsl import Project
 from repro.pipeline.executor import RunResult, Workspace
+from repro.core.spill import SpillTier
 from repro.service.session import TenantSession
 from repro.service.store import SharedScanCache, SharedStore
 
@@ -94,9 +95,14 @@ class PipelineService:
     """A multi-tenant pipeline service over one shared differential cache.
 
     ``tenant_quota_bytes`` / ``model_cache_bytes`` / ``scan_cache_bytes``
-    bound the shared stores (global LRU spans tenants); ``liveness_runs``
-    reclaims signatures absent from any plan for that many runs.  Use as a
-    context manager or call :meth:`shutdown`.
+    bound the shared stores' RAM tiers (global LRU spans tenants);
+    ``liveness_runs`` reclaims signatures absent from any plan for that many
+    runs.  ``spill=True`` backs both stores with IPC spill tiers under the
+    service's object store: eviction demotes instead of dropping, capacity
+    exceeds RAM, and a new service over the same root starts warm (clean
+    shutdown flushes every resident element).  ``coalesce`` (default on)
+    makes concurrent runs planning the same residual compute it exactly
+    once.  Use as a context manager or call :meth:`shutdown`.
     """
 
     def __init__(
@@ -112,16 +118,28 @@ class PipelineService:
         max_queued: Optional[int] = None,
         max_commit_retries: int = 5,
         max_run_history: int = 4096,
+        spill: bool = False,
+        coalesce: bool = True,
     ):
         self.store = ObjectStore(root)
         self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        # spill tiers live behind the SERVICE's object store (under _spill/),
+        # so spill traffic is on the same ledger as everything else and a
+        # new service over the same root restores the tiers' manifests and
+        # starts warm (clean shutdown demotes every resident element)
+        self._spill_enabled = spill
         self.scan_cache = SharedScanCache(
-            max_bytes=scan_cache_bytes, liveness_runs=liveness_runs
+            max_bytes=scan_cache_bytes,
+            liveness_runs=liveness_runs,
+            spill=SpillTier(self.store, prefix="_spill/scan") if spill else None,
+            coalesce=coalesce,
         )
         self.model_store = SharedStore(
             max_bytes=model_cache_bytes,
             liveness_runs=liveness_runs,
             tenant_quota_bytes=tenant_quota_bytes,
+            spill=SpillTier(self.store, prefix="_spill/model") if spill else None,
+            coalesce=coalesce,
         )
         self.max_queued = max_queued
         self.max_commit_retries = max_commit_retries
@@ -243,12 +261,15 @@ class PipelineService:
                         t = self._tenant_totals.setdefault(
                             handle.tenant,
                             {"runs": 0, "bytes_from_store": 0,
-                             "rows_to_user_fns": 0, "bytes_from_model_cache": 0},
+                             "rows_to_user_fns": 0, "bytes_from_model_cache": 0,
+                             "bytes_from_spill": 0, "coalesced_waits": 0},
                         )
                         t["runs"] += 1
                         t["bytes_from_store"] += int(r.bytes_from_store)
                         t["rows_to_user_fns"] += int(r.rows_to_user_fns)
                         t["bytes_from_model_cache"] += int(r.bytes_from_model_cache)
+                        t["bytes_from_spill"] += int(r.bytes_from_spill)
+                        t["coalesced_waits"] += int(r.coalesced_waits)
                     try:
                         self._pending.remove(handle)
                     except ValueError:  # pragma: no cover - defensive
@@ -270,7 +291,9 @@ class PipelineService:
                 bytes_from_store=int(r.bytes_from_store),
                 bytes_from_scan_cache=int(r.bytes_from_cache),
                 bytes_from_model_cache=int(r.bytes_from_model_cache),
+                bytes_from_spill=int(r.bytes_from_spill),
                 rows_to_user_fns=int(r.rows_to_user_fns),
+                coalesced_waits=int(r.coalesced_waits),
             )
         if h.error is not None:
             entry["error"] = repr(h.error)
@@ -293,6 +316,13 @@ class PipelineService:
             self._cond.notify_all()
         for t in self._workers:
             t.join(timeout=10)
+        if wait and self._spill_enabled:
+            # park every resident element in the spill tier so the NEXT
+            # service over this root restores the full working set and
+            # starts warm (crash restarts recover only what eviction
+            # already demoted — flush-on-shutdown, not write-through)
+            self.model_store.demote_all()
+            self.scan_cache.demote_all()
 
     def __enter__(self) -> "PipelineService":
         return self

@@ -53,6 +53,12 @@ class TenantSession:
         self.max_commit_retries = max_commit_retries
         self.pins: Dict[str, str] = {}
         self.commit_conflicts = 0  # observability: lost CAS races, all retried
+        # tiered-cache observability, aggregated across this tenant's runs:
+        # payload bytes served by promoting spilled elements, and residuals
+        # this tenant did NOT recompute because it subscribed to another
+        # run's in-flight claim (see SharedStore.claim_residual)
+        self.bytes_from_spill = 0
+        self.coalesced_waits = 0
         self._run_lock = threading.Lock()
         if pin_tables:
             self.refresh_pins()
@@ -86,6 +92,8 @@ class TenantSession:
                     if attempt == self.max_commit_retries:
                         raise
                     continue
+                self.bytes_from_spill += int(result.bytes_from_spill)
+                self.coalesced_waits += int(result.coalesced_waits)
                 # a writer reads its own commits: advance the pins of every
                 # table this run materialized (same discipline as _write)
                 published = [

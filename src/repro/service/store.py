@@ -1,34 +1,43 @@
 """The process-wide differential store behind the multi-tenant service.
 
 A :class:`~repro.core.cache.DifferentialStore` already carries the locking
-discipline (callers plan+slice and insert under ``store.lock``) and a global
-LRU byte budget.  :class:`SharedStore` adds what a *service* needs on top:
+discipline (callers plan+slice and insert under ``store.lock``), a global
+LRU byte budget and the optional spill tier.  :class:`SharedStore` adds what
+a *service* needs on top:
 
 - **tenant attribution** — every inserted element records the tenant that
   paid for its bytes (``CacheElement.owner``); hits against another tenant's
   elements are counted as *cross-tenant reuse*, the paper's headline win of
   a cache "shared transparently across users, schemas and time windows";
-- **per-tenant byte quotas** — a tenant over its quota loses its own
-  least-recently-used elements first, so one heavy tenant cannot starve the
-  others out of the global budget;
+- **per-tenant byte quotas** — a tenant over its (RAM-tier) quota loses its
+  own least-recently-used elements first, so one heavy tenant cannot starve
+  the others out of the global budget (with a spill tier the loser's bytes
+  demote to object storage rather than vanish);
 - **per-signature reader counts** — an in-flight run holds a read pin on the
   signature group it executes against (:meth:`reading`); pinned groups are
   exempt from every eviction path, so a concurrent tenant's insert can never
   reclaim the group mid-run;
 - **signature-liveness eviction** — signatures no plan has referenced for
-  ``liveness_runs`` runs are reclaimed wholesale (ROADMAP (e): elements
-  under superseded code versions used to linger until the byte budget
-  happened to push them out).
+  ``liveness_runs`` runs are reclaimed wholesale, spill copies included
+  (ROADMAP (e): elements under superseded code versions used to linger
+  until the byte budget happened to push them out);
+- **in-flight residual coalescing** — when two concurrent runs plan the same
+  ``(signature, window)`` residual, the second *subscribes* to the first's
+  in-flight claim (:meth:`claim_residual`) instead of recomputing: it waits,
+  replans, and is served the winner's freshly inserted element.  Without
+  this, both of BENCH_4's ``widened`` tenants paid the identical residual.
 
 Thread safety: every public method takes the store's reentrant lock, and the
 executors that share the store hold the same lock across their plan+slice
 and insert critical sections, so plans never reference merged-away or
-evicted elements ("no torn reads").
+evicted elements ("no torn reads").  Claim waits happen with NO lock held.
 """
 
 from __future__ import annotations
 
+import threading
 from contextlib import contextmanager
+from dataclasses import dataclass, field
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -42,8 +51,24 @@ from repro.core.cache import (
 )
 from repro.core.columnar import Table
 from repro.core.intervals import IntervalSet
+from repro.core.spill import SpillTier
+from repro.lake.s3sim import ObjectStore
 
-__all__ = ["SharedStore", "SharedScanCache"]
+__all__ = ["SharedStore", "SharedScanCache", "ResidualClaim"]
+
+
+@dataclass
+class ResidualClaim:
+    """One in-flight residual computation: ``(signature, window, columns,
+    snapshot)`` plus the event concurrent planners of an overlapping
+    residual wait on."""
+
+    signature: Hashable
+    window: IntervalSet
+    columns: frozenset
+    thread: int
+    snapshot_id: Optional[str] = None
+    event: threading.Event = field(default_factory=threading.Event)
 
 
 class SharedStore(DifferentialStore):
@@ -61,18 +86,30 @@ class SharedStore(DifferentialStore):
         max_bytes: Optional[int] = None,
         liveness_runs: Optional[int] = None,
         tenant_quota_bytes: Optional[Union[int, Dict[str, int]]] = None,
+        spill: Optional[SpillTier] = None,
+        spill_root: Optional[str] = None,
+        coalesce: bool = True,
     ):
-        super().__init__(max_bytes=max_bytes)
+        # spill_root is the standalone convenience: a directory-backed
+        # object store owned by this SharedStore.  Services pass `spill`
+        # (a tier over THEIR object store) so spill traffic lands on the
+        # same ledger as everything else.
+        if spill is None and spill_root is not None:
+            spill = SpillTier(ObjectStore(spill_root))
+        super().__init__(max_bytes=max_bytes, spill=spill)
         self.liveness_runs = liveness_runs
         self.tenant_quota_bytes = tenant_quota_bytes
+        self.coalesce = coalesce
         self._readers: Dict[Hashable, int] = {}  # signature -> active readers
         self._last_seen: Dict[Hashable, int] = {}  # signature -> run_seq
+        self._claims: Dict[Hashable, List[ResidualClaim]] = {}
         self.run_seq = 0
-        # service observability (surfaced in ServiceReport / BENCH_4)
+        # service observability (surfaced in ServiceReport / BENCH_4/5)
         self.liveness_evictions = 0
         self.quota_evictions = 0
         self.cross_tenant_hits = 0
         self.cross_tenant_rows = 0
+        self.coalesced_waits = 0
 
     # -- run lifecycle -------------------------------------------------------
     def begin_run(self) -> None:
@@ -89,7 +126,9 @@ class SharedStore(DifferentialStore):
                     continue
                 if self._last_seen.setdefault(sig, self.run_seq) <= horizon:
                     self.liveness_evictions += len(self._elements[sig])
-                    del self._elements[sig]
+                    # a liveness-dead signature is reclaimed from BOTH tiers
+                    # (else a restart would resurrect zombie code versions)
+                    self.invalidate(sig)
                     self._last_seen.pop(sig, None)
 
     @contextmanager
@@ -107,6 +146,71 @@ class SharedStore(DifferentialStore):
                     self._readers[signature] = n
                 else:
                     self._readers.pop(signature, None)
+
+    # -- residual coalescing -------------------------------------------------
+    def claim_residual(
+        self,
+        signature: Hashable,
+        window: IntervalSet,
+        columns: Sequence[str] = (),
+        snapshot_id: Optional[str] = None,
+    ) -> Tuple[Optional[ResidualClaim], Optional[threading.Event]]:
+        """Atomically either claim ``(signature, window)`` for this run or
+        subscribe to an overlapping in-flight claim.
+
+        Returns ``(claim, None)`` when this caller now owns the residual
+        (it MUST call :meth:`release_residual` when the computed rows are
+        inserted — or on failure), or ``(None, event)`` when another run is
+        already computing an overlapping residual whose columns cover this
+        caller's AND whose snapshot matches: wait on the event (with no
+        lock held), then REPLAN — the winner's insert turns the overlap
+        into cache hits.  A snapshot mismatch never subscribes: the owner's
+        rows would fail the subscriber's fragment-pin check anyway, so
+        waiting could only add latency.  With coalescing disabled the call
+        is a no-op ``(None, None)``: no claim is registered and callers
+        skip the release entirely.
+
+        Callers invoke this under ``store.lock`` in the same critical
+        section as the plan, so two planners of the same residual serialize:
+        exactly one claims, the rest subscribe.
+        """
+        if not self.coalesce:
+            return None, None
+        with self.lock:
+            need = frozenset(columns)
+            me = threading.get_ident()
+            for c in self._claims.get(signature, ()):
+                if (
+                    c.thread != me
+                    and c.snapshot_id == snapshot_id
+                    and need.issubset(c.columns)
+                    and c.window.intersects(window)
+                ):
+                    self.coalesced_waits += 1
+                    return None, c.event
+            claim = ResidualClaim(
+                signature,
+                window,
+                frozenset(columns),
+                threading.get_ident(),
+                snapshot_id,
+            )
+            self._claims.setdefault(signature, []).append(claim)
+            return claim, None
+
+    def release_residual(self, claim: ResidualClaim) -> None:
+        """Retire a claim (rows inserted, or the computation failed) and wake
+        every subscriber — they replan against the store's new state."""
+        with self.lock:
+            lst = self._claims.get(claim.signature)
+            if lst is not None:
+                try:
+                    lst.remove(claim)
+                except ValueError:  # pragma: no cover - double release
+                    pass
+                if not lst:
+                    del self._claims[claim.signature]
+        claim.event.set()
 
     # -- store surface (tenant-aware) ---------------------------------------
     def plan_window(
@@ -174,15 +278,21 @@ class SharedStore(DifferentialStore):
                     per_tenant[e.owner] = per_tenant.get(e.owner, 0) + e.nbytes
             return {
                 "nbytes": self.nbytes,
+                "spill_nbytes": self.spill_nbytes,
                 "elements": len(self.elements()),
                 "lookups": self.lookups,
                 "full_hits": self.full_hits,
                 "partial_hits": self.partial_hits,
                 "evictions": self.evictions,
+                "demotions": self.demotions,
+                "promotions": self.promotions,
+                "bytes_from_spill": self.bytes_from_spill,
+                "spill_restored": self.spill_restored,
                 "quota_evictions": self.quota_evictions,
                 "liveness_evictions": self.liveness_evictions,
                 "cross_tenant_hits": self.cross_tenant_hits,
                 "cross_tenant_rows": self.cross_tenant_rows,
+                "coalesced_waits": self.coalesced_waits,
                 "tenant_bytes": dict(sorted(per_tenant.items())),
             }
 
@@ -199,11 +309,13 @@ class SharedStore(DifferentialStore):
         if quota is None:
             return
         # one scan, then decrement while evicting — this runs under the
-        # store-wide lock, so a per-victim rescan would stall every tenant
+        # store-wide lock, so a per-victim rescan would stall every tenant.
+        # Quotas bound the RAM tier: with a spill tier the victim's bytes
+        # demote instead of vanishing (e.nbytes is 0 once demoted).
         owned_bytes = 0
         evictable: List[CacheElement] = []
         for e in self.elements():
-            if e.owner != tenant:
+            if e.owner != tenant or e.data is None:
                 continue
             owned_bytes += e.nbytes
             if not self._readers.get(e.signature):
@@ -212,29 +324,32 @@ class SharedStore(DifferentialStore):
         for victim in evictable:
             if owned_bytes <= quota:
                 return
-            self._elements[victim.signature].remove(victim)
             owned_bytes -= victim.nbytes
+            self._demote(victim)
             self.quota_evictions += 1
             self.evictions += 1
 
-    def _evict(self) -> None:
-        # global LRU across ALL tenants, skipping read-pinned signatures
-        # (called by the base class inside insert_window, lock already held);
-        # one scan then decrement, like _enforce_tenant_quota
+    def _evict(self, protect: frozenset = frozenset()) -> None:
+        # global LRU across ALL tenants, skipping read-pinned signatures and
+        # the current plan's hits (called by the base class inside
+        # insert_window and after promotions, lock already held); one scan
+        # then decrement, like _enforce_tenant_quota
         if self.max_bytes is None:
             return
         total = 0
         evictable: List[CacheElement] = []
         for e in self.elements():
+            if e.data is None:
+                continue
             total += e.nbytes
-            if not self._readers.get(e.signature):
+            if not self._readers.get(e.signature) and e.elem_id not in protect:
                 evictable.append(e)
         evictable.sort(key=lambda e: e.last_used)  # LRU first
         for victim in evictable:
             if total <= self.max_bytes:
                 return
-            self._elements[victim.signature].remove(victim)
             total -= victim.nbytes
+            self._demote(victim)
             self.evictions += 1
 
 

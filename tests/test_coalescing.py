@@ -1,0 +1,247 @@
+"""In-flight residual coalescing (ISSUE 5): when N concurrent runs plan the
+same ``(signature, window)`` residual, exactly one computes it — the rest
+subscribe to its claim, replan after the insert, and are served as hits.
+"""
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core.intervals import Interval, IntervalSet
+from repro.pipeline import Model, Project, model, runtime
+from repro.service import PipelineService, SharedStore
+
+from test_service import (
+    assert_outputs_bitwise_equal,
+    cold_reference,
+    write_events,
+)
+
+# read by name from the flaky model fn below: module globals do not enter
+# code_fingerprint, so mutating this cannot change the node's signature
+_BOOM = []
+
+
+# ------------------------------------------------------------- claim API unit
+def test_claim_is_exclusive_and_wakes_subscribers():
+    store = SharedStore()
+    win = IntervalSet([Interval(0, 100)])
+    claim, ev = store.claim_residual("sig", win)
+    assert claim is not None and ev is None
+
+    got = {}
+    subscribed = threading.Event()
+
+    def subscriber():
+        c, e = store.claim_residual("sig", IntervalSet([Interval(50, 150)]))
+        got["claim"], got["event"] = c, e
+        subscribed.set()
+        if e is not None:
+            got["woken"] = e.wait(5)
+
+    t = threading.Thread(target=subscriber)
+    t.start()
+    assert subscribed.wait(5)
+    assert got["claim"] is None and got["event"] is not None
+    store.release_residual(claim)
+    t.join(5)
+    assert got["woken"] is True
+    assert store.coalesced_waits == 1
+
+
+def test_same_thread_never_waits_on_its_own_claim():
+    store = SharedStore()
+    win = IntervalSet([Interval(0, 100)])
+    c1, _ = store.claim_residual("sig", win)
+    c2, ev = store.claim_residual("sig", win)  # same thread: owns a new claim
+    assert c1 is not None and c2 is not None and ev is None
+    store.release_residual(c1)
+    store.release_residual(c2)
+
+
+def test_column_superset_rule():
+    """A scan residual only coalesces onto a claim whose columns cover its
+    own — waiting on a narrower in-flight scan would replan forever."""
+    store = SharedStore()
+    win = IntervalSet([Interval(0, 100)])
+    claim, _ = store.claim_residual("t", win, columns=("a", "b"))
+
+    def probe(cols, out):
+        out.append(store.claim_residual("t", win, columns=cols))
+
+    narrow, wide = [], []
+    t1 = threading.Thread(target=probe, args=(("a",), narrow))
+    t2 = threading.Thread(target=probe, args=(("a", "b", "c"), wide))
+    t1.start(); t1.join()
+    t2.start(); t2.join()
+    assert narrow[0][0] is None, "covered columns subscribe"
+    assert wide[0][0] is not None, "uncovered columns claim their own"
+    store.release_residual(claim)
+    store.release_residual(wide[0][0])
+
+
+def test_disjoint_windows_do_not_coalesce():
+    store = SharedStore()
+    c1, _ = store.claim_residual("sig", IntervalSet([Interval(0, 100)]))
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(
+            store.claim_residual("sig", IntervalSet([Interval(200, 300)]))
+        )
+    )
+    t.start(); t.join()
+    assert out[0][0] is not None, "disjoint residuals run concurrently"
+    store.release_residual(c1)
+    store.release_residual(out[0][0])
+
+
+def test_coalesce_off_is_a_noop():
+    """With coalescing disabled, claim_residual registers nothing and
+    callers proceed immediately — no claim bookkeeping on the hot path."""
+    store = SharedStore(coalesce=False)
+    win = IntervalSet([Interval(0, 100)])
+    assert store.claim_residual("sig", win) == (None, None)
+    assert store._claims == {}
+    assert store.coalesced_waits == 0
+
+
+def test_snapshot_mismatch_does_not_subscribe():
+    """A subscriber pinned to a different snapshot would fail the owner's
+    rows' fragment-pin check anyway — it must claim its own residual
+    instead of waiting for an unusable insert."""
+    store = SharedStore()
+    win = IntervalSet([Interval(0, 100)])
+    c1, _ = store.claim_residual("sig", win, snapshot_id="snap-a")
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(
+            store.claim_residual("sig", win, snapshot_id="snap-b")
+        )
+    )
+    t.start(); t.join()
+    assert out[0][0] is not None, "different snapshot: own claim, no wait"
+    assert store.coalesced_waits == 0
+    store.release_residual(c1)
+    store.release_residual(out[0][0])
+
+
+# ----------------------------------------------------- service-level behavior
+def slow_project(hi, delay=0.3):
+    """Same shape as test_service.pipeline_project but each stage sleeps, so
+    two concurrent runs reliably overlap in their residual computations."""
+    p = Project("coal")
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def cleaned(
+        data=Model("ns.events", columns=["v1", "v2", "flag"],
+                   filter=f"eventTime BETWEEN 0 AND {hi}")
+    ):
+        time.sleep(delay)
+        return data.filter(data.column("flag") > 0)
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scored(data=Model("cleaned")):
+        time.sleep(delay)
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = (
+            np.asarray(data.column("v1"), np.float64)
+            + np.asarray(data.column("v2"), np.float64)
+        )
+        return out
+
+    return p
+
+
+def test_concurrent_identical_runs_compute_residual_exactly_once(tmp_path):
+    """The BENCH_4 duplicate-work hole: N concurrent tenants running the
+    identical pipeline must execute the residual user fns exactly once —
+    total rows_to_user_fns across ALL runs equals one cold run's."""
+    rows = 1000
+    with PipelineService(
+        str(tmp_path / "svc"), workers=3, rows_per_fragment=256
+    ) as svc:
+        write_events(svc.catalog, 0, rows)
+        project = slow_project(hi=rows - 1)
+        handles = [
+            svc.submit(t, project) for t in ("alice", "bob", "carol")
+        ]
+        svc.drain(60)
+        for h in handles:
+            assert h.state == "DONE", h.error
+        total_rows = sum(h.result.rows_to_user_fns for h in handles)
+        waits = svc.model_store.coalesced_waits + svc.scan_cache.coalesced_waits
+
+    ref = cold_reference(tmp_path, "coal-ref", slow_project(hi=rows - 1), rows=rows)
+    assert total_rows == ref.rows_to_user_fns, (
+        f"duplicate residual work: {total_rows} rows vs {ref.rows_to_user_fns} once"
+    )
+    assert waits >= 1, "the losers subscribed instead of recomputing"
+    for h in handles:
+        assert_outputs_bitwise_equal(h.result, ref)
+    assert sum(h.result.coalesced_waits for h in handles) == waits
+
+
+def test_waiter_computes_only_the_uncovered_remainder(tmp_path):
+    """A wider concurrent run coalesces on the overlap and computes only the
+    window the winner's claim never covered."""
+    rows = 1200
+    with PipelineService(
+        str(tmp_path / "svc"), workers=2, rows_per_fragment=128
+    ) as svc:
+        write_events(svc.catalog, 0, rows)
+        narrow = svc.submit("alice", slow_project(hi=599))
+        time.sleep(0.05)  # let the narrow run claim first
+        wide = svc.submit("bob", slow_project(hi=rows - 1))
+        svc.drain(60)
+        assert narrow.state == "DONE", narrow.error
+        assert wide.state == "DONE", wide.error
+        # bob recomputed at most the rows outside alice's window
+        assert wide.result.rows_to_user_fns <= 2 * (rows - 600)
+
+    ref = cold_reference(
+        tmp_path, "coal-wide-ref", slow_project(hi=rows - 1), rows=rows
+    )
+    assert_outputs_bitwise_equal(wide.result, ref)
+
+
+def test_failed_owner_releases_and_waiter_recovers(tmp_path):
+    """If the claiming run dies mid-residual, its claim is released in a
+    finally — the subscriber wakes, replans, claims, and computes.  The two
+    runs share one project (identical signature); a module-global token
+    (read by name, so it does not enter the code fingerprint) makes exactly
+    the FIRST executing run raise."""
+    rows = 600
+    _BOOM[:] = [1]
+    p = Project("boom")
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def flaky(
+        data=Model("ns.events", columns=["v1", "flag"],
+                   filter=f"eventTime BETWEEN 0 AND {rows - 1}")
+    ):
+        time.sleep(0.2)
+        if _BOOM:
+            _BOOM.pop()
+            raise RuntimeError("boom")
+        return data.filter(data.column("flag") > 0)
+
+    with PipelineService(
+        str(tmp_path / "svc"), workers=2, rows_per_fragment=128
+    ) as svc:
+        write_events(svc.catalog, 0, rows)
+        handles = [svc.submit("alice", p), svc.submit("bob", p)]
+        svc.drain(60)
+        states = sorted(h.state for h in handles)
+        assert states == ["DONE", "FAILED"], [
+            (h.state, h.error) for h in handles
+        ]
+        winner = next(h for h in handles if h.state == "DONE")
+        loser = next(h for h in handles if h.state == "FAILED")
+        assert isinstance(loser.error, RuntimeError)
+
+    ws_ref = cold_reference(tmp_path, "boom-ref", p, rows=rows)
+    assert_outputs_bitwise_equal(winner.result, ws_ref)

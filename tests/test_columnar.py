@@ -99,3 +99,50 @@ def test_empty_chunked():
     ct = ChunkedTable([])
     assert ct.num_rows == 0
     assert ct.combine().num_rows == 0
+
+
+def test_chunked_column_touches_only_that_column():
+    """ChunkedTable.column() must not combine() the whole table: reading one
+    column of a k-column chunked frame concatenates only that column."""
+    a, b = make_table(10, 1), make_table(7, 2)
+    ct = ChunkedTable([a, b])
+    np.testing.assert_array_equal(
+        ct.column("x"), np.concatenate([a.column("x"), b.column("x")])
+    )
+    # single-chunk fast path is zero-copy
+    one = ChunkedTable([a])
+    assert np.shares_memory(one.column("x"), a.column("x"))
+    with pytest.raises(KeyError):
+        ct.column("nope")
+    with pytest.raises(KeyError):
+        ChunkedTable([]).column("x")
+
+
+def test_write_ipc_accepts_file_objects(tmp_path):
+    """Streaming spill path: write_ipc into an open handle produces the
+    byte-identical file the path variant does."""
+    t = make_table(257)
+    p1, p2 = str(tmp_path / "a.ripc"), str(tmp_path / "b.ripc")
+    n1 = write_ipc(t, p1)
+    with open(p2, "wb") as f:
+        n2 = write_ipc(t, f)
+    assert n1 == n2
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+    assert read_ipc(p2, mmap=True).equals(t)
+
+
+def test_write_ipc_handles_noncontiguous_and_empty_columns(tmp_path):
+    base = make_table(64)
+    # a strided view (every other row) is not C-contiguous
+    strided = Table({"x": base.column("x")[::2]})
+    path = str(tmp_path / "s.ripc")
+    write_ipc(strided, path)
+    assert read_ipc(path).equals(Table({"x": np.ascontiguousarray(base.column("x")[::2])}))
+    empty = base.slice(0, 0)
+    path2 = str(tmp_path / "e.ripc")
+    write_ipc(empty, path2)
+    back = read_ipc(path2)
+    assert back.num_rows == 0
+    assert back.column_names == empty.column_names
+    assert back.schema() == empty.schema()

@@ -1,0 +1,316 @@
+"""BENCH_6: keyed & multi-input incrementality (ISSUE 6 tentpole claims).
+
+Two scenarios over one artifact:
+
+- **keyed**: a per-key aggregation over ``users = rows/5`` key groups; an
+  append touching **1% of the keys** must re-aggregate only those groups —
+  the warm run feeds user functions <=5% of the rows a cold run reads,
+  bitwise-equal outputs (asserted inside :func:`run`).
+- **join**: an incremental sort-merge join (multi-input rowwise) driven
+  through an iteration loop (widen, rerun, per-side appends); summed over
+  the warm iterations the engine feeds user functions >=5x fewer rows than
+  per-iteration cold runs, bitwise-equal per iteration.
+
+Emits ``BENCH_6.json``; ``--check`` exits non-zero when either gate fails —
+the CI smoke step.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench6_keyed [--rows N] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_6.json"
+)
+
+ACT_SCHEMA = {"user": "<i8", "amount": "<f8"}
+LEFT_SCHEMA = {"eventTime": "<i8", "lx": "<f8"}
+RIGHT_SCHEMA = {"eventTime": "<i8", "ry": "<f8"}
+
+
+def activity_table(lo_u, hi_u, per_user=5, seed=0):
+    from repro.core.columnar import Table
+
+    n = (hi_u - lo_u) * per_user
+    rng = np.random.default_rng(seed + lo_u)
+    return Table(
+        {
+            "user": np.repeat(np.arange(lo_u, hi_u, dtype=np.int64), per_user),
+            "amount": rng.standard_normal(n),
+        }
+    )
+
+
+def left_table(lo, hi, seed=0):
+    from repro.core.columnar import Table
+
+    rng = np.random.default_rng(seed + lo)
+    return Table(
+        {
+            "eventTime": np.arange(lo, hi, dtype=np.int64),
+            "lx": rng.standard_normal(hi - lo),
+        }
+    )
+
+
+def right_table(lo, hi, seed=1):
+    from repro.core.columnar import Table
+
+    keys = np.arange(lo + (lo % 2), hi, 2, dtype=np.int64)  # even keys only
+    rng = np.random.default_rng(seed + lo)
+    return Table({"eventTime": keys, "ry": rng.standard_normal(keys.size)})
+
+
+def keyed_project(hi):
+    from repro.pipeline import Model, Project, model, runtime
+
+    p = Project("bench6-keyed")
+
+    @model(project=p, incremental="keyed")
+    @runtime("numpy")
+    def peruser(data=Model("ns.act", columns=["amount"], filter=f"user BETWEEN 0 AND {hi}")):
+        users = np.asarray(data.column("user"))
+        amounts = np.asarray(data.column("amount"), np.float64)
+        uniq, starts = np.unique(users, return_index=True)
+        if uniq.size == 0:
+            return {"user": uniq, "total": np.zeros(0), "n": np.zeros(0, np.int64)}
+        return {
+            "user": uniq,
+            "total": np.add.reduceat(amounts, starts),
+            "n": np.diff(np.append(starts, users.size)).astype(np.int64),
+        }
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scored(data=Model("peruser")):
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = np.asarray(data.column("total"), np.float64) / np.maximum(
+            np.asarray(data.column("n"), np.float64), 1.0
+        )
+        return out
+
+    return p
+
+
+def join_project(hi):
+    from repro.pipeline import Model, Project, model, runtime
+
+    p = Project("bench6-join")
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def joined(
+        left=Model("ns.left", columns=["lx"], filter=f"eventTime BETWEEN 0 AND {hi}"),
+        right=Model("ns.right", columns=["ry"], filter=f"eventTime BETWEEN 0 AND {hi}"),
+    ):
+        lk = np.asarray(left.column("eventTime"))
+        rk = np.asarray(right.column("eventTime"))
+        common, li, ri = np.intersect1d(lk, rk, return_indices=True)
+        return {
+            "eventTime": common,
+            "lx": np.asarray(left.column("lx"))[li],
+            "ry": np.asarray(right.column("ry"))[ri],
+        }
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scaled(data=Model("joined")):
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = np.asarray(data.column("lx"), np.float64) + np.asarray(
+            data.column("ry"), np.float64
+        )
+        return out
+
+    return p
+
+
+def _assert_bitwise_equal(a, b, label):
+    for name, table in a.outputs.items():
+        other = b.outputs[name]
+        assert table.column_names == other.column_names, (label, name)
+        for col in table.column_names:
+            np.testing.assert_array_equal(
+                table.column(col), other.column(col), err_msg=f"{label}:{name}:{col}"
+            )
+
+
+def _keyed_scenario(tmp: str, rows: int) -> Dict:
+    from repro.pipeline.executor import Workspace
+
+    users = rows // 5
+    touch = max(1, users // 100)  # 1% of the keys
+    u0 = users // 3
+    append = lambda c: c.append(
+        "ns.act", activity_table(u0, u0 + touch, per_user=1, seed=7)
+    )
+
+    warm = Workspace(os.path.join(tmp, "keyed-warm"), rows_per_fragment=1024)
+    warm.catalog.create_table("ns", "act", ACT_SCHEMA, "user")
+    warm.catalog.append("ns.act", activity_table(0, users))
+    warm.run(keyed_project(users - 1))  # populate
+    append(warm.catalog)
+    t0 = time.perf_counter()
+    warm_res = warm.run(keyed_project(users - 1))
+    warm_wall = time.perf_counter() - t0
+
+    cold = Workspace(os.path.join(tmp, "keyed-cold"), rows_per_fragment=1024)
+    cold.catalog.create_table("ns", "act", ACT_SCHEMA, "user")
+    cold.catalog.append("ns.act", activity_table(0, users))
+    append(cold.catalog)
+    t0 = time.perf_counter()
+    cold_res = cold.run(keyed_project(users - 1))
+    cold_wall = time.perf_counter() - t0
+
+    _assert_bitwise_equal(warm_res, cold_res, "keyed-append")
+    return {
+        "users": users,
+        "touched_keys": touch,
+        "warm_rows_to_user_fns": int(warm_res.rows_to_user_fns),
+        "cold_rows_to_user_fns": int(cold_res.rows_to_user_fns),
+        "fresh_rows_peruser": int(warm_res.node_stats["peruser"]["fresh_rows"]),
+        "fresh_fraction": round(
+            warm_res.rows_to_user_fns / max(cold_res.rows_to_user_fns, 1), 4
+        ),
+        "warm_wall_seconds": round(warm_wall, 6),
+        "cold_wall_seconds": round(cold_wall, 6),
+    }
+
+
+def _join_scenario(tmp: str, rows: int) -> Dict:
+    from repro.pipeline.executor import Workspace
+
+    touch = max(2, rows // 100)  # ~1% of the left keys per append
+    edits = [
+        ("cold", rows // 2 - 1, None),
+        ("widen", rows - 1, None),
+        ("rerun", rows - 1, None),
+        (
+            "append-left",
+            rows + 999,
+            lambda c: c.append("ns.left", left_table(rows, rows + touch, seed=9)),
+        ),
+        (
+            "append-right",
+            rows + 999,
+            lambda c: c.append("ns.right", right_table(rows, rows + touch, seed=9)),
+        ),
+        ("rerun-2", rows + 999, None),
+    ]
+
+    def seed(ws):
+        ws.catalog.create_table("ns", "left", LEFT_SCHEMA, "eventTime")
+        ws.catalog.create_table("ns", "right", RIGHT_SCHEMA, "eventTime")
+        ws.catalog.append("ns.left", left_table(0, rows))
+        ws.catalog.append("ns.right", right_table(0, rows))
+        return ws
+
+    warm = seed(Workspace(os.path.join(tmp, "join-warm"), rows_per_fragment=1024))
+    iterations: List[Dict] = []
+    history = []
+    for idx, (label, hi, mutate) in enumerate(edits):
+        if mutate is not None:
+            mutate(warm.catalog)
+            history.append(mutate)
+        t0 = time.perf_counter()
+        warm_res = warm.run(join_project(hi))
+        warm_wall = time.perf_counter() - t0
+
+        cold = seed(
+            Workspace(os.path.join(tmp, f"join-cold-{idx}"), rows_per_fragment=1024)
+        )
+        for m in history:
+            m(cold.catalog)
+        t0 = time.perf_counter()
+        cold_res = cold.run(join_project(hi))
+        cold_wall = time.perf_counter() - t0
+
+        _assert_bitwise_equal(warm_res, cold_res, label)
+        iterations.append(
+            {
+                "label": label,
+                "warm_rows": int(warm_res.rows_to_user_fns),
+                "cold_rows": int(cold_res.rows_to_user_fns),
+                "warm_wall_seconds": round(warm_wall, 6),
+                "cold_wall_seconds": round(cold_wall, 6),
+            }
+        )
+
+    # totals EXCLUDE iteration 0: its "warm" run is itself cold (first touch)
+    warm_rows = sum(it["warm_rows"] for it in iterations[1:])
+    cold_rows = sum(it["cold_rows"] for it in iterations[1:])
+    return {
+        "iterations": iterations,
+        "warm_rows_to_user_fns": warm_rows,
+        "cold_rows_to_user_fns": cold_rows,
+        "rows_ratio": round(cold_rows / max(warm_rows, 1), 2),
+    }
+
+
+def run(rows: int = 20_000) -> Dict:
+    with tempfile.TemporaryDirectory() as tmp:
+        keyed = _keyed_scenario(tmp, rows)
+        join = _join_scenario(tmp, rows)
+    return {"workload": "keyed+join", "rows": rows, "keyed": keyed, "join": join}
+
+
+def format_table(result: Dict) -> str:
+    k = result["keyed"]
+    lines = [
+        f"keyed: {k['users']:,} key groups, append touches {k['touched_keys']:,} "
+        f"(1%) -> warm feeds {k['warm_rows_to_user_fns']:,} rows vs "
+        f"{k['cold_rows_to_user_fns']:,} cold "
+        f"(fraction {k['fresh_fraction']}, gate <= 0.05)",
+        "",
+        "| join edit | warm fn rows | cold fn rows |",
+        "|---|---|---|",
+    ]
+    for it in result["join"]["iterations"]:
+        lines.append(f"| {it['label']} | {it['warm_rows']:,} | {it['cold_rows']:,} |")
+    j = result["join"]
+    lines.append(
+        f"| **total (warm iters)** | {j['warm_rows_to_user_fns']:,} | "
+        f"{j['cold_rows_to_user_fns']:,} |"
+    )
+    lines.append(f"\njoin rows ratio (cold/warm): {j['rows_ratio']}x (gate >= 5x)")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless keyed fraction <= 5% and join ratio >= 5x",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        frac = result["keyed"]["fresh_fraction"]
+        ratio = result["join"]["rows_ratio"]
+        if frac > 0.05 or ratio < 5:
+            print(f"FAIL: keyed fraction {frac} (gate <= 0.05), join ratio {ratio}x (gate >= 5x)")
+            return 1
+        print(f"OK: keyed fraction {frac} (<= 0.05), join ratio {ratio}x (>= 5x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -77,6 +77,18 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_5.json"), "w") as f:
         json.dump(r5, f, indent=1)
 
+    _section("BENCH 6 — keyed aggregations & incremental joins: touched groups only")
+    from benchmarks import bench6_keyed as b6
+
+    r6 = b6.run(rows=20_000 if not args.full else 200_000)
+    print(b6.format_table(r6))
+    artifacts["bench6"] = {
+        "keyed_fresh_fraction": r6["keyed"]["fresh_fraction"],
+        "join_rows_ratio": r6["join"]["rows_ratio"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_6.json"), "w") as f:
+        json.dump(r6, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

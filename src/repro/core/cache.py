@@ -58,9 +58,11 @@ __all__ = [
     "DifferentialStore",
     "DifferentialCache",
     "FragmentPin",
+    "multi_pins_for",
     "next_elem_id",
     "pins_for",
     "snapshot_usable_window",
+    "snapshots_usable_window",
 ]
 
 _ID = itertools.count()
@@ -80,11 +82,18 @@ UsableFn = Callable[["CacheElement"], IntervalSet]
 @dataclass(frozen=True)
 class FragmentPin:
     """What an element remembers about a source fragment (enough to detect
-    staleness even after the fragment vanishes from the catalog)."""
+    staleness even after the fragment vanishes from the catalog).
+
+    ``table`` labels which source table the fragment belongs to; ``None``
+    means the element's own ``table`` (the single-leaf case, which keeps old
+    pins — and old spill manifests — valid unchanged).  Multi-input nodes pin
+    fragments of *several* leaf tables in one element, so their pins carry
+    the label explicitly."""
 
     fragment_id: str
     key_min: int
     key_max: int
+    table: Optional[str] = None
 
     @property
     def window(self) -> Interval:
@@ -190,6 +199,24 @@ def pins_for(snapshot: Snapshot, window: IntervalSet) -> Tuple[FragmentPin, ...]
     )
 
 
+def multi_pins_for(
+    snapshots: Dict[str, Snapshot], window: IntervalSet
+) -> Tuple[FragmentPin, ...]:
+    """Pins for an element derived from *several* leaf tables (a multi-input
+    node): each table's overlapping fragments, labeled with the table so
+    :func:`snapshots_usable_window` can check each against its own
+    snapshot.  Tables are visited in sorted order for determinism."""
+    from repro.core.scan import fragments_overlapping
+
+    pins: List[FragmentPin] = []
+    for table in sorted(snapshots):
+        pins.extend(
+            FragmentPin(f.fragment_id, f.key_min, f.key_max, table)
+            for f in fragments_overlapping(snapshots[table], window)
+        )
+    return tuple(pins)
+
+
 def snapshot_usable_window(elem: CacheElement, snapshot: Snapshot) -> IntervalSet:
     """Differential invalidation against a snapshot (design choice 3).
 
@@ -201,21 +228,45 @@ def snapshot_usable_window(elem: CacheElement, snapshot: Snapshot) -> IntervalSe
     the fragments it pins — leaf scans, and model outputs pinning the leaf
     fragments their residual was computed from.
     """
-    live_ids = snapshot.fragment_ids
-    stale = IntervalSet(
-        [p.window for p in elem.pins if p.fragment_id not in live_ids]
-    )
-    unseen = IntervalSet(
-        [
-            Interval(f.key_min, f.key_max + 1)
-            for f in snapshot.fragments
-            if f.fragment_id not in elem.pin_ids
-            and elem.window.intersects(
-                IntervalSet([Interval(f.key_min, f.key_max + 1)])
-            )
-        ]
-    )
-    return elem.window.difference(stale).difference(unseen)
+    return snapshots_usable_window(elem, {elem.table: snapshot})
+
+
+def snapshots_usable_window(
+    elem: CacheElement, snapshots: Dict[str, Snapshot]
+) -> IntervalSet:
+    """:func:`snapshot_usable_window` generalized to elements whose rows
+    were derived from several leaf tables (multi-input nodes): the usable
+    window is the element window minus every table's stale/unseen ranges —
+    a window is only served if it is still valid under ALL the snapshots
+    its rows were zipped from.  Unlabeled pins belong to ``elem.table``, so
+    single-leaf elements behave exactly as before."""
+    usable = elem.window
+    seen_by_table: Dict[str, set] = {}
+    for p in elem.pins:
+        seen_by_table.setdefault(p.table or elem.table, set()).add(p.fragment_id)
+    for table, snapshot in snapshots.items():
+        live_ids = snapshot.fragment_ids
+        stale = IntervalSet(
+            [
+                p.window
+                for p in elem.pins
+                if (p.table or elem.table) == table
+                and p.fragment_id not in live_ids
+            ]
+        )
+        seen = seen_by_table.get(table, ())
+        unseen = IntervalSet(
+            [
+                Interval(f.key_min, f.key_max + 1)
+                for f in snapshot.fragments
+                if f.fragment_id not in seen
+                and elem.window.intersects(
+                    IntervalSet([Interval(f.key_min, f.key_max + 1)])
+                )
+            ]
+        )
+        usable = usable.difference(stale).difference(unseen)
+    return usable
 
 
 class DifferentialStore:

@@ -133,6 +133,7 @@ class ScanExecutor:
                         claim, wait_event = claimer(
                             scan.table, plan.residual, phys,
                             snapshot_id=snapshot.snapshot_id,
+                            kind="scan",
                         )
                     if wait_event is None:
                         for hit in plan.hits:

@@ -97,7 +97,14 @@ class SpillTier:
             "sort_key": elem.sort_key,
             "columns": list(elem.columns),
             "window": [[iv.lo, iv.hi] for iv in elem.window],
-            "pins": [[p.fragment_id, p.key_min, p.key_max] for p in elem.pins],
+            # labeled pins (multi-input elements) carry a 4th entry; the
+            # 3-element form stays byte-identical to old manifests
+            "pins": [
+                [p.fragment_id, p.key_min, p.key_max]
+                if p.table is None
+                else [p.fragment_id, p.key_min, p.key_max, p.table]
+                for p in elem.pins
+            ],
             "owner": elem.owner,
             "nbytes": int(elem.data.nbytes),
             "data_key": data_key,
@@ -159,8 +166,13 @@ class SpillTier:
                         [Interval(int(lo), int(hi)) for lo, hi in m["window"]]
                     ),
                     pins=tuple(
-                        FragmentPin(fid, int(kmin), int(kmax))
-                        for fid, kmin, kmax in m["pins"]
+                        FragmentPin(
+                            p[0],
+                            int(p[1]),
+                            int(p[2]),
+                            p[3] if len(p) > 3 else None,
+                        )
+                        for p in m["pins"]
                     ),
                     data=None,
                     signature=m["signature"],

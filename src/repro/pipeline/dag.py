@@ -57,27 +57,43 @@ def build_dag(project: Project) -> Dag:
         edges[name] = deps
         scan_leaves[name] = leaves
 
-        # incrementality contract is structural, so enforce it here: a
-        # rowwise node's output window must equal its input window, which is
-        # only well-defined for exactly one input; and slicing a residual out
-        # of an upstream model's output requires that output to carry a
-        # sort-key window — i.e. the upstream must itself be rowwise (scan
-        # leaves always qualify: the table's sort key windows them).
-        if mdef.incremental == "rowwise":
-            if len(mdef.inputs) != 1:
+        # incrementality contracts are structural, so enforce them here:
+        #
+        # - rowwise, one input: output window == input window; residuals are
+        #   sliced out of the upstream output, so a model input must itself
+        #   be *windowed* — rowwise or keyed, both of whose outputs carry a
+        #   sort-key window (scan leaves always qualify: the table's sort
+        #   key windows them).
+        # - rowwise, ≥2 inputs (incremental sort-merge join): every input
+        #   must be windowed; the physical plan intersects the inputs'
+        #   windows into the node's joint window and validates that all
+        #   inputs share one sort key (that needs catalog metadata, so it
+        #   lives in compile_plan, not here).
+        # - keyed: a per-key-group aggregation addressed by the same sort
+        #   key; structurally it takes exactly one windowed input (aggregate
+        #   after a multi-input rowwise join, not instead of one).
+        if mdef.incremental in ("rowwise", "keyed"):
+            if len(mdef.inputs) < 1:
                 raise DagError(
-                    f"{name}: incremental='rowwise' requires exactly one "
-                    f"input, got {len(mdef.inputs)}"
+                    f"{name}: incremental={mdef.incremental!r} requires at "
+                    f"least one input"
                 )
-            ref = next(iter(mdef.inputs.values()))
-            if ref.name in project.models and (
-                project.models[ref.name].incremental != "rowwise"
-            ):
+            if mdef.incremental == "keyed" and len(mdef.inputs) != 1:
                 raise DagError(
-                    f"{name}: incremental='rowwise' requires its model input "
-                    f"{ref.name!r} to be rowwise too (its output has no "
-                    f"sort-key window to slice residuals from)"
+                    f"{name}: incremental='keyed' requires exactly one "
+                    f"input, got {len(mdef.inputs)} (join upstream with a "
+                    f"multi-input rowwise node, then aggregate)"
                 )
+            for ref in mdef.inputs.values():
+                if ref.name in project.models and (
+                    project.models[ref.name].incremental not in ("rowwise", "keyed")
+                ):
+                    raise DagError(
+                        f"{name}: incremental={mdef.incremental!r} requires "
+                        f"its model input {ref.name!r} to be windowed "
+                        f"(rowwise or keyed) — its output has no sort-key "
+                        f"window to slice residuals from"
+                    )
 
     # Kahn topological sort
     indeg = {m: len(deps) for m, deps in edges.items()}

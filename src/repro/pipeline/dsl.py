@@ -63,7 +63,26 @@ __all__ = [
 #                    residual windows (see ``repro.pipeline.executor``).
 #                    A rowwise function that drops rows must return the sort
 #                    key column itself (the executor cannot position-align it).
-INCREMENTAL_MODES = ("none", "rowwise")
+#                    With ≥2 inputs the contract is *multi-input rowwise* (an
+#                    incremental sort-merge join): all inputs share one sort
+#                    key, the node's window is the intersection of its inputs'
+#                    windows, and each output row is a function of the input
+#                    rows at one key alone — the executor feeds the function
+#                    zip-aligned residual slices of every input.  Multi-input
+#                    functions must always return the sort-key column
+#                    (position alignment is impossible across inputs of
+#                    different lengths), and output keys must be drawn from
+#                    the input keys.
+# - ``"keyed"``    — the function is a per-key-group aggregation over its
+#                    single input: each output row is a function of ALL input
+#                    rows sharing one sort-key value (sum/mean/count per key).
+#                    The executor caches output at key-group granularity, so
+#                    an append/overwrite re-aggregates only the touched key
+#                    groups and UNION-merges them with cached groups.  Keyed
+#                    functions must return the sort-key column, at most one
+#                    output row region per input region (never more rows out
+#                    than in), and only keys present in the input.
+INCREMENTAL_MODES = ("none", "rowwise", "keyed")
 
 
 @dataclass(frozen=True)
@@ -153,7 +172,9 @@ def model(
     :data:`INCREMENTAL_MODES`), letting the executor re-run the function only
     on windows whose upstream rows actually changed.  A rowwise model's
     output always carries its sort-key column (the executor attaches it,
-    position-aligned, when the function does not return it)."""
+    position-aligned, when the function does not return it).  A rowwise
+    model over ≥2 inputs is an incremental sort-merge join; ``"keyed"``
+    declares a per-key-group aggregation cached at key granularity."""
     if incremental not in INCREMENTAL_MODES:
         raise ValueError(
             f"incremental must be one of {INCREMENTAL_MODES}, got {incremental!r}"

@@ -12,8 +12,8 @@ Semantics from the paper (Fig. 2/3):
 
 Beyond the paper's leaf scans, the cache sits below EVERY node: a
 :class:`Workspace` holds a second :class:`DifferentialStore` for intermediate
-``@model`` outputs.  A node declared ``incremental="rowwise"`` is planned
-exactly like a scan —
+``@model`` outputs.  A node declared ``incremental="rowwise"`` (single- or
+multi-input) or ``incremental="keyed"`` is planned exactly like a scan —
 
 1. look up cache elements under the node's *signature* (code hash, runtime,
    upstream signatures — computed by ``compile_plan``);
@@ -22,6 +22,18 @@ exactly like a scan —
    from, so append/overwrite invalidation reuses the scan machinery);
 3. run the user function only on the *residual* window's rows;
 4. UNION hit views + fresh rows zero-copy, store the residual back.
+
+Multi-input rowwise nodes (incremental sort-merge joins) plan ONE joint
+window — the intersection of their inputs' windows — and feed the function
+the zip-aligned residual slice of EVERY input; their cache elements pin the
+fragments of all leaf tables (labeled pins), so either side's append or
+overwrite invalidates exactly the touched key ranges.  Keyed nodes
+(per-key-group aggregations) reuse the identical machinery because key-range
+windows can never split a key group: groups live at single key points, every
+boundary the system produces (filter bounds, fragment key-min/max pins) is a
+key-range bound, and residual inputs are re-read by key range — so a dirty
+leaf fragment maps, via its key stats, to dirty *key groups*, each of which
+is re-aggregated whole and UNION-merged with untouched cached groups.
 
 Warm iteration cost is therefore proportional to the *edit* (rows whose
 inputs actually changed), not to the pipeline: re-running an unchanged
@@ -48,8 +60,9 @@ import numpy as np
 from repro.core.cache import (
     DifferentialCache,
     DifferentialStore,
+    multi_pins_for,
     pins_for,
-    snapshot_usable_window,
+    snapshots_usable_window,
 )
 from repro.core.columnar import ChunkedTable, Table, concat_tables
 from repro.core.intervals import NEG_INF, POS_INF, Interval, IntervalSet
@@ -190,8 +203,8 @@ class Workspace:
         pins = snapshot_pins or {}
         for step in plan.steps:
             fn = dag.project[step.model].fn
-            if step.incremental == "rowwise":
-                out, stats = self._run_rowwise(
+            if step.incremental in ("rowwise", "keyed"):
+                out, stats = self._run_incremental(
                     step, plan, fn, results, leaf_snapshots, pins
                 )
             else:
@@ -200,10 +213,13 @@ class Workspace:
             node_stats[step.model] = stats
             if step.materialize:
                 # the leaf snapshot this run's rows were derived from is the
-                # publication's validity anchor (see _materialize)
+                # publication's validity anchor (see _materialize); the
+                # single-leaf provenance property cannot describe a join, so
+                # multi-leaf nodes republish in full
                 leaf_snap = (
                     self._leaf_snapshot(step, leaf_snapshots, pins)
-                    if step.incremental == "rowwise" and step.leaf_table
+                    if step.incremental in ("rowwise", "keyed")
+                    and len(step.leaf_pairs) == 1
                     else None
                 )
                 self._materialize(step, out, leaf_snap)
@@ -271,7 +287,7 @@ class Workspace:
         out = _invoke(fn, step.runtime, kwargs)
         return out, {"fresh_rows": rows, "cached_rows": 0, "model_cache_bytes": 0}
 
-    # -- node execution: differential (incremental="rowwise") ----------------
+    # -- node execution: differential (incremental="rowwise"/"keyed") --------
     def _leaf_snapshot(
         self,
         step: UserFnStep,
@@ -290,17 +306,43 @@ class Workspace:
             leaf_snapshots[key] = snap
         return leaf_snapshots[key]
 
+    def _leaf_snapshots_for(
+        self,
+        step: UserFnStep,
+        leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
+        pins: Dict[str, str],
+    ) -> Dict[str, Snapshot]:
+        """One resolved snapshot per leaf table under the node's windowed
+        chains, shared through the per-run memo (see ``run``)."""
+        out: Dict[str, Snapshot] = {}
+        for table, snapshot_id in step.leaf_pairs:
+            if snapshot_id is None and pins:
+                snapshot_id = pins.get(table)
+            key = (table, snapshot_id)
+            if key not in leaf_snapshots:
+                if snapshot_id is not None:
+                    snap = self.catalog.snapshot(table, snapshot_id)
+                else:
+                    snap = self.catalog.current_snapshot(table)
+                leaf_snapshots[key] = snap
+            out[table] = leaf_snapshots[key]
+        return out
+
     def _residual_input(
         self,
+        binding: Tuple[str, object],
         step: UserFnStep,
         plan: PhysicalPlan,
         results: Dict[str, Table],
         residual: IntervalSet,
-        snapshot: Snapshot,
+        snapshots: Dict[str, Snapshot],
     ) -> Table:
-        """The node's input restricted to the residual window, sorted by the
-        sort key and always carrying the sort-key column."""
-        (arg, (kind, ref)) = step.bindings[0]
+        """One input of the node restricted to the residual window, sorted by
+        the sort key and always carrying the sort-key column.  For a
+        multi-input node this is the zip-aligned slice of that input: every
+        input is windowed by the SAME key, so slicing each one to the same
+        residual yields exactly the rows the function must align."""
+        (kind, ref) = binding
         if kind == "scan":
             s = plan.scans[ref]
             # the sort key must ride along so the engine can window the
@@ -313,7 +355,7 @@ class Workspace:
                 columns=cols,
                 window_pairs=s.window_pairs,
                 predicate_filter=s.predicate_filter,
-                snapshot_id=snapshot.snapshot_id,
+                snapshot_id=snapshots[s.table].snapshot_id,
             )
             chunked = self._exec_scan(s_with_key, window=residual)
             if not chunked.chunks:
@@ -324,11 +366,26 @@ class Workspace:
                 dt = lambda n: np.dtype(schema[n]) if n in schema else np.int64
                 return Table({n: np.empty(0, dtype=dt(n)) for n in cols})
             return chunked.combine().sort_by(step.sort_key)
-        upstream = results[ref]  # rowwise upstream: sorted, carries the key
+        upstream = results[ref]  # windowed upstream: sorted, carries the key
         rows = self._rows_in(upstream, upstream.column(step.sort_key), residual)
         return rows if rows is not None else upstream.slice(0, 0)
 
-    def _run_rowwise(
+    def _residual_inputs(
+        self,
+        step: UserFnStep,
+        plan: PhysicalPlan,
+        results: Dict[str, Table],
+        residual: IntervalSet,
+        snapshots: Dict[str, Snapshot],
+    ) -> Dict[str, Table]:
+        return {
+            arg: self._residual_input(
+                binding, step, plan, results, residual, snapshots
+            )
+            for arg, binding in step.bindings
+        }
+
+    def _run_incremental(
         self,
         step: UserFnStep,
         plan: PhysicalPlan,
@@ -337,21 +394,27 @@ class Workspace:
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
         snap_pins: Dict[str, str],
     ) -> Tuple[Table, Dict[str, int]]:
-        snapshot = self._leaf_snapshot(step, leaf_snapshots, snap_pins)
+        snapshots = self._leaf_snapshots_for(step, leaf_snapshots, snap_pins)
         if step.window.empty:
-            # degenerate filter (e.g. BETWEEN 5 AND 1): run the fn once on an
-            # empty, schema-complete input — nothing to cache or serve
-            (arg, _binding) = step.bindings[0]
-            in_tbl = self._residual_input(
-                step, plan, results, IntervalSet.empty_set(), snapshot
+            # degenerate joint window (e.g. BETWEEN 5 AND 1, or a join of
+            # disjoint filters): run the fn once on empty, schema-complete
+            # inputs — nothing to cache or serve
+            kwargs = self._residual_inputs(
+                step, plan, results, IntervalSet.empty_set(), snapshots
             )
-            out = _invoke(fn, step.runtime, {arg: in_tbl})
-            return self._windowed_output(step, in_tbl, out), {
+            out = _invoke(fn, step.runtime, kwargs)
+            return self._windowed_output(step, kwargs, out), {
                 "fresh_rows": 0,
                 "cached_rows": 0,
                 "model_cache_bytes": 0,
             }
-        usable_fn = lambda e: snapshot_usable_window(e, snapshot)
+        usable_fn = lambda e: snapshots_usable_window(e, snapshots)
+        # one coalescing identity for the full snapshot vector: claims only
+        # match when EVERY leaf snapshot agrees (single-leaf nodes reduce to
+        # the plain snapshot id, matching the scan path's convention)
+        snapshot_token = ",".join(
+            f"{t}:{s.snapshot_id}" for t, s in sorted(snapshots.items())
+        )
         # hold a signature read-pin for the whole node execution: a shared
         # store must not liveness/LRU-reclaim the signature group an
         # in-flight run is working against (plain stores: no-op)
@@ -393,7 +456,8 @@ class Workspace:
                             claim, wait_event = claimer(
                                 step.signature,
                                 mplan.residual,
-                                snapshot_id=snapshot.snapshot_id,
+                                snapshot_id=snapshot_token,
+                                kind=step.incremental,
                             )
                         spill_bytes += mplan.promoted_spill_bytes
                         if wait_event is None:
@@ -415,18 +479,22 @@ class Workspace:
                 fresh: Optional[Table] = None
                 fresh_rows = 0
                 if not mplan.residual.empty:
-                    (arg, _binding) = step.bindings[0]
-                    in_tbl = self._residual_input(
-                        step, plan, results, mplan.residual, snapshot
+                    kwargs = self._residual_inputs(
+                        step, plan, results, mplan.residual, snapshots
                     )
-                    if in_tbl.num_rows == 0 and hit_chunks:
+                    total_in = sum(t.num_rows for t in kwargs.values())
+                    if total_in == 0 and hit_chunks:
                         # nothing to compute; keep the output schema from a hit view
                         fresh = hit_chunks[0].slice(0, 0)
                     else:
-                        fresh_rows = in_tbl.num_rows
-                        out = _invoke(fn, step.runtime, {arg: in_tbl})
-                        fresh = self._windowed_output(step, in_tbl, out)
-                    pins = pins_for(snapshot, mplan.residual)
+                        fresh_rows = total_in
+                        out = _invoke(fn, step.runtime, kwargs)
+                        fresh = self._windowed_output(step, kwargs, out)
+                    if len(snapshots) == 1:
+                        (only_snap,) = snapshots.values()
+                        pins = pins_for(only_snap, mplan.residual)
+                    else:
+                        pins = multi_pins_for(snapshots, mplan.residual)
                     with self._model_lock:
                         self.model_store.insert_window(
                             signature=step.signature,
@@ -458,12 +526,72 @@ class Workspace:
             "coalesced_waits": waits,
         }
 
-    def _windowed_output(self, step: UserFnStep, in_tbl: Table, out: Table) -> Table:
-        """Enforce the rowwise contract and return the output sorted by the
-        sort key, with the key column present (attached position-aligned when
-        the function did not return it).  Columns are put in sorted order —
-        the canonical layout cache elements store — so cold and warm
-        assemblies are chunk-compatible and byte-identical."""
+    def _windowed_output(
+        self, step: UserFnStep, inputs: Dict[str, Table], out: Table
+    ) -> Table:
+        """Enforce the node's incrementality contract and return the output
+        sorted by the sort key, with the key column present.  Columns are put
+        in sorted order — the canonical layout cache elements store — so cold
+        and warm assemblies are chunk-compatible and byte-identical.
+
+        Single-input rowwise keeps the position-alignment convenience (the
+        engine attaches the key when the function did not return it); keyed
+        and multi-input rowwise functions must ALWAYS return the key —
+        aggregation collapses positions and joins zip inputs of different
+        lengths, so position alignment is undefined for both."""
+        if step.incremental == "rowwise" and len(inputs) == 1:
+            (in_tbl,) = inputs.values()
+            return self._windowed_output_rowwise(step, in_tbl, out)
+        total_in = sum(t.num_rows for t in inputs.values())
+        if out.num_rows > total_in:
+            raise ValueError(
+                f"{step.model}: incremental={step.incremental!r} functions "
+                f"must not create rows ({total_in} in across "
+                f"{len(inputs)} input(s), {out.num_rows} out)"
+            )
+        if step.sort_key not in out.column_names:
+            what = (
+                "a keyed aggregation"
+                if step.incremental == "keyed"
+                else "a multi-input rowwise function"
+            )
+            raise ValueError(
+                f"{step.model}: {what} must return the sort key column "
+                f"{step.sort_key!r} (the engine cannot position-align it)"
+            )
+        in_keys = np.concatenate(
+            [np.asarray(t.column(step.sort_key)) for t in inputs.values()]
+        )
+        out_keys = np.asarray(out.column(step.sort_key))
+        if out_keys.dtype != in_keys.dtype:
+            # a runtime narrowed the key (jax x32): cast back and verify
+            # losslessness — wrapped values cannot address the cache
+            cast = out_keys.astype(in_keys.dtype)
+            if out_keys.size and not np.isin(cast, in_keys).all():
+                raise ValueError(
+                    f"{step.model}: sort key {step.sort_key!r} came back as "
+                    f"{out_keys.dtype} with values outside the input keys — "
+                    f"the runtime truncated it (jax x32?); keep keys within "
+                    f"its integer range"
+                )
+            cols = {n: out.column(n) for n in out.column_names}
+            cols[step.sort_key] = cast
+            out = Table(cols)
+            out_keys = cast
+        if out_keys.size and not np.isin(out_keys, in_keys).all():
+            # output keys outside the residual's input keys would land in
+            # windows this residual does not own — cached neighbours would
+            # then disagree with a cold run
+            raise ValueError(
+                f"{step.model}: incremental={step.incremental!r} output "
+                f"keys must be drawn from the input keys (an output row may "
+                f"only derive from input rows at its own key)"
+            )
+        return out.select(sorted(out.column_names)).sort_by(step.sort_key)
+
+    def _windowed_output_rowwise(
+        self, step: UserFnStep, in_tbl: Table, out: Table
+    ) -> Table:
         if out.num_rows > in_tbl.num_rows:
             raise ValueError(
                 f"{step.model}: incremental='rowwise' functions must not "

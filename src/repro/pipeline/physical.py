@@ -14,12 +14,17 @@ The plan also carries each node's *differential identity*:
   A code edit or upstream redefinition changes the signature, which
   invalidates the node — and, by construction, every node downstream of it.
 - ``window`` / ``sort_key`` — the sort-key extent the node's output covers,
-  propagated up rowwise chains so the executor can plan intermediate outputs
-  like scans (cached windows + residual recompute).
-- ``leaf_table`` / ``leaf_snapshot_id`` — the catalog table at the root of
-  the node's rowwise chain.  Model cache elements pin that table's
-  fragments, so append/overwrite invalidation of intermediate outputs
-  reuses the exact snapshot logic leaf scans use.
+  propagated up rowwise/keyed chains so the executor can plan intermediate
+  outputs like scans (cached windows + residual recompute).  A multi-input
+  rowwise node (incremental sort-merge join) takes the *intersection* of its
+  inputs' windows — the joint window its zip-aligned output covers — and
+  compile-time validation requires all inputs to share one sort key.
+- ``leaf_pairs`` — the ``(table, snapshot_id)`` catalog leaves at the roots
+  of the node's windowed chains (one for a plain rowwise/keyed chain,
+  several for a join).  Model cache elements pin those tables' fragments,
+  so append/overwrite invalidation of intermediate outputs reuses the exact
+  snapshot logic leaf scans use; ``leaf_table``/``leaf_snapshot_id`` remain
+  as the single-leaf convenience (the first pair).
 """
 
 from __future__ import annotations
@@ -68,6 +73,9 @@ class UserFnStep:
     sort_key: Optional[str] = None
     leaf_table: Optional[str] = None
     leaf_snapshot_id: Optional[str] = None
+    # every (table, snapshot_id) leaf under the node's windowed chains;
+    # (leaf_table, leaf_snapshot_id) is leaf_pairs[0] when non-empty
+    leaf_pairs: Tuple[Tuple[str, Optional[str]], ...] = ()
 
     @property
     def window(self) -> IntervalSet:
@@ -110,22 +118,22 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
     sigs: Dict[str, str] = {}
     windows: Dict[str, IntervalSet] = {}
     node_sort_key: Dict[str, Optional[str]] = {}
-    leaves_of: Dict[str, Tuple[Optional[str], Optional[str]]] = {}
+    leaves_of: Dict[str, Tuple[Tuple[str, Optional[str]], ...]] = {}
 
     for name in dag.order:
         mdef: ModelDef = dag.project[name]
         bindings: List[Tuple[str, Tuple[str, object]]] = []
         sig_inputs: List[tuple] = []
-        in_window: Optional[IntervalSet] = None
-        in_sort_key: Optional[str] = None
-        in_leaf: Tuple[Optional[str], Optional[str]] = (None, None)
+        in_windows: List[IntervalSet] = []
+        in_sort_keys: List[Optional[str]] = []
+        in_leaf_pairs: List[Tuple[str, Optional[str]]] = []
         for arg, ref in mdef.inputs.items():
             if ref.name in dag.project.models:
                 bindings.append((arg, ("model", ref.name)))
                 sig_inputs.append(("model", sigs[ref.name]))
-                in_window = windows[ref.name]
-                in_sort_key = node_sort_key[ref.name]
-                in_leaf = leaves_of[ref.name]
+                in_windows.append(windows[ref.name])
+                in_sort_keys.append(node_sort_key[ref.name])
+                in_leaf_pairs.extend(leaves_of[ref.name])
             else:
                 sort_key = sort_keys[ref.name]
                 parsed = parse_filter(ref.filter, sort_key)
@@ -151,9 +159,9 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                     # differential dimension, not part of the node identity
                     ("scan", ref.name, cols, parsed.predicate_signature(), ref.snapshot_id)
                 )
-                in_window = parsed.window
-                in_sort_key = sort_key
-                in_leaf = (ref.name, ref.snapshot_id)
+                in_windows.append(parsed.window)
+                in_sort_keys.append(sort_key)
+                in_leaf_pairs.append((ref.name, ref.snapshot_id))
         sigs[name] = _digest(
             (
                 code_fingerprint(mdef.fn),
@@ -162,12 +170,45 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 tuple(sig_inputs),
             )
         )
-        # rowwise nodes have exactly one input (dag validation), so the last
-        # assignment IS the single input; multi-input "none" nodes keep a
-        # best-effort window that downstream rowwise nodes can never consume
-        windows[name] = in_window if in_window is not None else IntervalSet.empty_set()
-        node_sort_key[name] = in_sort_key
-        leaves_of[name] = in_leaf
+        if mdef.incremental in ("rowwise", "keyed") and in_windows:
+            # an incremental node's output is windowed by the shared sort
+            # key; for a multi-input join the joint window is the
+            # INTERSECTION of the inputs' windows (zip-aligned residuals
+            # are only defined where every input has rows to offer)
+            if len(set(in_sort_keys)) > 1:
+                raise ValueError(
+                    f"{name}: incremental={mdef.incremental!r} inputs must "
+                    f"share one sort key, got {sorted(set(map(str, in_sort_keys)))}"
+                )
+            window = in_windows[0]
+            for w in in_windows[1:]:
+                window = window.intersect(w)
+            windows[name] = window
+            node_sort_key[name] = in_sort_keys[0]
+        else:
+            # multi-input "none" nodes keep a best-effort window that
+            # downstream incremental nodes can never consume anyway
+            windows[name] = in_windows[-1] if in_windows else IntervalSet.empty_set()
+            node_sort_key[name] = in_sort_keys[-1] if in_sort_keys else None
+        # dedupe leaf pairs preserving input order; one table pinned under
+        # two snapshots in one incremental node has no single validity
+        # answer per fragment, so reject it outright
+        pairs: List[Tuple[str, Optional[str]]] = []
+        for p in in_leaf_pairs:
+            if p not in pairs:
+                pairs.append(p)
+        if mdef.incremental in ("rowwise", "keyed"):
+            by_table: Dict[str, set] = {}
+            for t, sid in pairs:
+                by_table.setdefault(t, set()).add(sid)
+            dup = sorted(t for t, sids in by_table.items() if len(sids) > 1)
+            if dup:
+                raise ValueError(
+                    f"{name}: incremental={mdef.incremental!r} reads "
+                    f"table(s) {dup} under two different snapshot pins — "
+                    f"pin one snapshot per table"
+                )
+        leaves_of[name] = tuple(pairs)
         steps.append(
             UserFnStep(
                 model=name,
@@ -178,8 +219,9 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 signature=sigs[name],
                 window_pairs=windows[name].to_pairs(),
                 sort_key=node_sort_key[name],
-                leaf_table=leaves_of[name][0],
-                leaf_snapshot_id=leaves_of[name][1],
+                leaf_table=pairs[0][0] if pairs else None,
+                leaf_snapshot_id=pairs[0][1] if pairs else None,
+                leaf_pairs=tuple(pairs),
             )
         )
     return PhysicalPlan(scans=scans, steps=steps)

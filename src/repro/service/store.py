@@ -59,15 +59,23 @@ __all__ = ["SharedStore", "SharedScanCache", "ResidualClaim"]
 
 @dataclass
 class ResidualClaim:
-    """One in-flight residual computation: ``(signature, window, columns,
-    snapshot)`` plus the event concurrent planners of an overlapping
-    residual wait on."""
+    """One in-flight residual computation: ``(signature, kind, window,
+    columns, snapshot)`` plus the event concurrent planners of an
+    overlapping residual wait on.
+
+    ``kind`` names the claim's addressing contract — ``"scan"`` for leaf
+    scans, ``"rowwise"``/``"keyed"`` for model residuals (``"window"`` is
+    the legacy default).  Two claims only coalesce within one kind: a keyed
+    residual's window is in key-group space and a rowwise one's in row
+    space, so a window overlap between different kinds is a coordinate
+    coincidence, not the same computation."""
 
     signature: Hashable
     window: IntervalSet
     columns: frozenset
     thread: int
     snapshot_id: Optional[str] = None
+    kind: str = "window"
     event: threading.Event = field(default_factory=threading.Event)
 
 
@@ -154,21 +162,26 @@ class SharedStore(DifferentialStore):
         window: IntervalSet,
         columns: Sequence[str] = (),
         snapshot_id: Optional[str] = None,
+        kind: str = "window",
     ) -> Tuple[Optional[ResidualClaim], Optional[threading.Event]]:
-        """Atomically either claim ``(signature, window)`` for this run or
-        subscribe to an overlapping in-flight claim.
+        """Atomically either claim ``(signature, kind, window)`` for this
+        run or subscribe to an overlapping in-flight claim.
 
         Returns ``(claim, None)`` when this caller now owns the residual
         (it MUST call :meth:`release_residual` when the computed rows are
         inserted — or on failure), or ``(None, event)`` when another run is
-        already computing an overlapping residual whose columns cover this
-        caller's AND whose snapshot matches: wait on the event (with no
-        lock held), then REPLAN — the winner's insert turns the overlap
-        into cache hits.  A snapshot mismatch never subscribes: the owner's
-        rows would fail the subscriber's fragment-pin check anyway, so
-        waiting could only add latency.  With coalescing disabled the call
-        is a no-op ``(None, None)``: no claim is registered and callers
-        skip the release entirely.
+        already computing an overlapping residual of the SAME kind whose
+        columns cover this caller's AND whose snapshot matches: wait on the
+        event (with no lock held), then REPLAN — the winner's insert turns
+        the overlap into cache hits.  A snapshot mismatch never subscribes:
+        the owner's rows would fail the subscriber's fragment-pin check
+        anyway, so waiting could only add latency.  A *kind* mismatch never
+        subscribes either — claim windows of different contracts live in
+        different coordinate spaces (row windows vs key-group ranges), so
+        an overlap between kinds is meaningless and waiting on one would
+        coalesce two unrelated computations.  With coalescing disabled the
+        call is a no-op ``(None, None)``: no claim is registered and
+        callers skip the release entirely.
 
         Callers invoke this under ``store.lock`` in the same critical
         section as the plan, so two planners of the same residual serialize:
@@ -182,6 +195,7 @@ class SharedStore(DifferentialStore):
             for c in self._claims.get(signature, ()):
                 if (
                     c.thread != me
+                    and c.kind == kind
                     and c.snapshot_id == snapshot_id
                     and need.issubset(c.columns)
                     and c.window.intersects(window)
@@ -194,6 +208,7 @@ class SharedStore(DifferentialStore):
                 frozenset(columns),
                 threading.get_ident(),
                 snapshot_id,
+                kind,
             )
             self._claims.setdefault(signature, []).append(claim)
             return claim, None

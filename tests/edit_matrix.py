@@ -1,0 +1,201 @@
+"""Reusable edit-matrix harness for incrementality contracts (ISSUE 6).
+
+Every incrementality contract (rowwise, multi-input rowwise, keyed) must
+satisfy ONE property: a warm workspace driven through an arbitrary sequence
+of pipeline edits produces outputs **bitwise-identical** to a cold workspace
+that replayed the same catalog history, while never feeding user functions
+more rows than the cold run did.  This module is that property, factored out
+of ``test_incremental.py`` so each contract instantiates the same sweep:
+
+- :class:`Edit` — one step of the matrix: project-factory parameters, an
+  optional catalog mutation applied *before* the run, an optional snapshot
+  time-travel target, and an optional extra expectation on the ledgers.
+- :func:`sweep` — drives one long-lived warm workspace through the edit
+  sequence; for every edit it replays the identical catalog history into a
+  fresh cold workspace and asserts bitwise equality + ledger sanity.
+- :func:`standard_matrix` — the canonical axis sweep from the paper's §II
+  iteration loop: identical rerun, window widen/narrow/beyond-data, feature
+  add/remove, upstream append, range overwrite, code edit, snapshot travel.
+
+The warm workspace is deliberately SEQUENTIAL through all edits (unlike one
+fresh workspace per test): cache state accumulated by earlier edits must
+never leak into later answers, which is the strictest version of the
+bitwise-equivalence gate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Edit",
+    "assert_outputs_bitwise_equal",
+    "expect_fresh_rows",
+    "expect_fresh_rows_between",
+    "expect_zero_rows",
+    "standard_matrix",
+    "sweep",
+]
+
+
+@dataclass
+class Edit:
+    """One step of the edit matrix.
+
+    ``params`` go to the test's project factory (the edit axes: window
+    bounds, projected columns, code constants).  ``mutate`` is applied to
+    the warm catalog before the run and recorded into the history every
+    cold reference replays.  ``travel_to`` pins the run to the snapshot
+    state after the first N mutations (0 = the seeded state), exercising
+    time travel against a warm cache that has already seen newer data.
+    ``expect(warm_res, cold_res)`` adds contract-specific ledger
+    assertions (exact residual row counts, zero-recompute guarantees).
+    """
+
+    label: str
+    params: Dict = field(default_factory=dict)
+    mutate: Optional[Callable] = None
+    travel_to: Optional[int] = None
+    expect: Optional[Callable] = None
+
+
+def assert_outputs_bitwise_equal(res_a, res_b):
+    assert set(res_a.outputs) == set(res_b.outputs)
+    for name in res_a.outputs:
+        a, b = res_a.outputs[name], res_b.outputs[name]
+        assert a.column_names == b.column_names, name
+        for col in a.column_names:
+            np.testing.assert_array_equal(
+                a.column(col), b.column(col), err_msg=f"{name}:{col}"
+            )
+
+
+# ------------------------------------------------------- expectation helpers
+def expect_zero_rows(warm, cold):
+    """The contract's full-hit guarantee: nothing reached a user function."""
+    assert warm.rows_to_user_fns == 0, warm.node_stats
+
+
+def expect_fresh_rows(node: str, n: int):
+    def check(warm, cold):
+        got = warm.node_stats[node]["fresh_rows"]
+        assert got == n, f"{node}: expected {n} fresh rows, got {got}"
+
+    return check
+
+
+def expect_fresh_rows_between(node: str, lo: int, hi: int):
+    def check(warm, cold):
+        got = warm.node_stats[node]["fresh_rows"]
+        assert lo <= got <= hi, f"{node}: expected [{lo}, {hi}] fresh rows, got {got}"
+
+    return check
+
+
+def _all_of(*checks):
+    checks = [c for c in checks if c is not None]
+
+    def check(warm, cold):
+        for c in checks:
+            c(warm, cold)
+
+    return check
+
+
+# ------------------------------------------------------------------ the sweep
+def _snapshot_ids(catalog) -> Dict[str, str]:
+    return {
+        t: catalog.current_snapshot(t).snapshot_id for t in catalog.list_tables()
+    }
+
+
+def sweep(tmp_path, setup, factory, edits: List[Edit]) -> List[Tuple[str, object, object]]:
+    """Drive the matrix; returns ``[(label, warm_res, cold_res), ...]``.
+
+    ``setup(root)`` builds a workspace and seeds its catalog (it must be
+    deterministic: the cold reference calls it again per edit).
+    ``factory(**params)`` builds the project for an edit's parameters (it
+    must be pure in its params: warm and cold instantiate it separately, so
+    the code fingerprints must agree).
+    """
+    warm = setup(str(tmp_path / "em-warm"))
+    history: List[Callable] = []
+    # snapshot state after the first N mutations, for travel edits
+    snap_ids: Dict[int, Dict[str, str]] = {0: _snapshot_ids(warm.catalog)}
+    out = []
+    for i, edit in enumerate(edits):
+        if edit.mutate is not None:
+            edit.mutate(warm.catalog)
+            history.append(edit.mutate)
+            snap_ids[len(history)] = _snapshot_ids(warm.catalog)
+        if edit.travel_to is not None:
+            assert edit.travel_to <= len(history), (
+                f"{edit.label}: travel_to={edit.travel_to} but only "
+                f"{len(history)} mutations have happened"
+            )
+            pins = snap_ids[edit.travel_to]
+            warm_res = warm.run(factory(**edit.params), snapshot_pins=pins)
+            cold_history = history[: edit.travel_to]
+        else:
+            warm_res = warm.run(factory(**edit.params))
+            cold_history = list(history)
+        # the cold reference: a fresh workspace, the same catalog history
+        # (snapshot ids are not reproducible across workspaces, so a travel
+        # edit's reference replays only the history up to the pinned point)
+        cold = setup(str(tmp_path / f"em-cold-{i}-{edit.label}"))
+        for m in cold_history:
+            m(cold.catalog)
+        cold_res = cold.run(factory(**edit.params))
+        assert_outputs_bitwise_equal(warm_res, cold_res)
+        assert warm_res.rows_to_user_fns <= cold_res.rows_to_user_fns, (
+            f"{edit.label}: warm fed user fns {warm_res.rows_to_user_fns} rows, "
+            f"cold only {cold_res.rows_to_user_fns} — the cache made work"
+        )
+        if edit.expect is not None:
+            edit.expect(warm_res, cold_res)
+        out.append((edit.label, warm_res, cold_res))
+    return out
+
+
+# ------------------------------------------------------- the canonical matrix
+def standard_matrix(
+    *,
+    base: Dict,
+    widen: Dict,
+    narrow: Dict,
+    beyond: Dict,
+    feature_add: Dict,
+    feature_remove: Dict,
+    code_edit: Dict,
+    append: Callable,
+    overwrite: Callable,
+    expectations: Optional[Dict[str, Callable]] = None,
+) -> List[Edit]:
+    """The full ISSUE-6 edit matrix as a sequential program for :func:`sweep`.
+
+    Parameter dicts are project-factory kwargs per axis; ``append`` and
+    ``overwrite`` are catalog mutations.  ``expectations`` maps edit labels
+    to extra ledger checks; ``rerun`` and ``narrow`` always assert the
+    zero-recompute guarantee on top of whatever the caller adds.
+
+    Sequence (state accumulates left to right): cold → rerun → widen →
+    narrow → beyond-data → feature-add → feature-remove → append →
+    overwrite → code-edit → travel (pinned to the post-append snapshot).
+    """
+    exp = expectations or {}
+    return [
+        Edit("cold", base, expect=exp.get("cold")),
+        Edit("rerun", base, expect=_all_of(expect_zero_rows, exp.get("rerun"))),
+        Edit("widen", widen, expect=exp.get("widen")),
+        Edit("narrow", narrow, expect=_all_of(expect_zero_rows, exp.get("narrow"))),
+        Edit("beyond", beyond, expect=exp.get("beyond")),
+        Edit("feature-add", feature_add, expect=exp.get("feature-add")),
+        Edit("feature-remove", feature_remove, expect=exp.get("feature-remove")),
+        Edit("append", beyond, mutate=append, expect=exp.get("append")),
+        Edit("overwrite", beyond, mutate=overwrite, expect=exp.get("overwrite")),
+        Edit("code-edit", code_edit, expect=exp.get("code-edit")),
+        Edit("travel", beyond, travel_to=1, expect=exp.get("travel")),
+    ]

@@ -106,6 +106,33 @@ def test_coalesce_off_is_a_noop():
     assert store.coalesced_waits == 0
 
 
+def test_claim_kinds_do_not_cross_coalesce():
+    """A keyed residual and a rowwise one can collide on ``(signature,
+    window)`` while their windows live in different coordinate spaces (key
+    groups vs row keys) — claims must only coalesce within one kind.
+    Regression for the pre-``kind`` claim key: a keyed run would subscribe
+    to the rowwise claim and wait for an insert it can never use."""
+    store = SharedStore()
+    win = IntervalSet([Interval(0, 100)])
+    c1, _ = store.claim_residual("sig", win, kind="rowwise")
+
+    crossed, same = [], []
+    t1 = threading.Thread(
+        target=lambda: crossed.append(store.claim_residual("sig", win, kind="keyed"))
+    )
+    t1.start(); t1.join()
+    assert crossed[0][0] is not None, "different kinds must claim their own"
+    assert store.coalesced_waits == 0
+
+    t2 = threading.Thread(
+        target=lambda: same.append(store.claim_residual("sig", win, kind="rowwise"))
+    )
+    t2.start(); t2.join()
+    assert same[0][0] is None and same[0][1] is not None, "same kind coalesces"
+    store.release_residual(c1)
+    store.release_residual(crossed[0][0])
+
+
 def test_snapshot_mismatch_does_not_subscribe():
     """A subscriber pinned to a different snapshot would fail the owner's
     rows' fragment-pin check anyway — it must claim its own residual

@@ -2,7 +2,10 @@
 outputs are cached differentially, and every pipeline edit — feature add/
 remove, window widen/narrow, upstream append, function code edit — produces
 outputs bitwise-identical to a cold full run while recomputing only the
-residual.
+residual.  The edit sweep itself lives in the shared harness
+(``tests/edit_matrix.py``, ISSUE 6), instantiated here for the single-input
+rowwise contract; ``test_keyed.py``/``test_multi_input.py`` instantiate the
+same matrix for the keyed and multi-input contracts.
 
 Also unit-covers the generalized :class:`DifferentialStore` (the greedy
 window-subtraction planner split out of :class:`DifferentialCache`) and the
@@ -12,6 +15,14 @@ DSL/DAG validation of the ``incremental="rowwise"`` contract.
 import numpy as np
 import pytest
 
+from edit_matrix import (
+    assert_outputs_bitwise_equal,
+    expect_fresh_rows,
+    expect_fresh_rows_between,
+    expect_zero_rows,
+    standard_matrix,
+    sweep,
+)
 from repro.core.cache import DifferentialCache, DifferentialStore
 from repro.core.columnar import Table
 from repro.core.intervals import IntervalSet
@@ -62,17 +73,6 @@ def feature_project(hi=799, columns=("c1", "c3"), gain=1.0):
         return out
 
     return p
-
-
-def assert_outputs_bitwise_equal(res_a, res_b):
-    assert set(res_a.outputs) == set(res_b.outputs)
-    for name in res_a.outputs:
-        a, b = res_a.outputs[name], res_b.outputs[name]
-        assert a.column_names == b.column_names, name
-        for col in a.column_names:
-            np.testing.assert_array_equal(
-                a.column(col), b.column(col), err_msg=f"{name}:{col}"
-            )
 
 
 # ----------------------------------------------------- DifferentialStore unit
@@ -140,8 +140,10 @@ def test_differential_cache_is_a_store_specialization():
 
 
 # ------------------------------------------------------------- DSL validation
-def test_rowwise_requires_single_input():
-    p = Project("bad")
+def test_rowwise_multi_input_accepted():
+    """≥2 inputs is the multi-input rowwise contract (an incremental join),
+    no longer a structural error — see test_multi_input.py for execution."""
+    p = Project("join-ok")
 
     @model(project=p, incremental="rowwise")
     def join(
@@ -150,11 +152,11 @@ def test_rowwise_requires_single_input():
     ):
         return a
 
-    with pytest.raises(DagError, match="exactly one"):
-        build_dag(p)
+    dag = build_dag(p)
+    assert dag.order == ["join"]
 
 
-def test_rowwise_requires_rowwise_upstream():
+def test_rowwise_requires_windowed_upstream():
     p = Project("bad2")
 
     @model(project=p)  # default: none
@@ -165,7 +167,7 @@ def test_rowwise_requires_rowwise_upstream():
     def downstream(data=Model("agg")):
         return data
 
-    with pytest.raises(DagError, match="rowwise"):
+    with pytest.raises(DagError, match="windowed"):
         build_dag(p)
 
 
@@ -226,102 +228,64 @@ def run_cold(tmp_path, name, project, mutations=()):
     return ws.run(project)
 
 
-def test_identical_rerun_recomputes_nothing(tmp_path):
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project())
-    res = ws.run(feature_project())
-    assert res.rows_to_user_fns == 0
-    assert res.bytes_from_store == 0
-    assert res.bytes_from_model_cache > 0
-    assert_outputs_bitwise_equal(res, run_cold(tmp_path, "cold-rerun", feature_project()))
+def _setup(root):
+    ws = Workspace(root, rows_per_fragment=128)
+    ws.catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+    ws.catalog.append("ns.raw", events_table(0, 1000))
+    return ws
 
 
-def test_window_widen_recomputes_residual_only(tmp_path):
-    ws = make_workspace(tmp_path)
-    first = ws.run(feature_project(hi=499))
-    res = ws.run(feature_project(hi=999))
-    # only keys (499, 999] flow through the user functions
-    assert 0 < res.rows_to_user_fns < first.rows_to_user_fns * 1.25
-    assert res.node_stats["cleaned"]["fresh_rows"] == 500
-    assert_outputs_bitwise_equal(
-        res, run_cold(tmp_path, "cold-widen", feature_project(hi=999))
-    )
-
-
-def test_window_narrow_is_fully_cached(tmp_path):
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(hi=999))
-    res = ws.run(feature_project(hi=299))
-    assert res.rows_to_user_fns == 0 and res.bytes_from_store == 0
-    assert_outputs_bitwise_equal(
-        res, run_cold(tmp_path, "cold-narrow", feature_project(hi=299))
-    )
-
-
-def test_upstream_append_recomputes_new_rows_only(tmp_path):
-    append = lambda catalog: catalog.append("ns.raw", events_table(1000, 1100, seed=9))
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(hi=1999))
-    append(ws.catalog)
-    res = ws.run(feature_project(hi=1999))
-    assert res.node_stats["cleaned"]["fresh_rows"] == 100  # the appended rows
-    assert res.rows_to_user_fns <= 200  # both stages, appended window only
-    assert_outputs_bitwise_equal(
-        res,
-        run_cold(tmp_path, "cold-append", feature_project(hi=1999), mutations=[append]),
-    )
-
-
-def test_upstream_overwrite_recomputes_touched_window_only(tmp_path):
-    mutate = lambda catalog: catalog.overwrite_range(
+def test_edit_matrix_rowwise(tmp_path):
+    """The full ISSUE-6 edit matrix for the single-input rowwise contract:
+    one warm workspace through every edit axis, each answer bitwise-equal to
+    a cold replay, with exact residual row counts where they are derivable."""
+    append = lambda c: c.append("ns.raw", events_table(1000, 1100, seed=9))
+    overwrite = lambda c: c.overwrite_range(
         "ns.raw", 100, 200, events_table(100, 200, seed=77)
     )
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(hi=999))
-    mutate(ws.catalog)
-    res = ws.run(feature_project(hi=999))
-    # the overwritten fragment range invalidates, the rest serves from cache
-    assert 0 < res.node_stats["cleaned"]["fresh_rows"] <= 384  # 3 fragments max
-    assert_outputs_bitwise_equal(
-        res,
-        run_cold(tmp_path, "cold-ow", feature_project(hi=999), mutations=[mutate]),
+
+    def expect_rerun_served_from_model_cache(warm, cold):
+        assert warm.bytes_from_store == 0
+        assert warm.bytes_from_model_cache > 0
+
+    def expect_feature_add(warm, cold):
+        assert warm.rows_to_user_fns > 0  # schema change: recompute required
+        assert "c2" in warm.outputs["scaled"].column_names
+
+    def expect_code_edit(warm, cold):
+        # `cleaned` untouched by the gain edit: full hit; `scaled` recomputes
+        assert warm.node_stats["cleaned"]["fresh_rows"] == 0
+        assert warm.node_stats["scaled"]["fresh_rows"] > 0
+
+    edits = standard_matrix(
+        base=dict(hi=499),
+        widen=dict(hi=999),
+        narrow=dict(hi=299),
+        beyond=dict(hi=4999),
+        feature_add=dict(hi=4999, columns=("c1", "c2", "c3")),
+        feature_remove=dict(hi=4999),
+        code_edit=dict(hi=4999, gain=2.0),
+        append=append,
+        overwrite=overwrite,
+        expectations={
+            "rerun": expect_rerun_served_from_model_cache,
+            # residual (499, 1000): exactly the newly-exposed 500 keys
+            "widen": expect_fresh_rows("cleaned", 500),
+            # widening past the data's extent: the residual holds no rows
+            "beyond": expect_fresh_rows("cleaned", 0),
+            "feature-add": expect_feature_add,
+            # dropping c2 flips the signature BACK to one the cache still
+            # covers over the full window: zero recompute
+            "feature-remove": expect_zero_rows,
+            # exactly the 100 appended rows, through both stages
+            "append": expect_fresh_rows("cleaned", 100),
+            # overwritten keys [100, 200) span at most 3 of the 128-row
+            # fragments; everything else serves from cache
+            "overwrite": expect_fresh_rows_between("cleaned", 1, 384),
+            "code-edit": expect_code_edit,
+        },
     )
-
-
-def test_feature_add_full_recompute_but_correct(tmp_path):
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(columns=("c1", "c3")))
-    res = ws.run(feature_project(columns=("c1", "c2", "c3")))
-    # the schema changed: a recompute is semantically required, and the
-    # signature change triggers exactly that
-    assert res.rows_to_user_fns > 0
-    assert "c2" in res.outputs["scaled"].column_names
-    assert_outputs_bitwise_equal(
-        res,
-        run_cold(tmp_path, "cold-fadd", feature_project(columns=("c1", "c2", "c3"))),
-    )
-
-
-def test_feature_remove_full_recompute_but_correct(tmp_path):
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(columns=("c1", "c2", "c3")))
-    res = ws.run(feature_project(columns=("c1", "c3")))
-    assert "c2" not in res.outputs["scaled"].column_names
-    assert_outputs_bitwise_equal(
-        res, run_cold(tmp_path, "cold-frem", feature_project(columns=("c1", "c3")))
-    )
-
-
-def test_code_edit_invalidates_node_and_descendants_only(tmp_path):
-    ws = make_workspace(tmp_path)
-    ws.run(feature_project(gain=1.0))
-    res = ws.run(feature_project(gain=2.0))
-    # `cleaned` is untouched by the edit: full cache hit; `scaled` recomputes
-    assert res.node_stats["cleaned"]["fresh_rows"] == 0
-    assert res.node_stats["scaled"]["fresh_rows"] > 0
-    assert_outputs_bitwise_equal(
-        res, run_cold(tmp_path, "cold-edit", feature_project(gain=2.0))
-    )
+    sweep(tmp_path, _setup, feature_project, edits)
 
 
 def test_downstream_of_scan_edit_invalidates_through_chain(tmp_path):

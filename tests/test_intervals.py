@@ -1,8 +1,14 @@
-"""Unit + property tests for the exact interval algebra the cache rests on."""
+"""Unit + property tests for the exact interval algebra the cache rests on,
+including the joint-window algebra of multi-input incrementality and the
+multi-table validity rule (``snapshots_usable_window``) against a pointwise
+oracle."""
+
+from types import SimpleNamespace
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.cache import FragmentPin, snapshots_usable_window
 from repro.core.intervals import EMPTY, EVERYTHING, Interval, IntervalSet
 
 
@@ -145,3 +151,98 @@ def test_difference_coverage_roundtrip(a, b):
     # self-algebra sanity
     assert a.difference(a).empty
     assert a.covers(covered)
+
+
+# --------------------------------- joint windows (multi-input incrementality)
+def _joint(windows):
+    joint = windows[0]
+    for w in windows[1:]:
+        joint = joint.intersect(w)
+    return joint
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(iset, min_size=2, max_size=4))
+def test_joint_window_is_intersection_pointwise(windows):
+    """A multi-input node's window is the INTERSECTION of its input windows:
+    exactly the keys every input can supply rows for."""
+    pts = points(windows[0])
+    for w in windows[1:]:
+        pts &= points(w)
+    assert points(_joint(windows)) == pts
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(iset, min_size=2, max_size=4), iset)
+def test_joint_residual_partitions_and_aligns_per_input(windows, usable):
+    """The multi-input executor identity: hit ⊔ residual partitions the
+    joint window, and the residual lies inside EVERY input window — so each
+    input's residual slice is the same key range (zip alignment over the
+    shared sort key is well-defined)."""
+    joint = _joint(windows)
+    hit = joint.intersect(usable)
+    residual = joint.difference(usable)
+    assert hit.intersect(residual).empty
+    assert hit.union(residual) == joint
+    for w in windows:
+        assert w.covers(residual)
+        assert residual.intersect(w) == residual
+
+
+# --------------------------- multi-table validity (snapshots_usable_window)
+# a fragment is (key_lo, width) — key range [key_lo, key_lo+width] inclusive
+_frag = st.tuples(st.integers(-60, 60), st.integers(0, 12))
+# per table: pinned fragments each with a still-live flag, plus new
+# (never-pinned) fragments that appeared after the element was built
+_table_state = st.tuples(
+    st.lists(st.tuples(_frag, st.booleans()), max_size=4),
+    st.lists(_frag, max_size=3),
+)
+_small_iset = st.lists(
+    st.tuples(st.integers(-80, 80), st.integers(-80, 80)), max_size=4
+).map(lambda ps: IntervalSet.of(*[(min(a, b), max(a, b)) for a, b in ps]))
+
+
+def _snap(table, pinned, new):
+    frags = [
+        SimpleNamespace(fragment_id=f"{table}-old-{i}", key_min=lo, key_max=lo + w)
+        for i, ((lo, w), live) in enumerate(pinned)
+        if live
+    ] + [
+        SimpleNamespace(fragment_id=f"{table}-new-{j}", key_min=lo, key_max=lo + w)
+        for j, (lo, w) in enumerate(new)
+    ]
+    return SimpleNamespace(
+        fragments=frags, fragment_ids=frozenset(f.fragment_id for f in frags)
+    )
+
+
+@settings(max_examples=200, deadline=None)
+@given(_small_iset, _table_state, _table_state)
+def test_snapshots_usable_window_matches_pointwise_oracle(window, left, right):
+    """Multi-table validity: usable = window − ⋃ per-table (stale ∪ unseen),
+    checked against a brute-force pointwise oracle.  The element's own-table
+    pins stay UNLABELED (table=None) — the back-compat path single-leaf
+    elements and old spill manifests rely on."""
+    pins = tuple(
+        FragmentPin(f"L-old-{i}", lo, lo + w, None)  # None -> elem.table ("L")
+        for i, ((lo, w), _) in enumerate(left[0])
+    ) + tuple(
+        FragmentPin(f"R-old-{i}", lo, lo + w, "R") for i, ((lo, w), _) in enumerate(right[0])
+    )
+    elem = SimpleNamespace(window=window, table="L", pins=pins)
+    snaps = {"L": _snap("L", *left), "R": _snap("R", *right)}
+
+    got = snapshots_usable_window(elem, snaps)
+
+    expected = points(window)
+    for table in snaps:
+        live = snaps[table].fragment_ids
+        seen = {p.fragment_id for p in pins if (p.table or "L") == table}
+        for p in pins:
+            if (p.table or "L") == table and p.fragment_id not in live:
+                expected -= set(range(p.key_min, p.key_max + 1))  # stale
+        for f in snaps[table].fragments:
+            if f.fragment_id not in seen:
+                expected -= set(range(f.key_min, f.key_max + 1))  # unseen
+    assert points(got) == expected

@@ -1,0 +1,431 @@
+"""``incremental="keyed"`` (ISSUE 6 tentpole): per-key-group aggregations
+cached at key-group granularity.  An append/overwrite touching a handful of
+key groups re-aggregates ONLY those groups — located through fragment
+key-min/max stats — and the output UNIONs recomputed groups with cached
+ones, bitwise-identical to a cold run.
+
+Soundness rests on key-range windows never splitting a key group (groups
+live at single key points; every window boundary the system produces is a
+key-range bound; residual inputs re-read by key range pick up ALL rows of a
+touched group, including rows in untouched neighbouring fragments), so the
+full edit matrix from ``edit_matrix.py`` must hold verbatim — plus a
+threaded stress on one SharedStore and the BENCH_6 acceptance gate.
+"""
+
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from edit_matrix import (
+    assert_outputs_bitwise_equal,
+    expect_fresh_rows,
+    expect_fresh_rows_between,
+    expect_zero_rows,
+    standard_matrix,
+    sweep,
+)
+from repro.core.columnar import Table
+from repro.pipeline import DagError, Model, Project, Workspace, build_dag, model, runtime
+from repro.service import PipelineService
+
+SCHEMA = {"user": "<i8", "amount": "<f8", "flag": "<i8"}
+
+
+def activity_table(lo_u, hi_u, per_user=5, seed=0):
+    """``per_user`` rows for each user key in [lo_u, hi_u), sorted by user."""
+    n = (hi_u - lo_u) * per_user
+    rng = np.random.default_rng(seed + lo_u)
+    return Table(
+        {
+            "user": np.repeat(np.arange(lo_u, hi_u, dtype=np.int64), per_user),
+            "amount": rng.standard_normal(n),
+            "flag": rng.integers(0, 4, n).astype(np.int64),
+        }
+    )
+
+
+def make_workspace(root, users=200):
+    ws = Workspace(root, rows_per_fragment=128)
+    ws.catalog.create_table("ns", "act", SCHEMA, "user")
+    ws.catalog.append("ns.act", activity_table(0, users))
+    return ws
+
+
+def _aggregate(users, amounts, flags=None):
+    """Per-user sum/count (and max flag when given) via reduceat — rows of a
+    group are contiguous because the input arrives sorted by the key."""
+    uniq, starts = np.unique(users, return_index=True)
+    if uniq.size == 0:
+        out = {
+            "user": uniq,
+            "total": np.zeros(0, np.float64),
+            "n": np.zeros(0, np.int64),
+        }
+        if flags is not None:
+            out["maxflag"] = np.zeros(0, np.int64)
+        return out
+    out = {
+        "user": uniq,
+        "total": np.add.reduceat(amounts, starts),
+        "n": np.diff(np.append(starts, users.size)).astype(np.int64),
+    }
+    if flags is not None:
+        out["maxflag"] = np.maximum.reduceat(flags, starts)
+    return out
+
+
+def keyed_project(hi=99, columns=("amount",), gain=1.0):
+    """peruser (keyed aggregation) -> scored (rowwise map over the groups),
+    parameterized along the same edit axes as the rowwise chain."""
+    p = Project("keyed")
+    cols = list(columns)
+
+    @model(project=p, incremental="keyed")
+    @runtime("numpy")
+    def peruser(data=Model("ns.act", columns=cols, filter=f"user BETWEEN 0 AND {hi}")):
+        return _aggregate(
+            np.asarray(data.column("user")),
+            np.asarray(data.column("amount"), np.float64),
+            flags=(
+                np.asarray(data.column("flag"))
+                if "flag" in data.column_names
+                else None
+            ),
+        )
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scored(data=Model("peruser")):
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = gain * np.asarray(data.column("total"), np.float64)
+        return out
+
+    return p
+
+
+# ------------------------------------------------------------- DSL validation
+def test_keyed_requires_exactly_one_input():
+    p = Project("badjoin")
+
+    @model(project=p, incremental="keyed")
+    def agg(
+        a=Model("ns.x", columns=["c1"]),
+        b=Model("ns.y", columns=["c1"]),
+    ):
+        return a
+
+    with pytest.raises(DagError, match="exactly one"):
+        build_dag(p)
+
+
+def test_keyed_requires_windowed_upstream():
+    p = Project("badup")
+
+    @model(project=p)  # default: none — no window to slice residuals from
+    def prep(data=Model("ns.act", columns=["amount"])):
+        return data
+
+    @model(project=p, incremental="keyed")
+    def agg(data=Model("prep")):
+        return data
+
+    with pytest.raises(DagError, match="windowed"):
+        build_dag(p)
+
+
+# --------------------------------------------------------- contract violations
+def test_keyed_fn_must_return_sort_key(tmp_path):
+    p = Project("nokey")
+
+    @model(project=p, incremental="keyed")
+    def agg(data=Model("ns.act", columns=["amount"], filter="user BETWEEN 0 AND 99")):
+        u = np.asarray(data.column("user"))
+        uniq, starts = np.unique(u, return_index=True)
+        return {"total": np.add.reduceat(np.asarray(data.column("amount")), starts)}
+
+    ws = make_workspace(str(tmp_path / "lake"))
+    with pytest.raises(ValueError, match="keyed aggregation must return the sort key"):
+        ws.run(p)
+
+
+def test_keyed_fn_creating_rows_rejected(tmp_path):
+    p = Project("morerows")
+
+    @model(project=p, incremental="keyed")
+    def agg(data=Model("ns.act", columns=["amount"], filter="user BETWEEN 0 AND 99")):
+        u = np.asarray(data.column("user"))
+        a = np.asarray(data.column("amount"))
+        return {"user": np.concatenate([u, u]), "amount": np.concatenate([a, a])}
+
+    ws = make_workspace(str(tmp_path / "lake"))
+    with pytest.raises(ValueError, match="must not create rows"):
+        ws.run(p)
+
+
+def test_keyed_fn_inventing_keys_rejected(tmp_path):
+    """An output key absent from the input would land in a window this
+    residual does not own — cached neighbours would then disagree with a
+    cold run, so it must be rejected up front."""
+    p = Project("newkeys")
+
+    @model(project=p, incremental="keyed")
+    def agg(data=Model("ns.act", columns=["amount"], filter="user BETWEEN 0 AND 99")):
+        out = _aggregate(
+            np.asarray(data.column("user")),
+            np.asarray(data.column("amount"), np.float64),
+        )
+        out["user"] = out["user"] + 100_000  # keys the input never held
+        return out
+
+    ws = make_workspace(str(tmp_path / "lake"))
+    with pytest.raises(ValueError, match="drawn from the input keys"):
+        ws.run(p)
+
+
+# ------------------------------------------------------------ the edit matrix
+def test_edit_matrix_keyed(tmp_path):
+    """The full ISSUE-6 edit matrix for the keyed contract: 200 users x 5
+    rows, 128-row fragments (so key groups span fragment boundaries), one
+    warm workspace through every edit axis, bitwise-equal to cold."""
+    # 10 extra rows for EXISTING users [50, 60): touched groups re-aggregate
+    # whole (old rows + new), everything else serves from cache
+    append = lambda c: c.append("ns.act", activity_table(50, 60, per_user=1, seed=5))
+    overwrite = lambda c: c.overwrite_range(
+        "ns.act", 20, 30, activity_table(20, 30, per_user=5, seed=77)
+    )
+
+    def expect_feature_add(warm, cold):
+        assert warm.rows_to_user_fns > 0
+        assert "maxflag" in warm.outputs["scored"].column_names
+
+    def expect_code_edit(warm, cold):
+        assert warm.node_stats["peruser"]["fresh_rows"] == 0
+        assert warm.node_stats["scored"]["fresh_rows"] > 0
+
+    edits = standard_matrix(
+        base=dict(hi=99),
+        widen=dict(hi=199),
+        narrow=dict(hi=49),
+        beyond=dict(hi=999),
+        feature_add=dict(hi=999, columns=("amount", "flag")),
+        feature_remove=dict(hi=999),
+        code_edit=dict(hi=999, gain=2.0),
+        append=append,
+        overwrite=overwrite,
+        expectations={
+            # newly-exposed groups [100, 200): 100 users x 5 rows
+            "widen": expect_fresh_rows("peruser", 500),
+            # residual [200, 1000) holds no rows
+            "beyond": expect_fresh_rows("peruser", 0),
+            "feature-add": expect_feature_add,
+            # dropping `flag` flips the signature back to a fully-covered one
+            "feature-remove": expect_zero_rows,
+            # groups [50, 60) whole: 10 users x (5 old + 1 appended) rows
+            "append": expect_fresh_rows("peruser", 60),
+            # overwritten keys [20, 30) touch 2 fragments whose key stats
+            # span [0, 52): at most those groups re-aggregate
+            "overwrite": expect_fresh_rows_between("peruser", 50, 320),
+            "code-edit": expect_code_edit,
+        },
+    )
+    sweep(tmp_path, make_workspace, keyed_project, edits)
+
+
+def test_group_spanning_fragment_boundary_reaggregates_whole(tmp_path):
+    """User 25's rows straddle the 128-row fragment boundary (rows 125..129).
+    Appending more rows for that ONE user must re-aggregate the whole group —
+    including its rows in the untouched neighbour fragment — and nothing
+    else: the fragment key stats pin window [25, 26) and the residual
+    re-reads by key range, not by fragment."""
+    ws = make_workspace(str(tmp_path / "warm"))
+    ws.run(keyed_project(hi=199))
+
+    extra = Table(
+        {
+            "user": np.full(3, 25, dtype=np.int64),
+            "amount": np.array([1.5, -2.25, 0.75]),
+            "flag": np.array([3, 0, 1], dtype=np.int64),
+        }
+    )
+    ws.catalog.append("ns.act", extra)
+    res = ws.run(keyed_project(hi=199))
+    # the whole group: 5 original rows (3 in fragment 0, 2 in fragment 1)
+    # plus the 3 appended ones — and no other group
+    assert res.node_stats["peruser"]["fresh_rows"] == 8
+
+    cold = make_workspace(str(tmp_path / "cold"))
+    cold.catalog.append("ns.act", extra)
+    assert_outputs_bitwise_equal(res, cold.run(keyed_project(hi=199)))
+
+
+# ------------------------------------------------- property: random edit pairs
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=199),
+    st.integers(min_value=1, max_value=40),
+    st.integers(min_value=0, max_value=199),
+    st.integers(min_value=1, max_value=40),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_keyed_random_append_overwrite_property(lo_a, w_a, lo_o, w_o, seed):
+    """Warm == cold bitwise for ARBITRARY (append range, overwrite range)
+    pairs — including overlapping ones — and the warm run never feeds user
+    fns more rows than the cold run."""
+    hi_a = min(lo_a + w_a, 200)
+    hi_o = min(lo_o + w_o, 200)
+    ap = lambda c: c.append("ns.act", activity_table(lo_a, hi_a, per_user=2, seed=seed))
+    ow = lambda c: c.overwrite_range(
+        "ns.act", lo_o, hi_o, activity_table(lo_o, hi_o, per_user=5, seed=seed + 1)
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        warm = make_workspace(tmp + "/warm")
+        warm.run(keyed_project(hi=199))
+        ap(warm.catalog)
+        ow(warm.catalog)
+        warm_res = warm.run(keyed_project(hi=199))
+
+        cold = make_workspace(tmp + "/cold")
+        ap(cold.catalog)
+        ow(cold.catalog)
+        cold_res = cold.run(keyed_project(hi=199))
+
+    assert_outputs_bitwise_equal(warm_res, cold_res)
+    assert warm_res.rows_to_user_fns <= cold_res.rows_to_user_fns
+
+
+# ------------------------------------------------------------ threaded stress
+def slow_keyed_project(hi, delay=0.2):
+    """Same chain as keyed_project but each stage sleeps, so concurrent runs
+    reliably overlap in their residual computations."""
+    import time
+
+    p = Project("keyedstress")
+
+    @model(project=p, incremental="keyed")
+    @runtime("numpy")
+    def peruser(data=Model("ns.act", columns=["amount"], filter=f"user BETWEEN 0 AND {hi}")):
+        time.sleep(delay)
+        return _aggregate(
+            np.asarray(data.column("user")),
+            np.asarray(data.column("amount"), np.float64),
+        )
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scored(data=Model("peruser")):
+        time.sleep(delay)
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = np.asarray(data.column("total"), np.float64) / np.maximum(
+            np.asarray(data.column("n"), np.float64), 1.0
+        )
+        return out
+
+    return p
+
+
+def test_threaded_keyed_stress_on_shared_store(tmp_path):
+    """Concurrent identical keyed runs + appends touching OVERLAPPING key
+    groups + budget-forced demotions, all on one SharedStore: per wave the
+    residual key groups are computed exactly once across all runs (losers
+    coalesce on the claim), every output is bitwise-equal to a cold replay,
+    and later waves re-aggregate only the touched groups."""
+    seed_users = 160
+    with PipelineService(
+        str(tmp_path / "svc"),
+        workers=3,
+        rows_per_fragment=128,
+        model_cache_bytes=6_000,  # below the two model elements: demotions
+        scan_cache_bytes=60_000,
+        spill=True,  # evicted windows must STILL serve (exactly-once holds)
+    ) as svc:
+        svc.catalog.create_table("ns", "act", SCHEMA, "user")
+        svc.catalog.append("ns.act", activity_table(0, seed_users))
+
+        stop = threading.Event()
+
+        def far_appender():
+            # rows beyond every window, racing the runs: commits churn the
+            # catalog without touching in-window groups
+            session = svc.session("far-writer")
+            lo = 500
+            while not stop.is_set():
+                session.append("ns.act", activity_table(lo, lo + 8, per_user=2, seed=3))
+                lo += 8
+
+        wt = threading.Thread(target=far_appender)
+        wt.start()
+
+        # wave mutations append 1 row per user over OVERLAPPING ranges, so
+        # groups [50, 60) are touched twice and grow wave over wave
+        waves = [None, (40, 60), (50, 70)]
+        expected_rows = [
+            seed_users * 5 + seed_users,  # cold: every row through both stages
+            20 * 5 + 20 * 1 + 20,  # groups [40,60): 6 rows each + scored
+            10 * 7 + 10 * 6 + 20,  # [50,60): 7 rows, [60,70): 6 + scored
+        ]
+        history = []
+        results = []  # (wave, handles)
+        try:
+            for wave, touch in enumerate(waves):
+                if touch is not None:
+                    lo_u, hi_u = touch
+                    mut = (
+                        lambda lo_u=lo_u, hi_u=hi_u, s=101 + wave: lambda c: c.append(
+                            "ns.act", activity_table(lo_u, hi_u, per_user=1, seed=s)
+                        )
+                    )()
+                    # commit-retry: the far appender is racing this commit
+                    svc.session("writer").append(
+                        "ns.act", activity_table(lo_u, hi_u, per_user=1, seed=101 + wave)
+                    )
+                    history.append(mut)
+                # all tenants of a wave pin the SAME snapshot (the far
+                # appender keeps moving the head): identical claim tokens,
+                # so concurrent residuals coalesce
+                snap = svc.catalog.current_snapshot("ns.act").snapshot_id
+                tenants = [f"w{wave}-{t}" for t in ("alice", "bob", "carol")]
+                for t in tenants:
+                    svc.session(t).pin("ns.act", snap)
+                project = slow_keyed_project(hi=seed_users - 1)
+                handles = [svc.submit(t, project) for t in tenants]
+                svc.drain(120)
+                for h in handles:
+                    assert h.state == "DONE", h.error
+                rows = [h.result.rows_to_user_fns for h in handles]
+                # exactly-once: summed over ALL concurrent runs, the wave's
+                # residual groups were computed a single time
+                assert sum(rows) == expected_rows[wave], (wave, rows)
+                results.append((wave, handles))
+            assert svc.model_store.demotions > 0, "budget must actually bite"
+            assert svc.model_store.coalesced_waits >= 1, (
+                "losers must subscribe, not recompute"
+            )
+        finally:
+            stop.set()
+            wt.join()
+
+    # cold references: replay ONLY the group-touching appends (the far
+    # appender's rows never enter the window, so outputs are unaffected)
+    for wave, handles in results:
+        cold = make_workspace(str(tmp_path / f"cold-{wave}"), users=seed_users)
+        for m in history[:wave]:
+            m(cold.catalog)
+        ref = cold.run(slow_keyed_project(hi=seed_users - 1, delay=0.0))
+        for h in handles:
+            assert_outputs_bitwise_equal(h.result, ref)
+
+
+# --------------------------------------------------- acceptance: BENCH_6 gate
+def test_bench6_acceptance():
+    """The BENCH_6 scenario (same code CI smokes): an append touching 1% of
+    keys re-aggregates <=5% of the rows a cold run reads (bitwise-equal,
+    asserted inside run), and the incremental join feeds user fns >=5x fewer
+    rows than per-iteration cold runs."""
+    from benchmarks import bench6_keyed as b6
+
+    result = b6.run(rows=4000)
+    assert result["keyed"]["fresh_fraction"] <= 0.05, result["keyed"]
+    assert result["join"]["rows_ratio"] >= 5.0, result["join"]

@@ -1,0 +1,220 @@
+"""Multi-input rowwise incrementality (ISSUE 6 tentpole): an
+``incremental="rowwise"`` model over >=2 inputs is an incremental sort-merge
+join.  All inputs must share one sort key; the node's window is the
+INTERSECTION of the input windows; cache elements pin fragments of EVERY
+leaf table (labeled pins), so an edit on one side invalidates exactly that
+side's key range; the executor feeds the user fn zip-aligned residual
+slices of each input, and the UNION with cached hits is bitwise-identical
+to a cold run across the full edit matrix.
+"""
+
+import numpy as np
+import pytest
+
+from edit_matrix import (
+    assert_outputs_bitwise_equal,
+    expect_fresh_rows,
+    expect_fresh_rows_between,
+    expect_zero_rows,
+    standard_matrix,
+    sweep,
+)
+from repro.core.columnar import Table
+from repro.pipeline import DagError, Model, Project, Workspace, build_dag, model, runtime
+
+SCHEMA_L = {"eventTime": "<i8", "lx": "<f8", "lz": "<f8"}
+SCHEMA_R = {"eventTime": "<i8", "ry": "<f8"}
+
+
+def left_table(lo, hi, seed=0):
+    n = hi - lo
+    rng = np.random.default_rng(seed + lo)
+    return Table(
+        {
+            "eventTime": np.arange(lo, hi, dtype=np.int64),
+            "lx": rng.standard_normal(n),
+            "lz": rng.standard_normal(n),
+        }
+    )
+
+
+def right_table(lo, hi, seed=1):
+    keys = np.arange(lo + (lo % 2), hi, 2, dtype=np.int64)  # even keys only
+    rng = np.random.default_rng(seed + lo)
+    return Table({"eventTime": keys, "ry": rng.standard_normal(keys.size)})
+
+
+def make_workspace(root):
+    ws = Workspace(root, rows_per_fragment=128)
+    ws.catalog.create_table("ns", "left", SCHEMA_L, "eventTime")
+    ws.catalog.create_table("ns", "right", SCHEMA_R, "eventTime")
+    ws.catalog.append("ns.left", left_table(0, 1000))
+    ws.catalog.append("ns.right", right_table(0, 1000))
+    return ws
+
+
+def join_project(hi=499, l_hi=None, r_hi=None, columns=("lx",), gain=1.0):
+    """joined (multi-input rowwise: incremental sort-merge inner join) ->
+    scaled (rowwise map), parameterized along the edit axes.  ``l_hi`` /
+    ``r_hi`` widen one side's window independently of the other."""
+    p = Project("join")
+    cols = list(columns)
+    lh = hi if l_hi is None else l_hi
+    rh = hi if r_hi is None else r_hi
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def joined(
+        left=Model("ns.left", columns=cols, filter=f"eventTime BETWEEN 0 AND {lh}"),
+        right=Model("ns.right", columns=["ry"], filter=f"eventTime BETWEEN 0 AND {rh}"),
+    ):
+        lk = np.asarray(left.column("eventTime"))
+        rk = np.asarray(right.column("eventTime"))
+        common, li, ri = np.intersect1d(lk, rk, return_indices=True)
+        out = {"eventTime": common, "ry": np.asarray(right.column("ry"))[ri]}
+        for n in left.column_names:
+            if n != "eventTime":
+                out[n] = np.asarray(left.column(n))[li]
+        return out
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def scaled(data=Model("joined")):
+        out = {n: data.column(n) for n in data.column_names}
+        out["score"] = gain * (
+            np.asarray(data.column("lx"), np.float64)
+            + np.asarray(data.column("ry"), np.float64)
+        )
+        return out
+
+    return p
+
+
+# ------------------------------------------------------- compile-time checks
+def test_mismatched_sort_keys_rejected(tmp_path):
+    p = Project("badkeys")
+
+    @model(project=p, incremental="rowwise")
+    def join(
+        a=Model("ns.left", columns=["lx"], filter="eventTime BETWEEN 0 AND 99"),
+        b=Model("ns.other", columns=["oy"], filter="ts BETWEEN 0 AND 99"),
+    ):
+        return a
+
+    ws = make_workspace(str(tmp_path / "lake"))
+    ws.catalog.create_table("ns", "other", {"ts": "<i8", "oy": "<f8"}, "ts")
+    ws.catalog.append(
+        "ns.other",
+        Table({"ts": np.arange(100, dtype=np.int64), "oy": np.zeros(100)}),
+    )
+    with pytest.raises(ValueError, match="share one sort key"):
+        ws.run(p)
+
+
+def test_multi_input_requires_windowed_inputs():
+    p = Project("badwin")
+
+    @model(project=p)  # none: its output carries no sort-key window
+    def prep(data=Model("ns.left", columns=["lx"])):
+        return data
+
+    @model(project=p, incremental="rowwise")
+    def join(
+        a=Model("prep"),
+        b=Model("ns.right", columns=["ry"], filter="eventTime BETWEEN 0 AND 99"),
+    ):
+        return a
+
+    with pytest.raises(DagError, match="windowed"):
+        build_dag(p)
+
+
+# ------------------------------------------------------------ the edit matrix
+def test_edit_matrix_multi_input_join(tmp_path):
+    """The full ISSUE-6 edit matrix for the join: left 1000 rows (every
+    key), right 500 rows (even keys), edits land on EITHER side and must
+    invalidate only that side's key range via the labeled pins."""
+    # left-side append: keys [1000, 1100) — the right table has no rows
+    # there, so exactly the 100 left rows reach the join
+    append = lambda c: c.append("ns.left", left_table(1000, 1100, seed=9))
+    # right-side overwrite: keys [100, 200) — only the touched right
+    # fragment's key range re-joins
+    overwrite = lambda c: c.overwrite_range(
+        "ns.right", 100, 200, right_table(100, 200, seed=77)
+    )
+
+    def expect_feature_add(warm, cold):
+        assert warm.rows_to_user_fns > 0
+        assert "lz" in warm.outputs["scaled"].column_names
+
+    def expect_code_edit(warm, cold):
+        assert warm.node_stats["joined"]["fresh_rows"] == 0
+        assert warm.node_stats["scaled"]["fresh_rows"] > 0
+
+    edits = standard_matrix(
+        base=dict(hi=499),
+        widen=dict(hi=999),
+        narrow=dict(hi=299),
+        beyond=dict(hi=4999),
+        feature_add=dict(hi=4999, columns=("lx", "lz")),
+        feature_remove=dict(hi=4999),
+        code_edit=dict(hi=4999, gain=2.0),
+        append=append,
+        overwrite=overwrite,
+        expectations={
+            # joint residual [500, 1000): 500 left rows + 250 right rows
+            "widen": expect_fresh_rows("joined", 750),
+            # joint residual [1000, 5000) holds no rows on either side
+            "beyond": expect_fresh_rows("joined", 0),
+            "feature-add": expect_feature_add,
+            "feature-remove": expect_zero_rows,
+            # ONLY the left side's appended range: 100 left rows, 0 right —
+            # the right side's pins stay valid (labeled per-table)
+            "append": expect_fresh_rows("joined", 100),
+            # the rewritten right fragment's key stats bound the residual
+            "overwrite": expect_fresh_rows_between("joined", 1, 600),
+            "code-edit": expect_code_edit,
+        },
+    )
+    sweep(tmp_path, make_workspace, join_project, edits)
+
+
+# --------------------------------------------------- joint-window intersection
+def test_widen_one_side_leaves_joint_window_cached(tmp_path):
+    """The joint window is the INTERSECTION of the input windows: widening
+    one side's filter without the other does not move it, so the warm run
+    is a full hit."""
+    ws = make_workspace(str(tmp_path / "lake"))
+    first = ws.run(join_project(l_hi=499, r_hi=499))
+    res = ws.run(join_project(l_hi=999, r_hi=499))
+    assert res.rows_to_user_fns == 0
+    assert res.bytes_from_store == 0
+    # and the output is literally the narrow join, unchanged
+    assert_outputs_bitwise_equal(res, first)
+
+    # widening BOTH sides moves the intersection: residual [500, 1000) only
+    res2 = ws.run(join_project(l_hi=999, r_hi=999))
+    assert res2.node_stats["joined"]["fresh_rows"] == 750
+
+
+def test_append_beyond_joint_window_is_noop(tmp_path):
+    ws = make_workspace(str(tmp_path / "lake"))
+    ws.run(join_project(hi=999))
+    ws.catalog.append("ns.right", right_table(2000, 2200, seed=4))
+    res = ws.run(join_project(hi=999))  # appended keys sit outside [0, 1000)
+    assert res.rows_to_user_fns == 0
+
+
+def test_join_output_matches_numpy_reference(tmp_path):
+    """Cold-run sanity for the join itself (independent of caching): the
+    output equals the plain inner join of the two tables."""
+    ws = make_workspace(str(tmp_path / "lake"))
+    res = ws.run(join_project(hi=999))
+    out = res.outputs["joined"]
+    lt, rt = left_table(0, 1000), right_table(0, 1000)
+    common, li, ri = np.intersect1d(
+        lt.column("eventTime"), rt.column("eventTime"), return_indices=True
+    )
+    np.testing.assert_array_equal(out.column("eventTime"), common)
+    np.testing.assert_array_equal(out.column("lx"), np.asarray(lt.column("lx"))[li])
+    np.testing.assert_array_equal(out.column("ry"), np.asarray(rt.column("ry"))[ri])

@@ -12,8 +12,8 @@ import time
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cache import DifferentialStore
-from repro.core.columnar import Table
+from repro.core.cache import DifferentialStore, FragmentPin
+from repro.core.columnar import Table, concat_tables
 from repro.core.intervals import Interval, IntervalSet
 from repro.core.spill import SpillTier
 from repro.lake.s3sim import ObjectStore
@@ -163,6 +163,60 @@ def test_spill_roundtrip_property(lo, width, seed):
             np.testing.assert_array_equal(got.column(col), ref.column(col))
             assert got.column(col).dtype == ref.column(col).dtype
             assert np.shares_memory(got.column(col), elem.data.column(col))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 400), st.integers(1, 60)), min_size=1, max_size=4
+    ),
+    st.lists(
+        st.tuples(st.integers(0, 400), st.integers(0, 30), st.booleans()),
+        max_size=4,
+    ),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_spill_manifest_roundtrip_multi_interval_labeled_pins(pairs, pin_specs, seed):
+    """Restart-from-manifest round-trips MULTI-interval windows and LABELED
+    fragment pins (multi-input elements pin several leaf tables; unlabeled
+    pins must come back as ``table=None`` — the back-compat manifest form)."""
+    window = IntervalSet.of(*[(lo, lo + w) for lo, w in pairs])
+    lo, hi = window.span().lo, window.span().hi
+    pins = tuple(
+        FragmentPin(f"f-{i}", p_lo, p_lo + p_w, f"ns.t{i}" if labeled else None)
+        for i, (p_lo, p_w, labeled) in enumerate(pin_specs)
+    )
+    with tempfile.TemporaryDirectory() as tmp:
+        obj = ObjectStore(tmp)
+        store = DifferentialStore(spill=SpillTier(obj))
+        store.insert_window("sig", "t", "k", window, _tbl(lo, hi, seed=seed), pins=pins)
+        store.demote_all()
+
+        fresh = DifferentialStore(spill=SpillTier(obj))
+        assert fresh.spill_restored == 1
+        (elem,) = fresh.elements("sig")
+        assert elem.window == window
+        assert elem.pins == pins  # fragment ids, key stats AND table labels
+        plan = fresh.plan_window(
+            "sig", window, (), lambda w: w.measure()
+        )
+        assert plan.fully_cached
+        ref = _tbl(lo, hi, seed=seed)
+        got = concat_tables(
+            [
+                v
+                for h in plan.hits
+                for v in h.element.slice_window(h.window, ("k", "x", "y"))
+            ]
+        )
+        # the insert stored span rows; hits cover exactly the window's rows
+        keys = ref.column("k")
+        mask = np.zeros(ref.num_rows, dtype=bool)
+        for iv in window:
+            mask |= (keys >= iv.lo) & (keys < iv.hi)
+        expect = ref.filter(mask)
+        for col in ("k", "x", "y"):
+            np.testing.assert_array_equal(got.column(col), expect.column(col))
 
 
 # ------------------------------------------------------------- warm restarts

@@ -1,0 +1,230 @@
+"""BENCH_7: column-scope inference pays in the cache (ISSUE 7 tentpole).
+
+Three scenarios over one artifact:
+
+- **scoped_feature_add**: a rowwise model that provably reads only
+  ``eventTime``/``v1``.  Adding an *unread* column ``v2`` to the scan
+  projection (the classic "add a feature to the dataframe" edit) leaves
+  the narrowed signature unchanged — the warm run recomputes <=1% of the
+  rows a cold run pays and stays bitwise-equal to a fresh cold reference.
+- **opaque_feature_add**: the same edit against an opaque function
+  (dynamic ``data.column(n)`` loop, scope UNKNOWN) — the pre-analysis
+  baseline recomputes everything.
+- **enforcement**: an untrusted workspace (``enforce_scopes=True``)
+  rejects an out-of-scope projection at plan time with **zero** bytes
+  read from object storage.
+
+Emits ``BENCH_7.json``; ``--check`` exits non-zero when a gate fails —
+the CI smoke step.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench7_scopes [--rows N] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_7.json"
+)
+
+SCHEMA = {"eventTime": "<i8", "v1": "<f8", "v2": "<f8"}
+
+
+def events_table(lo, hi, seed=0):
+    from repro.core.columnar import Table
+
+    rng = np.random.default_rng(seed + lo)
+    n = hi - lo
+    return Table(
+        {
+            "eventTime": np.arange(lo, hi, dtype=np.int64),
+            "v1": rng.standard_normal(n),
+            "v2": rng.standard_normal(n),
+        }
+    )
+
+
+def scoped_project(hi, columns=("v1",), opaque=False):
+    from repro.pipeline import Model, Project, model, runtime
+
+    p = Project("bench7")
+    flt = f"eventTime BETWEEN 0 AND {hi}"
+
+    if opaque:
+
+        @model(project=p, incremental="rowwise")
+        @runtime("numpy")
+        def scored(data=Model("ns.events", columns=list(columns), filter=flt)):
+            out = {}
+            for n in data.column_names:  # dynamic key: scope is UNKNOWN
+                out[n] = data.column(n)
+            out["score"] = 2.0 * np.asarray(data.column("v1"), np.float64)
+            return out
+
+    else:
+
+        @model(project=p, incremental="rowwise")
+        @runtime("numpy")
+        def scored(data=Model("ns.events", columns=list(columns), filter=flt)):
+            return {
+                "eventTime": data.column("eventTime"),
+                "score": 2.0 * np.asarray(data.column("v1"), np.float64),
+            }
+
+    return p
+
+
+def _seeded_workspace(tmp: str, name: str, rows: int):
+    from repro.pipeline.executor import Workspace
+
+    ws = Workspace(os.path.join(tmp, name), rows_per_fragment=1024)
+    ws.catalog.create_table("ns", "events", SCHEMA, "eventTime")
+    ws.catalog.append("ns.events", events_table(0, rows))
+    return ws
+
+
+def _feature_add_scenario(tmp: str, rows: int, opaque: bool) -> Dict:
+    tag = "opaque" if opaque else "scoped"
+    ws = _seeded_workspace(tmp, f"{tag}-warm", rows)
+    cold_res = ws.run(scoped_project(rows - 1, columns=("v1",), opaque=opaque))
+
+    t0 = time.perf_counter()
+    warm_res = ws.run(scoped_project(rows - 1, columns=("v1", "v2"), opaque=opaque))
+    warm_wall = time.perf_counter() - t0
+
+    ref = _seeded_workspace(tmp, f"{tag}-ref", rows)
+    t0 = time.perf_counter()
+    ref_res = ref.run(scoped_project(rows - 1, columns=("v1", "v2"), opaque=opaque))
+    ref_wall = time.perf_counter() - t0
+
+    bitwise = True
+    for name, table in warm_res.outputs.items():
+        other = ref_res.outputs[name]
+        assert table.column_names == other.column_names, name
+        for col in table.column_names:
+            np.testing.assert_array_equal(table.column(col), other.column(col))
+    return {
+        "cold_fresh_rows": int(cold_res.node_stats["scored"]["fresh_rows"]),
+        "warm_fresh_rows": int(warm_res.node_stats["scored"]["fresh_rows"]),
+        "warm_rows_to_user_fns": int(warm_res.rows_to_user_fns),
+        "cache_fraction": round(
+            1.0
+            - warm_res.node_stats["scored"]["fresh_rows"]
+            / max(cold_res.node_stats["scored"]["fresh_rows"], 1),
+            4,
+        ),
+        "bitwise_equal": bitwise,
+        "warm_wall_seconds": round(warm_wall, 6),
+        "cold_wall_seconds": round(ref_wall, 6),
+    }
+
+
+def _enforcement_scenario(tmp: str, rows: int) -> Dict:
+    from repro.analysis import ScopeViolation
+    from repro.pipeline.executor import Workspace
+
+    ws = Workspace(
+        os.path.join(tmp, "untrusted"), rows_per_fragment=1024, enforce_scopes=True
+    )
+    ws.catalog.create_table("ns", "events", SCHEMA, "eventTime")
+    ws.catalog.append("ns.events", events_table(0, rows))
+    rejected = False
+    message = ""
+    try:
+        # projection requests v2; the function's proven scope never reads it
+        ws.run(scoped_project(rows - 1, columns=("v1", "v2")))
+    except ScopeViolation as e:
+        rejected = True
+        message = str(e)
+    return {
+        "rejected": rejected,
+        "bytes_read": int(ws.scans.total_bytes_processed()),
+        "message": message,
+    }
+
+
+def run(rows: int = 50_000) -> Dict:
+    with tempfile.TemporaryDirectory() as tmp:
+        scoped = _feature_add_scenario(tmp, rows, opaque=False)
+        opaque = _feature_add_scenario(tmp, rows, opaque=True)
+        enforcement = _enforcement_scenario(tmp, rows)
+    return {
+        "workload": "scope-narrowing",
+        "rows": rows,
+        "scoped_feature_add": scoped,
+        "opaque_feature_add": opaque,
+        "enforcement": enforcement,
+    }
+
+
+def format_table(result: Dict) -> str:
+    s, o, e = (
+        result["scoped_feature_add"],
+        result["opaque_feature_add"],
+        result["enforcement"],
+    )
+    return "\n".join(
+        [
+            "| scenario | cold fresh rows | warm fresh rows (after feature-add) |",
+            "|---|---|---|",
+            f"| proven scope | {s['cold_fresh_rows']:,} | {s['warm_fresh_rows']:,} |",
+            f"| UNKNOWN scope (baseline) | {o['cold_fresh_rows']:,} | {o['warm_fresh_rows']:,} |",
+            "",
+            f"scoped cache fraction: {s['cache_fraction']} (gate >= 0.99), "
+            f"bitwise-equal: {s['bitwise_equal']}",
+            f"enforcement: rejected={e['rejected']} with {e['bytes_read']} bytes "
+            f"read (gate: rejected, 0 bytes)",
+        ]
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless warm rows <= 1% of cold and the "
+        "out-of-scope plan is rejected with zero bytes read",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        s, e = result["scoped_feature_add"], result["enforcement"]
+        ok = (
+            s["warm_fresh_rows"] <= 0.01 * s["cold_fresh_rows"]
+            and s["bitwise_equal"]
+            and e["rejected"]
+            and e["bytes_read"] == 0
+        )
+        if not ok:
+            print(
+                f"FAIL: warm {s['warm_fresh_rows']} vs cold {s['cold_fresh_rows']} "
+                f"(gate <= 1%), rejected={e['rejected']}, bytes={e['bytes_read']}"
+            )
+            return 1
+        print(
+            f"OK: warm {s['warm_fresh_rows']} of {s['cold_fresh_rows']} cold rows "
+            f"(<= 1%), enforcement rejected with 0 bytes"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

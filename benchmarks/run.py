@@ -89,6 +89,20 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_6.json"), "w") as f:
         json.dump(r6, f, indent=1)
 
+    _section("BENCH 7 — column scopes: unread feature-add served from cache")
+    from benchmarks import bench7_scopes as b7
+
+    r7 = b7.run(rows=50_000 if not args.full else 500_000)
+    print(b7.format_table(r7))
+    artifacts["bench7"] = {
+        "scoped_cache_fraction": r7["scoped_feature_add"]["cache_fraction"],
+        "opaque_warm_fresh_rows": r7["opaque_feature_add"]["warm_fresh_rows"],
+        "enforcement_rejected": r7["enforcement"]["rejected"],
+        "enforcement_bytes_read": r7["enforcement"]["bytes_read"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_7.json"), "w") as f:
+        json.dump(r7, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

@@ -17,13 +17,17 @@ and the bytes ledger is directly comparable.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 from repro.core.cache import CacheElement, CacheHit, CachePlan, DifferentialCache
 from repro.core.columnar import Table
 from repro.core.intervals import IntervalSet
 from repro.core.scan import Scan, scan_cost_bytes
-from repro.lake.catalog import Snapshot
+
+if TYPE_CHECKING:  # annotation-only: a runtime import would close the
+    # lake -> fragments -> core -> ... -> lake.catalog package cycle
+    from repro.lake.catalog import Snapshot
+
 
 __all__ = ["ScanCache", "NoCache"]
 

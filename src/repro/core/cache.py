@@ -42,14 +42,18 @@ from __future__ import annotations
 import itertools
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.columnar import Table, concat_tables
 from repro.core.intervals import Interval, IntervalSet
 from repro.core.scan import Scan, scan_cost_bytes
-from repro.lake.catalog import Snapshot
+
+if TYPE_CHECKING:  # annotation-only: a runtime import would close the
+    # lake -> fragments -> core -> ... -> lake.catalog package cycle
+    from repro.lake.catalog import Snapshot
+
 
 __all__ = [
     "CacheElement",

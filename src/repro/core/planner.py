@@ -18,7 +18,7 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -27,8 +27,12 @@ from repro.core.cache import DifferentialCache
 from repro.core.columnar import ChunkedTable, Table
 from repro.core.intervals import IntervalSet
 from repro.core.scan import Scan, read_window, scan_cost_bytes
-from repro.lake.catalog import Catalog, Snapshot
 from repro.lake.s3sim import ObjectStore
+
+if TYPE_CHECKING:  # annotation-only: a runtime import would close the
+    # lake -> fragments -> core -> ... -> lake.catalog package cycle
+    from repro.lake.catalog import Catalog, Snapshot
+
 
 __all__ = ["ScanExecutor", "ScanReport", "ResultCachingExecutor", "Predicate"]
 

@@ -10,15 +10,19 @@ the required scan or a bound on the size").
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.columnar import ChunkedTable, Table, concat_tables
 from repro.core.intervals import Interval, IntervalSet
-from repro.lake.catalog import Snapshot
-from repro.lake.fragments import FragmentMeta, read_fragment_columns
 from repro.lake.s3sim import ObjectStore
+
+if TYPE_CHECKING:  # annotation-only: importing at runtime would close the
+    # package cycle lake/__init__ → fragments → core → scan → catalog →
+    # fragments, which breaks any tool whose cold entry point is repro.lake
+    from repro.lake.catalog import Snapshot
+    from repro.lake.fragments import FragmentMeta
 
 __all__ = [
     "Scan",
@@ -90,6 +94,8 @@ def read_window(
     on behalf of scans."""
     parts: List[Table] = []
     for f in fragments_overlapping(snapshot, window):
+        from repro.lake.fragments import read_fragment_columns
+
         tbl = read_fragment_columns(store, f, list(physical_columns))
         keys = tbl.column(sort_key)
         # fragment rows are sorted: use searchsorted slices per interval

@@ -2,6 +2,7 @@
 reconstruction from function inputs, logical→physical plan compilation with
 inserted system scans, and the multi-runtime executor."""
 
+from repro.analysis import ContractError, ScopeViolation
 from repro.pipeline.dsl import Model, ModelDef, Project, model, runtime
 from repro.pipeline.dag import Dag, DagError, build_dag
 from repro.pipeline.filters import ParsedFilter, date_ordinal, parse_filter
@@ -16,6 +17,8 @@ __all__ = [
     "runtime",
     "Dag",
     "DagError",
+    "ContractError",
+    "ScopeViolation",
     "build_dag",
     "ParsedFilter",
     "parse_filter",

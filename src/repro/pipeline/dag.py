@@ -2,9 +2,11 @@
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Set, Tuple
 
+from repro.analysis import ContractError
 from repro.pipeline.dsl import Model, ModelDef, Project
 
 __all__ = ["Dag", "build_dag", "DagError"]
@@ -30,10 +32,46 @@ class Dag:
         return [m for m in self.project.models if m not in consumed]
 
 
-def build_dag(project: Project) -> Dag:
+def _verify_contracts(project: Project, strict: bool) -> None:
+    """Static contract verdicts (repro.analysis) for every incremental
+    model: a rowwise/keyed declaration falsified by the bytecode —
+    cross-row ops, nondeterminism, hidden state — raises before any
+    execution, with the model name and ``file:line``.  ``strict=False``
+    demotes violations to warnings (run anyway, eyes open);
+    ``verify=False`` on the model opts it out entirely."""
+    for name, mdef in project.models.items():
+        if mdef.incremental not in ("rowwise", "keyed"):
+            continue
+        if not getattr(mdef, "verify", True):
+            continue
+        ana = getattr(mdef, "analysis", None)
+        violations = ana.violations if ana is not None else []
+        if not violations:
+            continue
+        detail = "; ".join(f.render() for f in violations)
+        if strict:
+            first = violations[0]
+            raise ContractError(
+                f"incremental={mdef.incremental!r} declaration is falsified "
+                f"by static analysis: {detail} (demote to a warning with "
+                f"strict=False, or mark the model verify=False)",
+                model=name,
+                filename=first.filename,
+                lineno=first.lineno,
+                findings=violations,
+            )
+        warnings.warn(
+            f"model {name!r}: contract violations ignored (strict=False): "
+            f"{detail}",
+            stacklevel=3,
+        )
+
+
+def build_dag(project: Project, strict: bool = True) -> Dag:
     """Reconstruct the DAG from ``Model`` references; reject cycles, dangling
     names are treated as catalog tables iff they are namespaced (contain a
     dot) — the same convention as the paper's ``raw_data`` leaf."""
+    _verify_contracts(project, strict)
     edges: Dict[str, List[str]] = {}
     scan_leaves: Dict[str, List[Tuple[str, Model]]] = {}
     for name, mdef in project.models.items():

@@ -34,7 +34,18 @@ import hashlib
 import inspect
 import types
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence
+
+from repro.analysis import (
+    SCOPE_MISMATCH,
+    UNDECLARED_READ,
+    UNKNOWN,
+    Analysis,
+    ContractError,
+    analyze_model_fn,
+    is_user_function,
+    referenced_functions,
+)
 
 __all__ = [
     "Model",
@@ -44,6 +55,7 @@ __all__ = [
     "runtime",
     "current_project",
     "code_fingerprint",
+    "ContractError",
     "INCREMENTAL_MODES",
 ]
 
@@ -114,6 +126,24 @@ class ModelDef:
     materialize: bool = False  # publish output back to the catalog as a table
     runtime_opts: Dict[str, Any] = field(default_factory=dict)
     incremental: str = "none"  # see INCREMENTAL_MODES
+    # static contracts (repro.analysis): optional declared column scopes,
+    # the decoration-time analysis verdict, and the verification opt-out
+    reads: Optional[Sequence[str]] = None
+    writes: Optional[Sequence[str]] = None
+    verify: bool = True
+    analysis: Optional[Analysis] = None
+
+    @property
+    def read_scope(self) -> Optional[FrozenSet[str]]:
+        """The node's column read-scope: the ``reads=`` declaration when
+        given, else the PROVEN inferred read set, else ``None`` (UNKNOWN —
+        consumers fall back to pre-analysis behavior).  Signature
+        narrowing and plan-time enforcement both key off this."""
+        if self.reads is not None:
+            return frozenset(self.reads)
+        if self.analysis is not None and self.analysis.reads is not UNKNOWN:
+            return self.analysis.reads
+        return None
 
 
 class Project:
@@ -163,6 +193,9 @@ def model(
     materialize: bool = False,
     project: Optional[Project] = None,
     incremental: str = "none",
+    reads: Optional[Sequence[str]] = None,
+    writes: Optional[Sequence[str]] = None,
+    verify: bool = True,
 ) -> Callable[[Callable], Callable]:
     """``@model()`` — register a transformation; DAG edges come from the
     function's ``Model`` defaults (paper: "The DAG structure is implicitly
@@ -174,9 +207,19 @@ def model(
     output always carries its sort-key column (the executor attaches it,
     position-aligned, when the function does not return it).  A rowwise
     model over ≥2 inputs is an incremental sort-merge join; ``"keyed"``
-    declares a per-key-group aggregation cached at key granularity."""
+    declares a per-key-group aggregation cached at key granularity.
+
+    ``reads=``/``writes=`` optionally declare the function's column scope.
+    Declarations are checked against bytecode inference at decoration time
+    (a proven read outside ``reads=`` raises :class:`ContractError`,
+    RPR005) and feed signature narrowing + plan-time scope enforcement.
+    ``verify=False`` opts a model out of static contract verification —
+    for functions that are deliberately impure (fault-injection fixtures)
+    while keeping their incremental declaration."""
     if incremental not in INCREMENTAL_MODES:
-        raise ValueError(
+        # raised while only the declaration exists (no function yet), so
+        # there is no model name / source location to carry
+        raise ContractError(
             f"incremental must be one of {INCREMENTAL_MODES}, got {incremental!r}"
         )
 
@@ -191,12 +234,56 @@ def model(
             materialize=materialize,
             runtime_opts=opts,
             incremental=incremental,
+            reads=tuple(reads) if reads is not None else None,
+            writes=tuple(writes) if writes is not None else None,
+            verify=verify,
         )
+        mdef.analysis = analyze_model_fn(
+            fn,
+            incremental=incremental,
+            table_params=tuple(mdef.inputs),
+            name=mdef.name,
+        )
+        if verify:
+            _check_declared_scopes(mdef)
         (project or _DEFAULT_PROJECT).add(mdef)
         fn.__repro_model__ = mdef
         return fn
 
     return deco
+
+
+def _check_declared_scopes(mdef: ModelDef) -> None:
+    """Declared ``reads=``/``writes=`` vs the walker's PROVEN inference —
+    a mismatch is a decoration-time :class:`ContractError`.  When inference
+    is UNKNOWN the declaration stands on the user's authority (the same
+    trust ``incremental=`` itself gets) and nothing can be checked."""
+    ana = mdef.analysis
+    if ana is None:
+        return
+    code = mdef.fn.__code__
+    if mdef.reads is not None and ana.reads is not UNKNOWN:
+        undeclared = sorted(set(ana.reads) - set(mdef.reads))
+        if undeclared:
+            raise ContractError(
+                f"[{UNDECLARED_READ}] function provably reads column(s) "
+                f"{undeclared} outside its reads={sorted(mdef.reads)} "
+                f"declaration",
+                model=mdef.name,
+                filename=code.co_filename,
+                lineno=code.co_firstlineno,
+            )
+    if mdef.writes is not None and ana.writes is not UNKNOWN:
+        unexpected = sorted(set(ana.writes) - set(mdef.writes))
+        if unexpected:
+            raise ContractError(
+                f"[{SCOPE_MISMATCH}] function provably writes column(s) "
+                f"{unexpected} outside its writes={sorted(mdef.writes)} "
+                f"declaration",
+                model=mdef.name,
+                filename=code.co_filename,
+                lineno=code.co_firstlineno,
+            )
 
 
 def code_fingerprint(fn: Callable) -> str:
@@ -208,10 +295,17 @@ def code_fingerprint(fn: Callable) -> str:
     invalidates the node (and, through signature chaining, everything
     downstream) in the differential model store.
 
+    Module-level *helper functions* the body calls (resolved by name
+    through ``__globals__``, transitively, user code only — never the
+    stdlib or installed packages) are folded in too: editing a helper a
+    model calls must invalidate the model's cached windows exactly like
+    editing the model itself.
+
     Captured-by-reference state the hash cannot see (e.g. a mutated global
     read inside the body) is out of contract, exactly like the paper's
     assumption that a model is a pure function of its declared inputs."""
     h = hashlib.sha256()
+    seen_codes: set = set()
 
     def feed_value(v: object) -> None:
         # repr() is LOSSY for arrays (numpy elides interior values with
@@ -235,6 +329,18 @@ def code_fingerprint(fn: Callable) -> str:
             for k in sorted(v, key=repr):
                 feed_value(k)
                 feed_value(v[k])
+        elif isinstance(v, types.FunctionType):
+            # a closed-over or default-valued function is behaviour, not
+            # identity: hash its code (and ITS helpers), never its repr,
+            # which carries a memory address and would never fingerprint-
+            # equal across processes
+            if is_user_function(v):
+                h.update(b"<function>")
+                feed_function(v)
+            else:
+                # library functions are pinned by qualified name only —
+                # their implementation is not part of the user's code
+                h.update(f"<libfn {v.__module__}.{v.__qualname__}>".encode())
         else:
             h.update(repr(v).encode())
 
@@ -248,7 +354,28 @@ def code_fingerprint(fn: Callable) -> str:
             else:
                 h.update(repr(const).encode())
 
+    def feed_function(f: Callable) -> None:
+        # transitive, cycle-safe: helpers referenced by name from the
+        # function's globals (user code only) enter the hash in the stable
+        # co_names order the walker reports them in
+        if f.__code__ in seen_codes:
+            return
+        seen_codes.add(f.__code__)
+        feed(f.__code__)
+        for cell in f.__closure__ or ():
+            try:
+                feed_value(cell.cell_contents)
+            except ValueError:  # unfilled cell
+                h.update(b"<empty-cell>")
+        for helper in referenced_functions(f):
+            h.update(helper.__name__.encode())
+            feed_function(helper)
+
+    seen_codes.add(fn.__code__)
     feed(fn.__code__)
+    for helper in referenced_functions(fn):
+        h.update(helper.__name__.encode())
+        feed_function(helper)
     for cell in fn.__closure__ or ():
         try:
             feed_value(cell.cell_contents)

@@ -112,6 +112,8 @@ class Workspace:
         catalog: Optional[Catalog] = None,
         model_store: Optional[DifferentialStore] = None,
         tenant: Optional[str] = None,
+        enforce_scopes: bool = False,
+        strict_contracts: bool = True,
     ):
         # every collaborator is injectable so repro.service can hand many
         # tenant workspaces ONE object store, ONE catalog, ONE scan cache and
@@ -152,6 +154,13 @@ class Workspace:
         )
         self._model_lock = self.model_store.lock
         self.tenant = tenant
+        # plan-time scope enforcement (repro.analysis): reject any plan
+        # whose scans request columns outside the consumer's verified or
+        # declared read scope BEFORE a single byte is read — the service
+        # entry point for untrusted tenants.  strict_contracts=False
+        # demotes static contract violations to warnings at DAG time.
+        self.enforce_scopes = enforce_scopes
+        self.strict_contracts = strict_contracts
 
     # -- running -------------------------------------------------------------
     def run(
@@ -168,7 +177,7 @@ class Workspace:
         running the same DAG under different pins share cache elements
         wherever their snapshots' fragments agree (validity is re-checked
         per run through fragment pins)."""
-        dag = build_dag(project)
+        dag = build_dag(project, strict=self.strict_contracts)
         sort_keys = {
             t: self.catalog.table(t).sort_key
             for leaves in dag.scan_leaves.values()
@@ -176,6 +185,8 @@ class Workspace:
             for t in [ref.name]
         }
         plan = compile_plan(dag, sort_keys)
+        if self.enforce_scopes:
+            self._enforce_scopes(dag, plan, sort_keys)
         if verbose:
             print(plan.describe())
         t0 = time.perf_counter()
@@ -247,6 +258,45 @@ class Workspace:
             )
             + sum(r.coalesced_waits for r in scan_reports),
         )
+
+    # -- plan-time scope enforcement ------------------------------------------
+    def _enforce_scopes(self, dag, plan: PhysicalPlan, sort_keys) -> None:
+        """Every scan's columns must lie inside the consuming node's
+        verified/declared read scope (plus the table's sort key, which the
+        platform attaches for windowing, and the filter's predicate
+        columns, which the platform — not the function — evaluates).  A
+        node whose scope is UNKNOWN and undeclared cannot be admitted at
+        all: there is no bound to enforce.  Raises ScopeViolation before
+        any byte leaves the store."""
+        from repro.analysis import ScopeViolation
+        from repro.pipeline.filters import parse_filter as _parse
+
+        for s in plan.scans:
+            mdef = dag.project[s.model]
+            scope = getattr(mdef, "read_scope", None)
+            code = getattr(mdef.fn, "__code__", None)
+            loc = dict(
+                model=s.model,
+                filename=code.co_filename if code else None,
+                lineno=code.co_firstlineno if code else None,
+            )
+            if scope is None:
+                raise ScopeViolation(
+                    f"read scope is UNKNOWN (analysis could not prove a "
+                    f"bound and no reads= declaration was given) — an "
+                    f"enforcing workspace admits only scoped nodes",
+                    **loc,
+                )
+            sort_key = sort_keys[s.table]
+            parsed = _parse(s.predicate_filter, sort_key)
+            allowed = set(scope) | {sort_key} | set(parsed.predicate_columns)
+            extra = sorted(set(s.columns) - allowed)
+            if extra:
+                raise ScopeViolation(
+                    f"plan requests column(s) {extra} of {s.table} outside "
+                    f"the verified read scope {sorted(scope)}",
+                    **loc,
+                )
 
     # -- node execution: full recompute (incremental="none") -----------------
     def _exec_scan(

@@ -34,11 +34,45 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.intervals import IntervalSet
+from repro.analysis import ContractError
 from repro.pipeline.dag import Dag
 from repro.pipeline.dsl import Model, ModelDef, code_fingerprint
 from repro.pipeline.filters import ParsedFilter, parse_filter
 
 __all__ = ["SystemScanStep", "UserFnStep", "PhysicalPlan", "compile_plan"]
+
+
+def _contract_error(mdef: ModelDef, message: str) -> ContractError:
+    code = getattr(mdef.fn, "__code__", None)
+    return ContractError(
+        message,
+        model=mdef.name,
+        filename=code.co_filename if code else None,
+        lineno=code.co_firstlineno if code else None,
+    )
+
+
+def _signature_columns(
+    mdef: ModelDef,
+    cols: Tuple[str, ...],
+    parsed: ParsedFilter,
+    sort_key: str,
+) -> Tuple[str, ...]:
+    """The column set a scan leaf contributes to its consumer's SIGNATURE.
+
+    When the consumer's read scope is proven/declared, the signature keeps
+    only the columns the function can actually observe (plus predicate
+    columns and the sort key, which shape the rows themselves) — so adding
+    or dropping an *unread* column leaves every cached window valid.  With
+    an UNKNOWN scope this returns ``cols`` unchanged: byte-identical
+    signatures to the pre-analysis behavior.  Only the signature narrows —
+    the physical scan still reads exactly what was declared."""
+    scope = getattr(mdef, "read_scope", None)
+    if scope is None:
+        return cols
+    return tuple(
+        sorted((set(cols) & set(scope)) | set(parsed.predicate_columns) | {sort_key})
+    )
 
 
 @dataclass(frozen=True)
@@ -138,8 +172,8 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 sort_key = sort_keys[ref.name]
                 parsed = parse_filter(ref.filter, sort_key)
                 if ref.columns is None:
-                    raise ValueError(
-                        f"{name}: scan of {ref.name} must declare columns="
+                    raise _contract_error(
+                        mdef, f"scan of {ref.name} must declare columns="
                     )
                 # post-predicates need their columns present in the scan
                 cols = tuple(sorted(set(ref.columns) | set(parsed.predicate_columns)))
@@ -156,8 +190,16 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 scans.append(step)
                 sig_inputs.append(
                     # NOTE: the window is absent on purpose — it is the
-                    # differential dimension, not part of the node identity
-                    ("scan", ref.name, cols, parsed.predicate_signature(), ref.snapshot_id)
+                    # differential dimension, not part of the node identity.
+                    # The column set is narrowed to the consumer's verified
+                    # read scope (no-op when the scope is UNKNOWN).
+                    (
+                        "scan",
+                        ref.name,
+                        _signature_columns(mdef, cols, parsed, sort_key),
+                        parsed.predicate_signature(),
+                        ref.snapshot_id,
+                    )
                 )
                 in_windows.append(parsed.window)
                 in_sort_keys.append(sort_key)
@@ -176,9 +218,10 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
             # INTERSECTION of the inputs' windows (zip-aligned residuals
             # are only defined where every input has rows to offer)
             if len(set(in_sort_keys)) > 1:
-                raise ValueError(
-                    f"{name}: incremental={mdef.incremental!r} inputs must "
-                    f"share one sort key, got {sorted(set(map(str, in_sort_keys)))}"
+                raise _contract_error(
+                    mdef,
+                    f"incremental={mdef.incremental!r} inputs must "
+                    f"share one sort key, got {sorted(set(map(str, in_sort_keys)))}",
                 )
             window = in_windows[0]
             for w in in_windows[1:]:
@@ -203,10 +246,11 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 by_table.setdefault(t, set()).add(sid)
             dup = sorted(t for t, sids in by_table.items() if len(sids) > 1)
             if dup:
-                raise ValueError(
-                    f"{name}: incremental={mdef.incremental!r} reads "
+                raise _contract_error(
+                    mdef,
+                    f"incremental={mdef.incremental!r} reads "
                     f"table(s) {dup} under two different snapshot pins — "
-                    f"pin one snapshot per table"
+                    f"pin one snapshot per table",
                 )
         leaves_of[name] = tuple(pairs)
         steps.append(

@@ -120,6 +120,7 @@ class PipelineService:
         max_run_history: int = 4096,
         spill: bool = False,
         coalesce: bool = True,
+        enforce_scopes: bool = False,
     ):
         self.store = ObjectStore(root)
         self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
@@ -143,6 +144,12 @@ class PipelineService:
         )
         self.max_queued = max_queued
         self.max_commit_retries = max_commit_retries
+        # default admission policy for tenant sessions: an enforcing
+        # service rejects, at plan time, any node whose plan requests
+        # columns outside its verified/declared read scope — the entry
+        # point for untrusted (e.g. agent-authored) pipelines.  Override
+        # per session via session(..., untrusted=...)
+        self.enforce_scopes = enforce_scopes
         self._sessions: Dict[str, TenantSession] = {}
         self._sessions_lock = threading.Lock()
         self._cond = threading.Condition()
@@ -166,10 +173,17 @@ class PipelineService:
             t.start()
 
     # -- sessions ------------------------------------------------------------
-    def session(self, tenant_id: str, pin_tables: bool = True) -> TenantSession:
+    def session(
+        self,
+        tenant_id: str,
+        pin_tables: bool = True,
+        untrusted: Optional[bool] = None,
+    ) -> TenantSession:
         """The tenant's session, created (and its snapshots pinned) on first
         use.  All sessions share the service's store, catalog and caches —
-        only pins and ledgers are per-tenant."""
+        only pins and ledgers are per-tenant.  ``untrusted=True`` makes
+        this tenant's workspace enforce read scopes at plan time
+        regardless of the service default (``None`` inherits it)."""
         with self._sessions_lock:
             if tenant_id not in self._sessions:
                 ws = Workspace(
@@ -179,6 +193,9 @@ class PipelineService:
                     catalog=self.catalog,
                     model_store=self.model_store,
                     tenant=tenant_id,
+                    enforce_scopes=(
+                        self.enforce_scopes if untrusted is None else untrusted
+                    ),
                 )
                 self._sessions[tenant_id] = TenantSession(
                     tenant_id,

@@ -1,0 +1,388 @@
+"""repro.analysis (ISSUE 7): the bytecode contract verifier.
+
+True-positive matrix (one fixture per finding code), scope-inference
+units, the strict=False / verify=False demotions, ContractError
+file:line routing, and the code_fingerprint transitive-helper
+regression (edit a helper -> fingerprint must change)."""
+
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    CROSS_ROW_OP,
+    HIDDEN_STATE,
+    NONDETERMINISM,
+    UNKNOWN,
+    ContractError,
+    analyze_model_fn,
+    referenced_functions,
+)
+from repro.pipeline import Model, Project, build_dag, compile_plan, model
+from repro.pipeline.dsl import code_fingerprint
+
+EVENTS = Model("ns.events", columns=["v1", "v2"], filter="eventTime BETWEEN 0 AND 99")
+
+
+def analysis_of(fn, incremental="rowwise", params=("data",)):
+    return analyze_model_fn(
+        fn, incremental=incremental, table_params=params, name=fn.__name__
+    )
+
+
+# ------------------------------------------------------- true-positive matrix
+def test_rpr001_cross_row_op_in_rowwise():
+    def running(data=EVENTS):
+        return {"t": np.cumsum(np.asarray(data.column("v1")))}
+
+    codes = [f.code for f in analysis_of(running).findings]
+    assert CROSS_ROW_OP in codes
+
+
+def test_rpr001_sort_and_shift_variants():
+    def sorting(data=EVENTS):
+        return {"v": np.sort(np.asarray(data.column("v1")))}
+
+    def shifted(data=EVENTS):
+        return {"d": np.diff(np.asarray(data.column("v1")))}
+
+    for fn in (sorting, shifted):
+        assert any(f.code == CROSS_ROW_OP for f in analysis_of(fn).findings), fn
+
+
+def test_rpr001_not_flagged_for_keyed_reducers():
+    """diff/reduceat/unique are the keyed-aggregation idiom — RPR001 is a
+    rowwise-only check."""
+
+    def agg(data=EVENTS):
+        users = np.asarray(data.column("v1"))
+        uniq, starts = np.unique(users, return_index=True)
+        return {
+            "user": uniq,
+            "total": np.add.reduceat(users, starts),
+            "n": np.diff(np.append(starts, users.size)),
+        }
+
+    assert analysis_of(agg, incremental="keyed").findings == []
+
+
+def test_rpr002_nondeterminism_random_time_uuid():
+    def drawn(data=EVENTS):
+        import random
+
+        return {"v": np.asarray(data.column("v1")) * random.random()}
+
+    def clocked(data=EVENTS):
+        import time
+
+        return {"v": np.asarray(data.column("v1")) + time.time()}
+
+    def tagged(data=EVENTS):
+        import uuid
+
+        return {"v": data.column("v1"), "tag": str(uuid.uuid4())}
+
+    def np_global(data=EVENTS):
+        return {"v": np.asarray(data.column("v1")) + np.random.random()}
+
+    for fn in (drawn, clocked, tagged, np_global):
+        codes = [f.code for f in analysis_of(fn).findings]
+        assert NONDETERMINISM in codes, fn.__name__
+
+
+def test_rpr002_seeded_rng_and_sleep_are_clean():
+    def seeded(data=EVENTS):
+        rng = np.random.default_rng(42)
+        return {"v": np.asarray(data.column("v1")) + rng.standard_normal(1)[0]}
+
+    def sleepy(data=EVENTS):
+        import time
+
+        time.sleep(0.001)
+        return {"v": data.column("v1")}
+
+    for fn in (seeded, sleepy):
+        assert analysis_of(fn).findings == [], fn.__name__
+
+
+def test_rpr002_unseeded_default_rng_flagged():
+    def unseeded(data=EVENTS):
+        rng = np.random.default_rng()
+        return {"v": np.asarray(data.column("v1")) + rng.standard_normal(1)[0]}
+
+    assert any(f.code == NONDETERMINISM for f in analysis_of(unseeded).findings)
+
+
+_SINK = []
+
+
+def test_rpr003_hidden_state():
+    def stores_global(data=EVENTS):
+        global _STATE
+        _STATE = 1
+        return {"v": data.column("v1")}
+
+    def mutates_captured(data=EVENTS):
+        _SINK.append(1)
+        return {"v": data.column("v1")}
+
+    for fn in (stores_global, mutates_captured):
+        codes = [f.code for f in analysis_of(fn).findings]
+        assert HIDDEN_STATE in codes, fn.__name__
+
+
+def test_rpr003_np_append_is_not_mutation():
+    """np.append is a pure function on a module — the mutator-name check
+    must not fire on module attributes."""
+
+    def appends(data=EVENTS):
+        v = np.asarray(data.column("v1"))
+        return {"v": np.append(v, [0.0])}
+
+    assert analysis_of(appends).findings == []
+
+
+def test_rpr003_found_transitively_in_helper():
+    src = textwrap.dedent(
+        """
+        _LOG = []
+        def log_it(x):
+            _LOG.append(x)
+            return x
+        def m(data):
+            return {"v": log_it(data.column("v1"))}
+        """
+    )
+    ns = {}
+    exec(src, ns)
+    ns["m"].__module__ = "__main__"
+    findings = analyze_model_fn(
+        ns["m"], incremental="rowwise", table_params=("data",), name="m"
+    ).findings
+    assert any(f.code == HIDDEN_STATE and f.helper == "log_it" for f in findings)
+
+
+def test_rpr005_undeclared_read_raises_at_decoration():
+    p = Project("rpr005")
+    with pytest.raises(ContractError, match="RPR005") as ei:
+        @model(project=p, incremental="rowwise", reads=("v1",))
+        def leaky(data=EVENTS):
+            return {"v": np.asarray(data.column("v1")) + np.asarray(data.column("v2"))}
+
+    assert "test_analysis.py" in str(ei.value)
+    assert ei.value.lineno is not None
+
+
+def test_rpr004_undeclared_write_raises_at_decoration():
+    p = Project("rpr004")
+    with pytest.raises(ContractError, match="RPR004"):
+        @model(project=p, incremental="rowwise", writes=("v",))
+        def chatty(data=EVENTS):
+            return {"v": data.column("v1"), "extra": data.column("v2")}
+
+
+# -------------------------------------------------------------- inference
+def test_scope_inference_proven_patterns():
+    def reader(data=EVENTS):
+        a = np.asarray(data.column("v1"))
+        b = np.asarray(data["v2"])
+        c = data.get("flag", 0)
+        n = data.num_rows
+        return {"s": a + b, "flag": c, "n2": np.full(n, 0)}
+
+    ana = analysis_of(reader)
+    assert ana.reads == frozenset({"v1", "v2", "flag"})
+    assert ana.writes == frozenset({"s", "flag", "n2"})
+
+
+def test_scope_inference_alias_tracking():
+    def aliased(data=EVENTS):
+        d = data
+        return {"v": d.column("v1")}
+
+    assert analysis_of(aliased).reads == frozenset({"v1"})
+
+
+def test_scope_inference_escape_is_unknown():
+    def filters(data=EVENTS):
+        return data.filter(data.column("flag") > 0)
+
+    def dynamic(data=EVENTS):
+        return {n: data.column(n) for n in data.column_names}
+
+    def passed(data=EVENTS):
+        return {"v": len(data)}
+
+    for fn in (filters, dynamic, passed):
+        assert analysis_of(fn).reads is UNKNOWN, fn.__name__
+
+
+def test_scope_inference_comprehension_reads_const_key():
+    def comp(data=EVENTS):
+        return {"v": [x for x in data.column("v1")]}
+
+    ana = analysis_of(comp)
+    assert ana.reads == frozenset({"v1"})
+
+
+# --------------------------------------------- dag-time verdicts & demotions
+def violating_project(**model_kw):
+    p = Project("viol")
+
+    @model(project=p, incremental="rowwise", **model_kw)
+    def bad(data=EVENTS):
+        return {"t": np.cumsum(np.asarray(data.column("v1")))}
+
+    return p
+
+
+def test_build_dag_raises_contract_error_with_location():
+    with pytest.raises(ContractError, match="RPR001") as ei:
+        build_dag(violating_project())
+    assert ei.value.model == "bad"
+    assert "test_analysis.py" in ei.value.filename
+    assert str(ei.value.lineno) in str(ei.value)
+
+
+def test_build_dag_strict_false_demotes_to_warning():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        dag = build_dag(violating_project(), strict=False)
+    assert dag.order == ["bad"]
+    assert any("RPR001" in str(w.message) for w in caught)
+
+
+def test_verify_false_opts_out():
+    build_dag(violating_project(verify=False))  # no raise, no warning needed
+
+
+def test_bad_incremental_value_is_contract_error():
+    # no function exists yet, so no name/location to carry — but it must
+    # still be a ValueError for backwards compatibility
+    with pytest.raises(ContractError):
+        model(incremental="columnar")
+    with pytest.raises(ValueError, match="incremental"):
+        model(incremental="columnar")
+
+
+def test_mismatched_sort_keys_is_contract_error(tmp_path):
+    from repro.pipeline import Workspace
+
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256)
+    ws.catalog.create_table("ns", "a", {"ka": "<i8", "x": "<f8"}, "ka")
+    ws.catalog.create_table("ns", "b", {"kb": "<i8", "y": "<f8"}, "kb")
+    from repro.core.columnar import Table
+
+    ws.catalog.append("ns.a", Table({"ka": np.arange(4), "x": np.zeros(4)}))
+    ws.catalog.append("ns.b", Table({"kb": np.arange(4), "y": np.zeros(4)}))
+
+    p = Project("mismatch")
+
+    @model(project=p, incremental="rowwise")
+    def joined(
+        left=Model("ns.a", columns=["x"]),
+        right=Model("ns.b", columns=["y"]),
+    ):
+        return {"ka": left.column("ka"), "x": left.column("x")}
+
+    with pytest.raises(ContractError, match="share one sort key") as ei:
+        ws.run(p)
+    assert ei.value.model == "joined"
+    assert "test_analysis.py" in str(ei.value)
+
+
+def test_missing_columns_is_contract_error(tmp_path):
+    from repro.pipeline import Workspace
+
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256)
+    ws.catalog.create_table("ns", "t", {"k": "<i8", "x": "<f8"}, "k")
+    p = Project("nocols")
+
+    @model(project=p)
+    def scans(data=Model("ns.t")):
+        return {"k": data.column("k")}
+
+    with pytest.raises(ContractError, match="must declare columns=") as ei:
+        ws.run(p)
+    assert ei.value.model == "scans"
+
+
+# ------------------------------------------- fingerprint helper regression
+def _fingerprint_of(src):
+    # no __name__ in the namespace, so the exec'd functions carry
+    # __module__=None — which the analyzer treats as user code
+    ns = {"np": np}
+    exec(textwrap.dedent(src), ns)
+    return code_fingerprint(ns["m"])
+
+
+def test_fingerprint_changes_when_helper_edited():
+    """The ISSUE-7 satellite regression: pre-PR, editing a module-level
+    helper a model calls did NOT change the model's fingerprint, so warm
+    runs served stale windows."""
+    f1 = _fingerprint_of(
+        """
+        def scale(x):
+            return x * 2
+        def m(data):
+            return {"v": scale(data.column("v1"))}
+        """
+    )
+    f2 = _fingerprint_of(
+        """
+        def scale(x):
+            return x * 3
+        def m(data):
+            return {"v": scale(data.column("v1"))}
+        """
+    )
+    assert f1 != f2
+
+
+def test_fingerprint_changes_when_transitive_helper_edited():
+    base = """
+        def inner(x):
+            return x {op} 1
+        def outer(x):
+            return inner(x)
+        def m(data):
+            return {{"v": outer(data.column("v1"))}}
+        """
+    assert _fingerprint_of(base.format(op="+")) != _fingerprint_of(
+        base.format(op="-")
+    )
+
+
+def test_fingerprint_stable_across_identical_definitions():
+    src = """
+        def scale(x):
+            return x * 2
+        def m(data):
+            return {"v": scale(data.column("v1"))}
+        """
+    assert _fingerprint_of(src) == _fingerprint_of(src)
+
+
+def test_fingerprint_ignores_library_function_bodies():
+    """numpy internals must not enter the hash (fragile across versions,
+    megabytes of code) — library refs are pinned by qualified name."""
+
+    def m(data):
+        return {"v": np.asarray(data)}
+
+    helpers = referenced_functions(m)
+    assert all(h.__module__.split(".")[0] != "numpy" for h in helpers)
+
+
+def test_fingerprint_recursion_handles_cycles():
+    src = """
+        def a(x):
+            return b(x)
+        def b(x):
+            return a(x)
+        def m(data):
+            return {"v": a(data.column("v1"))}
+        """
+    assert isinstance(_fingerprint_of(src), str)

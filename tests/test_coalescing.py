@@ -244,7 +244,9 @@ def test_failed_owner_releases_and_waiter_recovers(tmp_path):
     _BOOM[:] = [1]
     p = Project("boom")
 
-    @model(project=p, incremental="rowwise")
+    # verify=False: the _BOOM mutation is deliberate fault injection — the
+    # static verifier correctly flags it as hidden state (RPR003)
+    @model(project=p, incremental="rowwise", verify=False)
     @runtime("numpy")
     def flaky(
         data=Model("ns.events", columns=["v1", "flag"],

@@ -1,0 +1,158 @@
+"""repro.lint corpus matrices (ISSUE 7 satellite).
+
+False-positive matrix: every rowwise/keyed function in the shipped
+examples and the incrementality test-suites must lint clean — the
+verifier is useless if the repo's own idioms trip it.  True-positive
+matrix: seeded violations must be caught through the same CLI entry
+points users run, with stable codes and file:line locations."""
+
+import json
+import textwrap
+
+import pytest
+
+import repro.lint as lint
+from repro.analysis import ContractError
+
+CLEAN_CORPUS = [
+    "examples/quickstart.py",
+    "examples/incremental_iteration.py",
+    "examples/incremental_join.py",
+    "examples/multi_user_cache.py",
+    "examples/multi_tenant_service.py",
+    "examples/serve_batch.py",
+    "examples/train_e2e.py",
+    "tests/edit_matrix.py",
+    "tests/test_keyed.py",
+    "tests/test_multi_input.py",
+]
+
+
+@pytest.mark.parametrize("path", CLEAN_CORPUS)
+def test_corpus_lints_clean(path):
+    findings, errors = lint.lint_targets([path])
+    assert errors == [], errors
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_src_tree_lints_clean():
+    findings, errors = lint.lint_targets(["src/repro"])
+    assert errors == [], errors
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ------------------------------------------------------ true-positive fixture
+BAD_SOURCE = textwrap.dedent(
+    '''
+    """Seeded-violation fixture: one finding per code the linter ships."""
+    import random
+    import numpy as np
+
+    from repro.pipeline import Model, Project, model
+
+    project = Project("bad")
+    EVENTS = Model("ns.events", columns=["v1"], filter="t BETWEEN 0 AND 9")
+
+
+    @model(project=project, incremental="rowwise")
+    def running_total(data=EVENTS):          # RPR001: cross-row cumsum
+        return {"t": np.cumsum(np.asarray(data.column("v1")))}
+
+
+    @model(project=project, incremental="rowwise")
+    def jittered(data=EVENTS):               # RPR002: unseeded randomness
+        return {"v": np.asarray(data.column("v1")) * random.random()}
+
+
+    _SEEN = []
+
+
+    @model(project=project, incremental="rowwise")
+    def logged(data=EVENTS):                 # RPR003: mutates module state
+        _SEEN.append(data.num_rows)
+        return {"v": data.column("v1")}
+    '''
+)
+
+
+@pytest.fixture
+def bad_module(tmp_path):
+    path = tmp_path / "bad_pipeline.py"
+    path.write_text(BAD_SOURCE)
+    return str(path)
+
+
+def test_seeded_violations_caught_with_locations(bad_module):
+    findings, errors = lint.lint_targets([bad_module])
+    assert errors == []
+    by_code = {f.code for f in findings}
+    assert {"RPR001", "RPR002", "RPR003"} <= by_code
+    for f in findings:
+        assert f.filename.endswith("bad_pipeline.py")
+        assert f.lineno > 0
+        assert ":" in f.location()
+
+
+def test_rpr004_and_rpr005_reported_via_declared_scopes(tmp_path):
+    src = textwrap.dedent(
+        """
+        from repro.pipeline import Model, Project, model
+
+        project = Project("scoped-bad")
+        EVENTS = Model("ns.events", columns=["v1", "v2"], filter="t BETWEEN 0 AND 9")
+
+        def build():
+            @model(project=project, incremental="rowwise", reads=("v1",))
+            def leaky(data=EVENTS):          # RPR005: reads v2 undeclared
+                return {"v": data.column("v1"), "w": data.column("v2")}
+        """
+    )
+    path = tmp_path / "scoped_bad.py"
+    path.write_text(src)
+    # decoration raises at import time — the CLI surfaces it as a finding
+    # or an import error, never a silent pass
+    findings, errors = lint.lint_targets([str(path)])
+    assert any("RPR005" in e for e in errors) or any(
+        f.code == "RPR005" for f in findings
+    )
+
+
+def test_cli_exit_codes(bad_module, capsys):
+    assert lint.main(["examples/quickstart.py"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+    assert lint.main([bad_module]) == 1
+    out = capsys.readouterr().out
+    assert "RPR001" in out and "bad_pipeline.py" in out
+
+    assert lint.main([str(bad_module) + ".does-not-exist"]) == 2
+
+
+def test_cli_json_output(bad_module, capsys):
+    assert lint.main(["--format", "json", bad_module]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    codes = {f["code"] for f in payload}
+    assert "RPR001" in codes
+    for f in payload:
+        assert f["file"] and f["line"]
+
+
+def test_verify_false_models_are_skipped(tmp_path):
+    src = textwrap.dedent(
+        """
+        import numpy as np
+        from repro.pipeline import Model, Project, model
+
+        project = Project("optout")
+        EVENTS = Model("ns.events", columns=["v1"], filter="t BETWEEN 0 AND 9")
+
+        @model(project=project, incremental="rowwise", verify=False)
+        def deliberate(data=EVENTS):
+            return {"t": np.cumsum(np.asarray(data.column("v1")))}
+        """
+    )
+    path = tmp_path / "optout_pipeline.py"
+    path.write_text(src)
+    findings, errors = lint.lint_targets([str(path)])
+    assert errors == []
+    assert findings == []

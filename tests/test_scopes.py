@@ -1,0 +1,241 @@
+"""Column-scope wiring (ISSUE 7): signature narrowing, UNKNOWN fallback,
+and plan-time scope enforcement.
+
+The headline property: when a model's read scope is *proven* (or declared),
+adding a column the function never reads must leave every cached window
+valid — the warm run recomputes nothing and stays bitwise-equal to a cold
+run.  With an UNKNOWN scope the signature is byte-identical to the
+pre-analysis behavior (sound fallback: never narrower than the truth)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import ScopeViolation
+from repro.pipeline import Model, Project, Workspace, model, runtime
+from repro.pipeline.filters import parse_filter
+from repro.pipeline.physical import _signature_columns
+from repro.service import PipelineService
+from test_service import (
+    TABLE,
+    assert_outputs_bitwise_equal,
+    write_events,
+)
+
+
+def scoped_project(hi, columns=("v1",), gain=2.0, opaque=False):
+    """One rowwise model over ns.events.  ``opaque=False``: the function
+    provably reads only eventTime+v1, so its scope narrows the signature.
+    ``opaque=True``: a dynamic ``data.column(n)`` loop defeats inference
+    (reads UNKNOWN) — the pre-analysis "today" baseline."""
+    p = Project("scoped")
+    flt = f"eventTime BETWEEN 0 AND {hi}"
+
+    if opaque:
+
+        @model(project=p, incremental="rowwise")
+        @runtime("numpy")
+        def scored(data=Model(TABLE, columns=list(columns), filter=flt)):
+            out = {}
+            for n in data.column_names:  # dynamic key: scope is UNKNOWN
+                out[n] = data.column(n)
+            out["score"] = gain * np.asarray(data.column("v1"), np.float64)
+            return out
+
+    else:
+
+        @model(project=p, incremental="rowwise")
+        @runtime("numpy")
+        def scored(data=Model(TABLE, columns=list(columns), filter=flt)):
+            return {
+                "eventTime": data.column("eventTime"),
+                "score": gain * np.asarray(data.column("v1"), np.float64),
+            }
+
+    return p
+
+
+# ----------------------------------------------------------- unit: narrowing
+class _StubDef:
+    def __init__(self, scope):
+        self.read_scope = scope
+
+
+PARSED = parse_filter("eventTime BETWEEN 0 AND 9", "eventTime")
+
+
+def test_signature_columns_narrow_to_scope():
+    got = _signature_columns(
+        _StubDef(frozenset({"v1"})), ("v1", "v2", "flag"), PARSED, "eventTime"
+    )
+    assert got == ("eventTime", "v1")
+
+
+def test_signature_columns_unknown_scope_is_identity():
+    cols = ("flag", "v1", "v2")
+    assert _signature_columns(_StubDef(None), cols, PARSED, "eventTime") is cols
+
+
+def test_signature_columns_keep_predicate_and_sort_key():
+    # predicate/sort-key columns shape the ROWS, so they stay in the
+    # signature even when the function never reads them
+    got = _signature_columns(_StubDef(frozenset()), ("v1",), PARSED, "eventTime")
+    assert got == ("eventTime",)
+
+
+@settings(max_examples=40)
+@given(st.sets(st.sampled_from(["v2", "flag", "w1", "w2", "w3"]), max_size=5))
+def test_signature_invariant_under_unread_columns(extra):
+    """Round-trip property: for a proven scope, ANY set of unread columns
+    added to the projection leaves the signature tuple unchanged."""
+    scope = frozenset({"v1"})
+    base = _signature_columns(_StubDef(scope), ("v1",), PARSED, "eventTime")
+    widened = _signature_columns(
+        _StubDef(scope), tuple(sorted({"v1"} | extra)), PARSED, "eventTime"
+    )
+    assert widened == base
+
+
+@settings(max_examples=40)
+@given(st.sets(st.sampled_from(["v2", "flag", "w1", "w2"]), max_size=4))
+def test_unknown_scope_round_trips_exact_columns(extra):
+    """UNKNOWN fallback: the signature is exactly the projection — adding a
+    column changes it (conservative: plans identical to pre-analysis)."""
+    cols = tuple(sorted({"v1"} | extra))
+    assert _signature_columns(_StubDef(None), cols, PARSED, "eventTime") == cols
+
+
+# -------------------------------------------- integration: feature-add reuse
+def test_feature_add_on_unread_column_serves_from_cache(tmp_path):
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256)
+    write_events(ws.catalog, 0, 2000)
+
+    cold = ws.run(scoped_project(hi=1999, columns=("v1",)))
+    assert cold.node_stats["scored"]["fresh_rows"] > 0
+
+    # feature-add: project v2 too — the fn provably never reads it, so the
+    # node signature is unchanged and the cached windows stay valid
+    warm = ws.run(scoped_project(hi=1999, columns=("v1", "v2")))
+    assert warm.rows_to_user_fns == 0
+    assert warm.node_stats["scored"]["fresh_rows"] == 0
+
+    ref = Workspace(str(tmp_path / "ref"), rows_per_fragment=256)
+    write_events(ref.catalog, 0, 2000)
+    assert_outputs_bitwise_equal(
+        warm, ref.run(scoped_project(hi=1999, columns=("v1", "v2")))
+    )
+
+
+def test_feature_add_with_unknown_scope_recomputes(tmp_path):
+    """The pre-analysis baseline: an opaque function's signature carries the
+    full projection, so the same feature-add invalidates everything."""
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256)
+    write_events(ws.catalog, 0, 2000)
+
+    ws.run(scoped_project(hi=1999, columns=("v1",), opaque=True))
+    warm = ws.run(scoped_project(hi=1999, columns=("v1", "v2"), opaque=True))
+    assert warm.node_stats["scored"]["fresh_rows"] > 0
+
+
+def test_unchanged_project_still_fully_cached(tmp_path):
+    # narrowing must not break the ordinary warm path
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256)
+    write_events(ws.catalog, 0, 2000)
+    ws.run(scoped_project(hi=1999))
+    warm = ws.run(scoped_project(hi=1999))
+    assert warm.rows_to_user_fns == 0
+
+
+# ----------------------------------------------- plan-time scope enforcement
+def test_enforcement_rejects_out_of_scope_read(tmp_path):
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256, enforce_scopes=True)
+    write_events(ws.catalog, 0, 1000)
+
+    # the projection requests v2 but the function's proven scope never
+    # reads it — rejected at plan time, before a single byte moves
+    with pytest.raises(ScopeViolation, match="v2"):
+        ws.run(scoped_project(hi=999, columns=("v1", "v2")))
+    assert ws.scans.total_bytes_processed() == 0
+
+
+def test_enforcement_rejects_unknown_scope(tmp_path):
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256, enforce_scopes=True)
+    write_events(ws.catalog, 0, 1000)
+
+    with pytest.raises(ScopeViolation, match="UNKNOWN"):
+        ws.run(scoped_project(hi=999, opaque=True))
+    assert ws.scans.total_bytes_processed() == 0
+
+
+def test_enforcement_allows_proven_in_scope_run(tmp_path):
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256, enforce_scopes=True)
+    write_events(ws.catalog, 0, 1000)
+    res = ws.run(scoped_project(hi=999, columns=("v1",)))
+
+    ref = Workspace(str(tmp_path / "ref"), rows_per_fragment=256)
+    write_events(ref.catalog, 0, 1000)
+    assert_outputs_bitwise_equal(res, ref.run(scoped_project(hi=999)))
+
+
+def test_enforcement_accepts_declared_scope_for_opaque_fn(tmp_path):
+    """An opaque function can still run under enforcement by DECLARING its
+    scope — the decorator has already checked the declaration is a superset
+    of anything provable, so the plan gate trusts it."""
+    ws = Workspace(str(tmp_path / "ws"), rows_per_fragment=256, enforce_scopes=True)
+    write_events(ws.catalog, 0, 1000)
+    p = Project("declared")
+
+    @model(project=p, incremental="rowwise", reads=("eventTime", "v1"))
+    @runtime("numpy")
+    def scored(
+        data=Model(TABLE, columns=["v1"], filter="eventTime BETWEEN 0 AND 999")
+    ):
+        out = {}
+        for n in data.column_names:
+            out[n] = data.column(n)
+        out["score"] = 2.0 * np.asarray(data.column("v1"), np.float64)
+        return out
+
+    res = ws.run(p)
+    assert res.outputs["scored"].num_rows == 1000
+
+
+def test_service_untrusted_session_enforces_scopes(tmp_path):
+    with PipelineService(
+        str(tmp_path / "svc"), workers=2, rows_per_fragment=256
+    ) as svc:
+        write_events(svc.catalog, 0, 1000)
+        # trusted session: UNKNOWN scope is fine
+        svc.session("alice").run(scoped_project(hi=999, opaque=True))
+        # untrusted session: same project is rejected at plan time
+        with pytest.raises(ScopeViolation):
+            svc.session("mallory", untrusted=True).run(
+                scoped_project(hi=999, opaque=True)
+            )
+
+
+def test_service_enforce_scopes_default_with_trusted_override(tmp_path):
+    with PipelineService(
+        str(tmp_path / "svc"), workers=2, rows_per_fragment=256, enforce_scopes=True
+    ) as svc:
+        write_events(svc.catalog, 0, 1000)
+        with pytest.raises(ScopeViolation):
+            svc.session("bob").run(scoped_project(hi=999, opaque=True))
+        # explicit trusted override wins over the service default
+        res = svc.session("root", untrusted=False).run(
+            scoped_project(hi=999, opaque=True)
+        )
+        assert res.outputs["scored"].num_rows == 1000
+
+
+# ------------------------------------------------------- bench7 acceptance
+def test_bench7_acceptance():
+    from benchmarks import bench7_scopes as b7
+
+    result = b7.run(rows=4000)
+    scoped = result["scoped_feature_add"]
+    assert scoped["warm_fresh_rows"] <= 0.01 * scoped["cold_fresh_rows"]
+    assert scoped["bitwise_equal"]
+    assert result["opaque_feature_add"]["warm_fresh_rows"] > 0
+    assert result["enforcement"]["rejected"]
+    assert result["enforcement"]["bytes_read"] == 0

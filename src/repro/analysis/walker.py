@@ -153,8 +153,22 @@ _NEUTRAL_TABLE_ATTRS = frozenset({"num_rows"})
 _NAME_LOADS = ("LOAD_GLOBAL", "LOAD_DEREF", "LOAD_CLASSDEREF")
 _ATTR_LOADS = ("LOAD_ATTR", "LOAD_METHOD")
 
+# Every pattern below (LOAD_METHOD call pairs, LOAD_FAST/LOAD_CONST/
+# BINARY_SUBSCR subscript triples) is the CPython 3.10/3.11 compiler's
+# shape.  3.12 stops emitting LOAD_METHOD and 3.13 fuses loads into
+# LOAD_FAST_LOAD_FAST, which would silently blind both the contract
+# checks and the scope pass — reads would stay "proven" while missing
+# real column loads.  Outside the tested range the analyzer abstains
+# entirely: no findings, every scope UNKNOWN, callers fall back to
+# pre-analysis behavior.
+_SUPPORTED_INTERPRETER = (
+    sys.implementation.name == "cpython"
+    and (3, 10) <= sys.version_info[:2] <= (3, 11)
+)
+
 _MAX_HELPER_DEPTH = 8
 _MAX_CODES = 256
+_MAX_SCOPE_PASSES = 8
 
 
 def is_user_function(fn: Any) -> bool:
@@ -347,7 +361,13 @@ class _Walker:
         helper: Optional[str] = None,
         depth: int = 0,
     ) -> None:
-        if code in self._seen_codes or self._codes_walked >= _MAX_CODES:
+        if code in self._seen_codes:
+            return
+        if self._codes_walked >= _MAX_CODES:
+            # budget exhausted: unscanned code could read/write anything
+            if infer_scope:
+                self.reads_unknown = True
+                self.writes_unknown = True
             return
         self._seen_codes.add(code)
         self._codes_walked += 1
@@ -531,11 +551,19 @@ class _Walker:
                     self.writes.update(keys)
                 else:
                     self.writes_unknown = True
-            elif op == "STORE_SUBSCR" and i >= 2 and ins[i - 2].opname == "LOAD_FAST":
-                key = ins[i - 1]
-                if key.opname == "LOAD_CONST" and isinstance(key.argval, str):
+            elif op == "STORE_SUBSCR":
+                key = ins[i - 1] if i >= 1 else None
+                if (
+                    i >= 2
+                    and ins[i - 2].opname == "LOAD_FAST"
+                    and key.opname == "LOAD_CONST"
+                    and isinstance(key.argval, str)
+                ):
                     self.writes.add(key.argval)
                 else:
+                    # augmented assigns (… ROT_THREE STORE_SUBSCR), stores
+                    # through non-local bases, computed keys: the target
+                    # is unprovable — abstain, never under-approximate
                     self.writes_unknown = True
             elif op in ("MAP_ADD", "DICT_UPDATE", "DICT_MERGE"):
                 self.writes_unknown = True
@@ -553,6 +581,19 @@ class _Walker:
                     helper=helper,
                     depth=depth,
                 )
+
+    def reset_for_repass(self) -> None:
+        """Prepare for another scope pass over the same code.  Alias
+        discovery is a linear scan, so ``alias = data`` reached through a
+        loop back-edge is found only AFTER the instructions the alias
+        governs were already scanned — re-scanning with the enlarged
+        table set picks those reads up.  Reads/writes accumulate
+        monotonically and findings dedup via ``_seen_findings``, so only
+        the traversal bookkeeping is cleared."""
+        self._seen_codes.clear()
+        self._seen_helper_codes.clear()
+        self._helpers.clear()
+        self._codes_walked = 0
 
     def drain_helpers(self) -> None:
         """Contract-check transitively referenced user helpers.  Scope is
@@ -584,10 +625,26 @@ def _run_walk(
     model: Optional[str],
     table_params: Sequence[str],
 ) -> Analysis:
+    if not _SUPPORTED_INTERPRETER:
+        return Analysis()
     w = _Walker(mode=mode, model=model, table_params=table_params)
     try:
-        w.walk_code(code, env, infer_scope=True)
-        w.drain_helpers()
+        # fixpoint on the table/alias set: a table alias created at a
+        # later bytecode offset (loop back-edge) must retroactively turn
+        # earlier subscripts on that name into reads, or the proven scope
+        # would be smaller than the truth
+        passes = 0
+        while True:
+            tables_before = set(w.tables)
+            w.walk_code(code, env, infer_scope=True)
+            w.drain_helpers()
+            passes += 1
+            if w.tables == tables_before or w.reads_unknown:
+                break
+            if passes >= _MAX_SCOPE_PASSES:
+                w.reads_unknown = True
+                break
+            w.reset_for_repass()
     except Exception:
         # an analysis bug must never take down a pipeline: degrade to the
         # pre-analysis world (no findings, everything UNKNOWN)
@@ -597,10 +654,48 @@ def _run_walk(
     return Analysis(findings=w.findings, reads=reads, writes=writes)
 
 
-# results are closure-value independent enough to share per code object;
 # decoration in hypothesis loops re-runs factories thousands of times over
-# the same code objects
+# the same code objects — memoize per code object, but ONLY when the
+# verdict cannot depend on the environment (see _memo_safe)
 _MEMO: Dict[Tuple[types.CodeType, str, Tuple[str, ...]], Analysis] = {}
+
+
+def _memo_safe(fn: types.FunctionType) -> bool:
+    """True when ``fn``'s verdict is a function of its code object alone.
+
+    The walker consults the environment in exactly two ways: it descends
+    into helper *functions* resolved from closure cells / globals, and it
+    classifies resolved callables, modules, and classes (nondeterminism
+    checks).  Factory instances share one code object while differing in
+    precisely those bindings — caching across them reproduced both missed
+    and spurious RPR002s — and a module-level helper can be monkeypatched
+    between decorations.  Bypass the memo whenever such a binding exists;
+    the common self-contained model body stays memoized."""
+    for cell in fn.__closure__ or ():
+        try:
+            v = cell.cell_contents
+        except ValueError:
+            return False  # unset cell now; may hold anything later
+        if isinstance(
+            v,
+            (
+                types.FunctionType,
+                types.BuiltinFunctionType,
+                types.MethodType,
+                types.ModuleType,
+                type,
+            ),
+        ):
+            return False
+    g = fn.__globals__
+    queue: List[types.CodeType] = [fn.__code__]
+    while queue:
+        c = queue.pop()
+        for nm in c.co_names:
+            if is_user_function(g.get(nm)):
+                return False
+        queue.extend(k for k in c.co_consts if isinstance(k, types.CodeType))
+    return True
 
 
 def analyze_model_fn(
@@ -611,8 +706,11 @@ def analyze_model_fn(
     name: Optional[str] = None,
 ) -> Analysis:
     """Analyze a live model function: env = its globals + closure cells."""
+    if not _SUPPORTED_INTERPRETER:
+        return Analysis()
     key = (fn.__code__, incremental, tuple(table_params))
-    memo = _MEMO.get(key)
+    memoizable = _memo_safe(fn)
+    memo = _MEMO.get(key) if memoizable else None
     if memo is not None:
         return Analysis(
             findings=[
@@ -642,7 +740,8 @@ def analyze_model_fn(
         model=name or fn.__name__,
         table_params=table_params,
     )
-    _MEMO[key] = ana
+    if memoizable:
+        _MEMO[key] = ana
     return ana
 
 

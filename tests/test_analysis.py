@@ -227,6 +227,85 @@ def test_scope_inference_comprehension_reads_const_key():
     assert ana.reads == frozenset({"v1"})
 
 
+def test_scope_alias_created_after_use_is_still_seen():
+    """Soundness regression: ``d = data`` sits at the END of the loop
+    body, so ``d["v2"]`` earlier in the body is only reachable through
+    the back-edge — a single linear pass proved reads={"v1"} and cached
+    windows survived edits to the genuinely-read "v2".  The fixpoint
+    re-scan must count it (proven superset or UNKNOWN, never smaller)."""
+
+    def sneaky(data=EVENTS):
+        total = np.zeros(data.num_rows)
+        for i in range(2):
+            if i:
+                total = total + np.asarray(d["v2"])
+            d = data
+        return {"t": np.asarray(data["v1"]) + total}
+
+    ana = analysis_of(sneaky)
+    assert ana.reads is UNKNOWN or "v2" in ana.reads
+    assert ana.reads is UNKNOWN or ana.reads == frozenset({"v1", "v2"})
+
+
+def test_memo_not_shared_across_closure_helper_siblings():
+    """Factory-created models share one code object but differ in the
+    closure helper they call; the memo must not hand one sibling the
+    other's verdict (missed RPR002 one way, spurious RPR002 the other)."""
+
+    def make(helper):
+        def m(data=EVENTS):
+            return {"v": helper(np.asarray(data.column("v1")))}
+
+        return m
+
+    def pure(x):
+        return x * 2
+
+    def dirty(x):
+        import random
+
+        return x * random.random()
+
+    assert analysis_of(make(pure)).findings == []
+    assert any(
+        f.code == NONDETERMINISM for f in analysis_of(make(dirty)).findings
+    )
+    # clean sibling analyzed AFTER the dirty one must stay clean too
+    assert analysis_of(make(pure)).findings == []
+
+
+def test_unsupported_interpreter_abstains(monkeypatch):
+    """The opname patterns are CPython 3.10/3.11 shapes; on other
+    interpreters the analyzer must return no findings and all-UNKNOWN
+    scopes rather than silently half-working (e.g. 3.13's fused
+    LOAD_FAST_LOAD_FAST would hide table loads from the scope pass)."""
+    from repro.analysis import walker as W
+
+    monkeypatch.setattr(W, "_SUPPORTED_INTERPRETER", False)
+
+    def running(data=EVENTS):
+        return {"t": np.cumsum(np.asarray(data.column("v1")))}
+
+    ana = analysis_of(running)
+    assert ana.findings == []
+    assert ana.reads is UNKNOWN and ana.writes is UNKNOWN
+
+
+def test_augmented_subscript_write_abstains():
+    """``out["b"] += …`` compiles to ROT_THREE/STORE_SUBSCR with no
+    LOAD_FAST at i-2 — it must force writes to UNKNOWN, not be silently
+    dropped from the proven write set."""
+
+    def aug(data=EVENTS):
+        out = {}
+        out["a"] = np.asarray(data.column("v1"))
+        out["b"] = np.zeros(data.num_rows)
+        out["b"] += 1.0
+        return out
+
+    assert analysis_of(aug).writes is UNKNOWN
+
+
 # --------------------------------------------- dag-time verdicts & demotions
 def violating_project(**model_kw):
     p = Project("viol")

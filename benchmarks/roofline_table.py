@@ -8,9 +8,12 @@ import json
 import os
 from typing import Dict, List
 
-__all__ = ["load", "format_table", "summarize"]
+__all__ = ["load", "format_table", "summarize", "device_tier_summary"]
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+BENCH8_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_8.json"
+)
 
 
 def load(dryrun_dir: str = DRYRUN_DIR, tag: str = "") -> List[Dict]:
@@ -100,8 +103,45 @@ def summarize(rows: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def device_tier_summary(path: str = BENCH8_PATH) -> str:
+    """Scan+UNION serving bandwidth vs the memory roofline, from the BENCH_8
+    artifact.  The measured side is the warm H2D ledger (device tier vs the
+    numpy reference path); the modeled side is ``scan_union_roofline`` — on
+    CPU containers the Pallas UNION runs in interpret mode, so bandwidth is
+    judged against hardware walls, not wall time."""
+    if not os.path.exists(path):
+        return "no BENCH_8 artifact (run: python -m benchmarks.bench8_device)"
+    with open(path) as f:
+        rec = json.load(f)
+    warm = rec.get("warm", {})
+    roof = rec.get("roofline", {})
+    lines = [
+        "| metric | value |",
+        "|---|---|",
+        f"| warm H2D, numpy path | {warm.get('numpy_bytes_h2d', 0):,} B |",
+        f"| warm H2D, device tier | {warm.get('device_bytes_h2d', 0):,} B |",
+        f"| H2D ratio (numpy/device) | {warm.get('h2d_ratio', 0):.1f}x |",
+        f"| device hits / UNION bytes | {warm.get('device_hits', 0)} / "
+        f"{warm.get('device_union_bytes', 0):,} B |",
+        f"| gather fast / fallback | {warm.get('gather_fast', 0)} / "
+        f"{warm.get('gather_fallbacks', 0)} |",
+    ]
+    if roof:
+        lines += [
+            f"| modeled serving bw (device) | {roof.get('device_bw', 0) / 1e9:.0f} GB/s |",
+            f"| modeled speedup vs host path | {roof.get('modeled_speedup', 0):.1f}x |",
+            f"| fraction of HBM roofline | {roof.get('roofline_fraction', 0):.2f} |",
+        ]
+    lines.append(
+        f"\nbitwise equal vs numpy reference: {rec.get('bitwise_equal', False)}"
+    )
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     rows = load()
     print(format_table(rows))
     print()
     print(summarize(rows))
+    print()
+    print(device_tier_summary())

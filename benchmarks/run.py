@@ -103,6 +103,21 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_7.json"), "w") as f:
         json.dump(r7, f, indent=1)
 
+    _section("BENCH 8 — device tier: warm serving off the host link")
+    from benchmarks import bench8_device as b8
+
+    r8 = b8.run(rows=50_000 if not args.full else 500_000)
+    print(b8.format_table(r8))
+    artifacts["bench8"] = {
+        "h2d_ratio": r8["warm"]["h2d_ratio"],
+        "gather_fast": r8["warm"]["gather_fast"],
+        "gather_fallbacks": r8["warm"]["gather_fallbacks"],
+        "bitwise_equal": r8["bitwise_equal"],
+        "modeled_speedup": r8["roofline"].get("modeled_speedup"),
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_8.json"), "w") as f:
+        json.dump(r8, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 
@@ -133,6 +148,8 @@ def main() -> int:
             artifacts[f"roofline_{label.split()[0]}"] = rt.summarize(rows)
         else:
             print(f"-- {label}: no artifacts (run: python -m repro.launch.dryrun)")
+    print("\n-- device cache tier (scan+UNION vs memory roofline, BENCH_8):")
+    print(rt.device_tier_summary())
     print("\n(full tables: experiments/roofline_baseline.md, "
           "experiments/roofline_optimized.md)")
 

@@ -145,8 +145,12 @@ class CacheElement:
     def pin_ids(self) -> frozenset:
         return frozenset(p.fragment_id for p in self.pins)
 
-    def slice_window(self, window: IntervalSet, columns: Sequence[str]) -> List[Table]:
-        """Zero-copy chunks of this element's rows inside ``window``."""
+    def window_runs(self, window: IntervalSet) -> List[Tuple[Interval, int, int]]:
+        """The contiguous row runs of this element's payload inside
+        ``window``: ``(interval, lo, hi)`` half-open row bounds per
+        non-empty interval, in window order.  This is the single place the
+        interval→row mapping is computed — host slicing and device gather
+        assembly both derive from it, so they cannot disagree."""
         if self.data is None:
             raise RuntimeError(
                 f"element {self.elem_id} is demoted; the planner promotes "
@@ -154,13 +158,22 @@ class CacheElement:
                 f"is a store-discipline bug"
             )
         keys = self.data.column(self.sort_key)
-        view = self.data.select(list(columns))
-        chunks: List[Table] = []
+        runs: List[Tuple[Interval, int, int]] = []
         for iv in window:
             lo = int(np.searchsorted(keys, iv.lo, side="left"))
             hi = int(np.searchsorted(keys, iv.hi, side="left"))
             if hi > lo:
-                chunks.append(view.slice(lo, hi))
+                runs.append((iv, lo, hi))
+        return runs
+
+    def slice_window(self, window: IntervalSet, columns: Sequence[str]) -> List[Table]:
+        """Zero-copy chunks of this element's rows inside ``window``."""
+        view = None
+        chunks: List[Table] = []
+        for _iv, lo, hi in self.window_runs(window):
+            if view is None:
+                view = self.data.select(list(columns))
+            chunks.append(view.slice(lo, hi))
         return chunks
 
 
@@ -180,6 +193,7 @@ class CachePlan:
     residual_cost_bytes: int
     baseline_cost_bytes: int  # cost had there been no cache
     promoted_spill_bytes: int = 0  # payload bytes promoted spill -> RAM for hits
+    bytes_h2d: int = 0  # host->device bytes for spill->device straight promotion
 
     @property
     def fully_cached(self) -> bool:
@@ -294,9 +308,14 @@ class DifferentialStore:
     spill root starts warm (the tier rebuilds the index from manifests).
     """
 
-    def __init__(self, max_bytes: Optional[int] = None, spill=None):
+    def __init__(self, max_bytes: Optional[int] = None, spill=None, device=None):
         self.max_bytes = max_bytes
         self.spill = spill
+        # optional device tier (repro.core.device.DeviceTier): an advisory
+        # cache of element columns as jax device arrays.  The RAM tier stays
+        # authoritative; the device copy exists so jax consumers skip the
+        # H2D transfer.  Set here or attached later (Workspace/service).
+        self.device = device
         self._elements: Dict[Hashable, List[CacheElement]] = {}
         self._clock = 0
         # The store's concurrency discipline lives HERE, not in its callers:
@@ -346,6 +365,7 @@ class DifferentialStore:
         cost_fn: Callable[[IntervalSet], int],
         usable_fn: Optional[UsableFn] = None,
         tenant: Optional[str] = None,
+        device_consumer: bool = False,
     ) -> CachePlan:
         """Paper Listing 3, iterated to a fixpoint.
 
@@ -402,10 +422,19 @@ class DifferentialStore:
         # back into the RAM tier (mmap — zero-copy until touched) so the
         # caller can slice them under the same lock acquisition
         promoted = 0
+        bytes_h2d = 0
         for h in hits:
             e = h.element
             if e.data is None:
-                e.data = self.spill.load(e.spill)
+                if device_consumer and self.device is not None:
+                    # the plan's consumer is a jax node: promote straight to
+                    # device — the mmap'd IPC pages are uploaded once (H2D)
+                    # while the RAM tier gets its usual zero-copy mmap view
+                    before_h2d = self.device.bytes_h2d
+                    e.data = self.spill.load_to_device(e.spill, e, self.device)
+                    bytes_h2d += self.device.bytes_h2d - before_h2d
+                else:
+                    e.data = self.spill.load(e.spill)
                 self.promotions += 1
                 promoted += e.data.nbytes
                 self.bytes_from_spill += e.data.nbytes
@@ -421,6 +450,7 @@ class DifferentialStore:
             residual_cost_bytes=cost,
             baseline_cost_bytes=baseline,
             promoted_spill_bytes=promoted,
+            bytes_h2d=bytes_h2d,
         )
 
     def insert_window(
@@ -433,9 +463,15 @@ class DifferentialStore:
         pins: Tuple[FragmentPin, ...] = (),
         usable_fn: Optional[UsableFn] = None,
         tenant: Optional[str] = None,
+        device_arrays: Optional[Dict] = None,
     ) -> Optional[CacheElement]:
         """Store a freshly computed residual as a new element, then merge
-        touching same-column windows within the signature group."""
+        touching same-column windows within the signature group.
+
+        ``device_arrays`` (column → jax array, already on device) registers
+        the residual's payload with the device tier under the new element's
+        id BEFORE merging, so a merge of two pinned elements can replicate
+        device→device instead of re-uploading the merged payload."""
         if window.empty:
             return None
         self._clock += 1
@@ -451,6 +487,8 @@ class DifferentialStore:
             signature=signature,
             owner=tenant,
         )
+        if device_arrays is not None and self.device is not None:
+            self.device.adopt(elem.elem_id, device_arrays, data.num_rows)
         self._elements.setdefault(signature, []).append(elem)
         self._merge_group(signature, usable_fn)
         self._evict()
@@ -459,10 +497,12 @@ class DifferentialStore:
     def invalidate(self, signature: Hashable) -> None:
         for e in self._elements.pop(signature, ()):
             self._drop_spill_entry(e)
+            self._drop_device(e)
 
     def clear(self) -> None:
         for e in self.elements():
             self._drop_spill_entry(e)
+            self._drop_device(e)
         self._elements.clear()
 
     def demote_all(self) -> None:
@@ -506,7 +546,9 @@ class DifferentialStore:
                             group.pop(i)
                             group.append(self._merge_pair(a, b, usable_fn))
                             # the sides' spill copies (if any) no longer
-                            # describe a live element — GC them
+                            # describe a live element — GC them (device
+                            # pins were dropped by _merge_pair after
+                            # replicating into the merged element)
                             self._drop_spill_entry(a)
                             self._drop_spill_entry(b)
                             merged = True
@@ -519,6 +561,7 @@ class DifferentialStore:
         dropped = [e for e in out if e.window.empty]
         for e in dropped:
             self._drop_spill_entry(e)
+            self._drop_device(e)
         self._elements[signature] = [e for e in out if not e.window.empty]
 
     @staticmethod
@@ -563,7 +606,7 @@ class DifferentialStore:
                 merged.setdefault(p.fragment_id, p)
         pins = tuple(merged.values())
         self._clock += 1
-        return CacheElement(
+        out = CacheElement(
             elem_id=next(_ID),
             table=a.table,
             sort_key=a.sort_key,
@@ -577,6 +620,24 @@ class DifferentialStore:
             # exact split accounting is not worth tracking per-row owners
             owner=a.owner if a.owner is not None else b.owner,
         )
+        if self.device is not None:
+            # rebuild the merged payload's device copy by gathering from the
+            # parents' pins (device→device, zero H2D) — a warm jax loop then
+            # keeps hitting device across merges, uploading only residuals.
+            # Best-effort: with either parent unpinned the merged element
+            # just re-pins lazily on its next device consumer.
+            self.device.replicate_merge(a, b, out, a_use, b_only)
+            self._drop_device(a)
+            self._drop_device(b)
+        return out
+
+    def _drop_device(self, elem: CacheElement) -> None:
+        """Forget an element's device pins (it merged away or left the
+        index).  Demotion to spill does NOT drop pins — the payload's
+        values are unchanged, so the device copy stays valid and a demoted
+        element can still serve jax consumers without a re-upload."""
+        if self.device is not None:
+            self.device.drop_element(elem.elem_id)
 
     def _drop_spill_entry(self, elem: CacheElement) -> None:
         """GC an element's spill objects (it is leaving the index, or its
@@ -603,6 +664,7 @@ class DifferentialStore:
         else:
             self._elements[elem.signature].remove(elem)
             self._drop_spill_entry(elem)
+            self._drop_device(elem)
 
     def _evict(self, protect: frozenset = frozenset()) -> None:
         if self.max_bytes is None:
@@ -637,6 +699,7 @@ class DifferentialCache(DifferentialStore):
         snapshot: Snapshot,
         sort_key: str,
         tenant: Optional[str] = None,
+        device_consumer: bool = False,
     ) -> CachePlan:
         phys = scan.physical_columns(sort_key)
         return self.plan_window(
@@ -646,6 +709,7 @@ class DifferentialCache(DifferentialStore):
             cost_fn=lambda w: scan_cost_bytes(snapshot, w, phys),
             usable_fn=lambda e: snapshot_usable_window(e, snapshot),
             tenant=tenant,
+            device_consumer=device_consumer,
         )
 
     def insert(
@@ -656,6 +720,7 @@ class DifferentialCache(DifferentialStore):
         window: IntervalSet,
         data: Table,
         tenant: Optional[str] = None,
+        device_arrays: Optional[Dict] = None,
     ) -> Optional[CacheElement]:
         """Store a freshly fetched residual as a new element, then merge."""
         pins = pins_for(snapshot, window)
@@ -668,6 +733,7 @@ class DifferentialCache(DifferentialStore):
             pins=pins,
             usable_fn=lambda e: snapshot_usable_window(e, snapshot),
             tenant=tenant,
+            device_arrays=device_arrays,
         )
 
     def invalidate_table(self, table: str) -> None:

@@ -122,7 +122,7 @@ class ChunkedTable:
     a consumer explicitly needs one.
     """
 
-    __slots__ = ("chunks",)
+    __slots__ = ("chunks", "_col_memo")
 
     def __init__(self, chunks: Iterable[Table]):
         # Keep zero-row chunks that still carry a schema (column names +
@@ -140,6 +140,9 @@ class ChunkedTable:
         non_empty = [c for c in chunks if c.num_rows > 0]
         # retain one schema-bearing empty chunk only when ALL are empty
         self.chunks: List[Table] = non_empty if non_empty else chunks[:1]
+        # per-column concatenation memo, keyed by chunk identity (callers
+        # may replace ``self.chunks``); see ``column()``
+        self._col_memo: Dict[str, Tuple[tuple, np.ndarray]] = {}
 
     @property
     def num_rows(self) -> int:
@@ -169,12 +172,26 @@ class ChunkedTable:
 
     def column(self, name: str) -> np.ndarray:
         """One logical column — concatenates ONLY the requested column's
-        chunks (``combine()`` would materialize every column to read one)."""
+        chunks (``combine()`` would materialize every column to read one).
+
+        Single-chunk tables return the chunk's column itself (a zero-copy,
+        read-only view); multi-chunk concatenations are memoized per column
+        so repeated reads (jax conversion, windowing, materialization) pay
+        the copy once.  The memo is invalidated whenever chunk identity
+        changes, and memoized arrays are frozen read-only — they are shared
+        across callers, like every other array a Table hands out."""
         if len(self.chunks) == 1:
             return self.chunks[0].column(name)
         if not self.chunks:
             return Table({}).column(name)  # KeyError, like combine() would
-        return np.concatenate([c.column(name) for c in self.chunks])
+        token = tuple(id(c) for c in self.chunks)
+        hit = self._col_memo.get(name)
+        if hit is not None and hit[0] == token:
+            return hit[1]
+        arr = np.concatenate([c.column(name) for c in self.chunks])
+        arr.flags.writeable = False
+        self._col_memo[name] = (token, arr)
+        return arr
 
     def sort_by(self, name: str) -> Table:
         return self.combine().sort_by(name)

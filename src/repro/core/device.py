@@ -1,0 +1,455 @@
+"""The device tier: hot cache elements pinned as jax device arrays.
+
+The differential cache saves bytes *recomputed*, but every byte served still
+transits host memory: residual assembly and the hit∪residual UNION run in
+numpy, so a jax-runtime node pays a host→device copy for data the cache
+already "had".  :class:`DeviceTier` closes that gap:
+
+- **pinning**: a cache element's payload columns are uploaded once as jax
+  device arrays (column-major — one 1-D array per ``(element, column)``,
+  padded to :data:`ROW_BLOCK` rows so every fragment boundary the gather
+  kernel sees is tile-addressable).  Pins are keyed by ``elem_id``; element
+  ids are never reused (merges mint new elements), so a stale pin can never
+  alias a different payload.
+- **serving**: :func:`device_union` assembles hit∪residual output columns
+  *on device* — contiguous row runs of pinned elements go through the
+  ``fragment_gather`` Pallas kernel (RB-aligned block runs take its tiled
+  fast path; non-aligned runs are counted as fallback downgrades), and the
+  per-source outputs are concatenated device-side.  No host round-trip.
+- **merge replication**: when the store merges two pinned elements, the
+  merged element's device columns are built by gathering from the parents'
+  pins (device→device), so a warm iteration loop re-uploads only the fresh
+  residual — H2D bytes stay proportional to the *edit*, exactly like the
+  RAM tier's recompute bytes.
+- **demotion**: the tier has its own byte budget with LRU eviction.  The
+  RAM tier stays authoritative (a device pin is a *copy*, never the only
+  copy), so demotion is just a drop — the next jax consumer re-pins.
+
+Bitwise discipline: jax's x32 default downcasts ``int64``/``float64`` on
+``jnp.asarray``.  The downcast is elementwise, so it commutes with gather
+and concatenation — pinning the downcast column and gathering on device
+yields bit-identical arrays to the host path's concatenate-then-``asarray``.
+``tests/test_device.py`` property-checks this across dtypes and window
+shapes; the edit-matrix sweep holds it across every warm/cold edit pair.
+
+Everything here is advisory: any unsupported dtype, non-jax runtime, or
+missing pin falls back to the numpy path with no semantic change.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.columnar import ChunkedTable, Table
+
+__all__ = [
+    "ROW_BLOCK",
+    "DeviceTier",
+    "DeviceTable",
+    "DeviceChunkedTable",
+    "device_union",
+]
+
+# pin-time padding granularity: every pinned column is padded to a multiple
+# of ROW_BLOCK rows so the gather kernel's smallest tile is always in-bounds
+ROW_BLOCK = 8
+
+# candidate row-block sizes for a union gather, largest first — bigger
+# blocks mean fewer grid steps (and on TPU, fewer/larger DMAs)
+_RB_CANDIDATES = (4096, 2048, 1024, 512, 256, 128, 64, 32, 16, 8)
+
+# non-aligned gathers above this row count skip the RB=1 kernel (row-granular
+# grid steps are pure overhead in interpret mode) for an XLA take — still a
+# device-side gather, still counted as a fallback downgrade
+FALLBACK_KERNEL_MAX_ROWS = 1024
+
+
+def _bump(ledger: Optional[Dict[str, int]], key: str, by: int = 1) -> None:
+    if ledger is not None:
+        ledger[key] = ledger.get(key, 0) + by
+
+
+def _pad_rows(arr, mult: int = ROW_BLOCK):
+    import jax.numpy as jnp
+
+    pad = (-arr.shape[0]) % mult
+    if pad == 0:
+        return arr
+    return jnp.pad(arr, (0, pad))
+
+
+class _DeviceEntry:
+    __slots__ = ("arr", "rows", "nbytes", "last_used")
+
+    def __init__(self, arr, rows: int, last_used: int):
+        self.arr = arr  # 1-D device array, padded to ROW_BLOCK rows
+        self.rows = rows  # real (unpadded) rows
+        self.nbytes = int(arr.nbytes)
+        self.last_used = last_used
+
+
+class DeviceTier:
+    """Byte-budgeted LRU cache of ``(elem_id, column) → jax device array``.
+
+    ``interpret=None`` auto-selects Pallas interpret mode off-TPU (the
+    kernel wrapper's convention); tests force ``interpret=True``.
+    """
+
+    def __init__(
+        self, max_bytes: Optional[int] = None, interpret: Optional[bool] = None
+    ):
+        self.max_bytes = max_bytes
+        self.interpret = interpret
+        self.lock = threading.RLock()
+        self._entries: Dict[Tuple[int, str], _DeviceEntry] = {}
+        self._by_elem: Dict[int, set] = {}
+        self._clock = 0
+        # ledger (surfaced through SharedStore.stats() / ScanReport / RunResult)
+        self.bytes_h2d = 0  # host→device bytes uploaded by pins
+        self.device_hits = 0  # pin/get requests served from a resident entry
+        self.device_evictions = 0  # entries LRU-demoted back to the RAM tier
+        self.pins = 0  # entries uploaded (misses)
+        self.bytes_replicated = 0  # device→device bytes built by merge replication
+
+    # -- inspection ----------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        with self.lock:
+            return sum(e.nbytes for e in self._entries.values())
+
+    def __len__(self) -> int:
+        with self.lock:
+            return len(self._entries)
+
+    def stats(self) -> Dict[str, int]:
+        with self.lock:
+            return {
+                "device_nbytes": sum(e.nbytes for e in self._entries.values()),
+                "device_entries": len(self._entries),
+                "bytes_h2d": self.bytes_h2d,
+                "device_hits": self.device_hits,
+                "device_evictions": self.device_evictions,
+                "device_pins": self.pins,
+                "bytes_replicated": self.bytes_replicated,
+            }
+
+    @staticmethod
+    def supported(dtype) -> bool:
+        """Dtypes the device path serves; everything else stays on the
+        numpy path (strings/objects/datetimes have no jax analog here)."""
+        return np.dtype(dtype).kind in "fiub"
+
+    # -- pinning -------------------------------------------------------------
+    def get(self, elem_id: int, column: str):
+        """The resident device array for ``(elem_id, column)``, or None.
+        Never uploads."""
+        with self.lock:
+            e = self._entries.get((elem_id, column))
+            if e is None:
+                return None
+            self._clock += 1
+            e.last_used = self._clock
+            self.device_hits += 1
+            return e.arr
+
+    def pin(self, elem, column: str, ledger: Optional[Dict[str, int]] = None):
+        """The device array for one element column, uploading on miss.
+        Returns None when the element is demoted (no RAM payload to read)
+        or the dtype is unsupported — callers fall back to numpy."""
+        with self.lock:
+            e = self._entries.get((elem.elem_id, column))
+            if e is not None:
+                self._clock += 1
+                e.last_used = self._clock
+                self.device_hits += 1
+                _bump(ledger, "device_hits")
+                return e.arr
+        data = elem.data
+        if data is None or column not in data.column_names:
+            return None
+        col = data.column(column)
+        if not self.supported(col.dtype):
+            return None
+        import jax.numpy as jnp
+
+        arr = _pad_rows(jnp.asarray(col))
+        h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
+        return self._insert(
+            elem.elem_id, column, arr, int(col.shape[0]), h2d=h2d, ledger=ledger
+        )
+
+    def pin_columns(
+        self, elem, columns: Sequence[str], ledger: Optional[Dict[str, int]] = None
+    ) -> Optional[Dict[str, Any]]:
+        """All-or-nothing pin of several columns (a partial union provider
+        would force a per-column host/device split downstream)."""
+        out: Dict[str, Any] = {}
+        for c in columns:
+            arr = self.pin(elem, c, ledger)
+            if arr is None:
+                return None
+            out[c] = arr
+        return out
+
+    def pin_table(
+        self, elem_id: int, table: Table, ledger: Optional[Dict[str, int]] = None
+    ) -> bool:
+        """Upload every supported column of ``table`` under ``elem_id`` —
+        the spill tier's straight-to-device promotion (mmap → H2D once).
+        Returns True when all columns landed."""
+        import jax.numpy as jnp
+
+        ok = True
+        for c in table.column_names:
+            col = table.column(c)
+            if not self.supported(col.dtype):
+                ok = False
+                continue
+            with self.lock:
+                if (elem_id, c) in self._entries:
+                    continue
+            arr = _pad_rows(jnp.asarray(col))
+            h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
+            self._insert(elem_id, c, arr, int(col.shape[0]), h2d=h2d, ledger=ledger)
+        return ok
+
+    def adopt(
+        self,
+        elem_id: int,
+        arrays: Mapping[str, Any],
+        rows: int,
+        *,
+        replicated: bool = False,
+    ) -> None:
+        """Register already-on-device columns for ``elem_id`` (a fresh
+        residual the executor just converted, or a merge replica) — no H2D
+        is counted here; the producer accounted for the transfer."""
+        for c, arr in arrays.items():
+            padded = _pad_rows(arr)
+            if replicated:
+                with self.lock:
+                    self.bytes_replicated += int(padded.nbytes)
+            self._insert(elem_id, c, padded, rows, h2d=0, ledger=None)
+
+    def _insert(self, elem_id, column, arr, rows, *, h2d, ledger):
+        with self.lock:
+            key = (elem_id, column)
+            existing = self._entries.get(key)
+            if existing is not None:  # lost an upload race: keep the first
+                self.device_hits += 1
+                return existing.arr
+            self._clock += 1
+            self._entries[key] = _DeviceEntry(arr, rows, self._clock)
+            self._by_elem.setdefault(elem_id, set()).add(column)
+            self.pins += 1
+            if h2d:
+                self.bytes_h2d += h2d
+                _bump(ledger, "bytes_h2d", h2d)
+            self._evict()
+        return arr
+
+    # -- merge replication ---------------------------------------------------
+    def element_arrays(self, elem, columns: Sequence[str]) -> Optional[Dict[str, Any]]:
+        """Resident arrays for all ``columns`` of ``elem`` — None unless every
+        one is already pinned (replication never uploads)."""
+        out: Dict[str, Any] = {}
+        with self.lock:
+            for c in columns:
+                e = self._entries.get((elem.elem_id, c))
+                if e is None:
+                    return None
+                out[c] = e.arr
+        return out
+
+    def replicate_merge(self, a, b, merged, a_window, b_window) -> bool:
+        """Build the merged element's device columns from its parents'
+        pins (device→device fragment gather — zero H2D).  Mirrors
+        ``DifferentialStore._merge_pair`` exactly: ``a`` contributes its
+        rows inside ``a_window``, ``b`` inside ``b_window`` (disjoint), and
+        the merged payload is their key-ordered union.  Returns False (and
+        pins nothing) when either parent is not fully resident here."""
+        cols = list(merged.columns)
+        prov_a = self.element_arrays(a, cols)
+        prov_b = self.element_arrays(b, cols)
+        if prov_a is None or prov_b is None:
+            return False
+        runs: List[Tuple[Any, Mapping[str, Any], int, int]] = []
+        for side, window, prov in ((a, a_window, prov_a), (b, b_window, prov_b)):
+            for iv, lo, hi in side.window_runs(window):
+                runs.append((iv.lo, prov, lo, hi))
+        if not runs:
+            return True  # empty merge: nothing to pin, trivially replicated
+        runs.sort(key=lambda r: r[0])
+        arrays = device_union(
+            [(prov, lo, hi) for _key, prov, lo, hi in runs],
+            cols,
+            interpret=self.interpret,
+        )
+        rows = sum(hi - lo for _key, _prov, lo, hi in runs)
+        self.adopt(merged.elem_id, arrays, rows, replicated=True)
+        return True
+
+    # -- demotion ------------------------------------------------------------
+    def drop_element(self, elem_id: int) -> None:
+        """Forget every pin of ``elem_id`` (the element merged away or left
+        the store index).  Handed-out arrays stay valid — jax buffers are
+        immutable and outlive the tier's reference."""
+        with self.lock:
+            for c in self._by_elem.pop(elem_id, ()):
+                self._entries.pop((elem_id, c), None)
+
+    def clear(self) -> None:
+        with self.lock:
+            self._entries.clear()
+            self._by_elem.clear()
+
+    def _evict(self) -> None:
+        if self.max_bytes is None:
+            return
+        with self.lock:
+            while (
+                sum(e.nbytes for e in self._entries.values()) > self.max_bytes
+                and self._entries
+            ):
+                key = min(self._entries, key=lambda k: self._entries[k].last_used)
+                self._entries.pop(key)
+                elem_id, column = key
+                cols = self._by_elem.get(elem_id)
+                if cols is not None:
+                    cols.discard(column)
+                    if not cols:
+                        del self._by_elem[elem_id]
+                self.device_evictions += 1
+
+
+# ---------------------------------------------------------------------------
+# device-side UNION assembly
+# ---------------------------------------------------------------------------
+
+def _choose_row_block(bounds: Sequence[Tuple[int, int]]) -> Optional[int]:
+    """Largest candidate RB for which every run is block-aligned (start and
+    length both multiples of RB) — the kernel's tiled fast path; None when
+    no candidate fits (the RB=1 / XLA-take fallback)."""
+    for rb in _RB_CANDIDATES:
+        if all(lo % rb == 0 and (hi - lo) % rb == 0 for lo, hi in bounds):
+            return rb
+    return None
+
+
+def _gather_runs(src1d, bounds, interpret, ledger):
+    """Extract and concatenate ``bounds`` row runs of one padded source
+    column via ``fragment_gather``.  Aligned runs take the block-run fast
+    path; others are counted as fallback downgrades."""
+    import jax.numpy as jnp
+
+    from repro.kernels.fragment_gather.ops import fragment_gather
+
+    idx = np.concatenate(
+        [np.arange(lo, hi, dtype=np.int32) for lo, hi in bounds]
+    )
+    rb = _choose_row_block(bounds)
+    if rb is not None:
+        _bump(ledger, "gather_fast")
+        return fragment_gather(
+            src1d.reshape(-1, 1), idx, row_block=rb, interpret=interpret
+        )[:, 0]
+    _bump(ledger, "gather_fallbacks")
+    if idx.shape[0] <= FALLBACK_KERNEL_MAX_ROWS:
+        return fragment_gather(
+            src1d.reshape(-1, 1), idx, row_block=ROW_BLOCK, interpret=interpret
+        )[:, 0]
+    return jnp.take(src1d, jnp.asarray(idx), axis=0)
+
+
+def device_union(
+    runs: Sequence[Tuple[Mapping[str, Any], int, int]],
+    columns: Sequence[str],
+    *,
+    interpret: Optional[bool] = None,
+    ledger: Optional[Dict[str, int]] = None,
+) -> Dict[str, Any]:
+    """Assemble the hit∪residual UNION on device.
+
+    ``runs`` is the output's row layout **in final row order**: each entry is
+    ``(arrays, lo, hi)`` — a provider mapping of padded 1-D device columns
+    and the half-open real-row range it contributes.  Consecutive runs from
+    the same provider become ONE ``fragment_gather`` call (the multi-interval
+    hit case — a true block-run gather); single-run groups are device slices
+    (a gather would be the identity).  Returns exact-length device columns,
+    bitwise-equal to the numpy reference ``np.concatenate`` of the same
+    slices followed by ``jnp.asarray``.
+    """
+    import jax.numpy as jnp
+
+    if not runs:
+        return {}
+    # group consecutive runs by provider identity
+    groups: List[Tuple[Mapping[str, Any], List[Tuple[int, int]]]] = []
+    for arrays, lo, hi in runs:
+        if hi <= lo:
+            continue
+        if groups and groups[-1][0] is arrays:
+            groups[-1][1].append((lo, hi))
+        else:
+            groups.append((arrays, [(lo, hi)]))
+    if not groups:
+        first = runs[0][0]
+        return {c: first[c][0:0] for c in columns}
+
+    out: Dict[str, Any] = {}
+    total_rows = 0
+    for c in columns:
+        parts = []
+        for arrays, bounds in groups:
+            src = arrays[c]
+            if len(bounds) == 1:
+                lo, hi = bounds[0]
+                parts.append(src[lo:hi])
+            else:
+                parts.append(_gather_runs(src, bounds, interpret, ledger))
+        col = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        out[c] = col
+        total_rows = int(col.shape[0])
+        _bump(ledger, "device_union_bytes", int(col.nbytes))
+    _bump(ledger, "device_unions")
+    _bump(ledger, "device_union_rows", total_rows)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device-aware table wrappers
+# ---------------------------------------------------------------------------
+
+class DeviceTable(Table):
+    """A host :class:`Table` carrying device-resident copies of (some of)
+    its columns.  The host columns stay authoritative; ``device_columns``
+    are advisory, bitwise-equal jax arrays a jax-runtime consumer uses to
+    skip the H2D conversion.  Views (``select``/``slice``/…) return plain
+    Tables — device association does not survive reshaping."""
+
+    __slots__ = ("device_columns",)
+
+    def __init__(self, host: Table, device_columns: Mapping[str, Any]):
+        super().__init__({n: host.column(n) for n in host.column_names})
+        self.device_columns = dict(device_columns)
+
+
+class DeviceChunkedTable(ChunkedTable):
+    """A :class:`ChunkedTable` whose *combined* columns are also resident on
+    device.  ``device_columns[c]`` equals ``jnp.asarray(self.column(c))``
+    bitwise (chunk concatenation order)."""
+
+    __slots__ = ("device_columns",)
+
+    def __init__(self, chunks, device_columns: Mapping[str, Any]):
+        super().__init__(chunks)
+        self.device_columns = dict(device_columns)
+
+    def select(self, names):
+        return DeviceChunkedTable(
+            [c.select(names) for c in self.chunks],
+            {n: self.device_columns[n] for n in names if n in self.device_columns},
+        )

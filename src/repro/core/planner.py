@@ -58,6 +58,12 @@ class ScanReport:
     residual_rows: int = 0  # rows fetched fresh from object storage
     bytes_from_spill: int = 0  # payload bytes promoted spill -> RAM for hits
     coalesced_waits: int = 0  # replans after subscribing to another's claim
+    # device-tier ledger (all zero on the numpy path)
+    bytes_h2d: int = 0  # host->device bytes this scan uploaded
+    device_hits: int = 0  # hit columns served from resident device pins
+    gather_fast: int = 0  # fragment_gather block-run fast-path calls
+    gather_fallbacks: int = 0  # non-RB-aligned gathers (RB=1 / XLA take)
+    device_union_bytes: int = 0  # output bytes assembled on device
 
     @property
     def bytes_processed(self) -> int:
@@ -96,6 +102,7 @@ class ScanExecutor:
         snapshot_id: Optional[str] = None,
         predicate: Optional[Predicate] = None,
         sorted_output: bool = False,
+        device_consumer: bool = False,
     ) -> ChunkedTable:
         meta = self.catalog.table(table)
         snapshot = (
@@ -106,6 +113,20 @@ class ScanExecutor:
         window = window if window is not None else IntervalSet.everything()
         scan = Scan(table, snapshot.snapshot_id, tuple(columns), window)
         phys = scan.physical_columns(meta.sort_key)
+        proj = [c for c in phys if c in scan.columns]
+
+        # device serving path: only when the consumer declared itself a jax
+        # node AND the cache carries a device tier AND this scan's output is
+        # the raw hit∪residual UNION (a post-predicate or a host sort would
+        # reshape rows after assembly — those scans stay on the numpy path)
+        tier = getattr(self.cache, "device", None)
+        use_device = (
+            device_consumer
+            and tier is not None
+            and predicate is None
+            and not sorted_output
+        )
+        dev_ledger: Dict[str, int] = {}
 
         # thread-local ledger: per-scan deltas stay exact when concurrent
         # runs (repro.service workers) share this object store
@@ -126,11 +147,18 @@ class ScanExecutor:
         try:
             while True:
                 chunks: List[Table] = []
+                # device union layout, mirrored 1:1 with `chunks`: each entry
+                # is (provider arrays, lo, hi) in final chunk order
+                dev_runs: List[Tuple] = []
+                dev_ok = use_device
                 bytes_from_cache = 0
                 wait_event = None
+                plan_kwargs = {"tenant": self.tenant}
+                if use_device:
+                    plan_kwargs["device_consumer"] = True
                 with self._lock:
                     plan = self.cache.plan(
-                        scan, snapshot, meta.sort_key, tenant=self.tenant
+                        scan, snapshot, meta.sort_key, **plan_kwargs
                     )
                     spill_bytes += plan.promoted_spill_bytes
                     if claimer is not None and not plan.residual.empty:
@@ -145,6 +173,23 @@ class ScanExecutor:
                             for v in views:
                                 bytes_from_cache += v.nbytes
                             chunks.extend(views)
+                            if dev_ok:
+                                # pin under the SAME lock the slices are
+                                # taken under: a concurrent merge drops the
+                                # element's pins the moment the plan stops
+                                # being the cache's current truth
+                                arrays = tier.pin_columns(
+                                    hit.element, proj, dev_ledger
+                                )
+                                if arrays is None:  # unsupported dtype/demoted
+                                    dev_ok = False
+                                    dev_runs = []
+                                else:
+                                    dev_runs.extend(
+                                        (arrays, lo, hi)
+                                        for _iv, lo, hi
+                                        in hit.element.window_runs(hit.window)
+                                    )
                 if wait_event is None:
                     break
                 waits += 1
@@ -157,14 +202,24 @@ class ScanExecutor:
                     self.store, snapshot, plan.residual, phys, meta.sort_key,
                     schema=meta.schema,
                 )
+                fresh_dev = None
+                if dev_ok and fresh.num_rows:
+                    fresh_dev = self._to_device(fresh, proj, dev_ledger)
+                    if fresh_dev is None:
+                        dev_ok = False
+                insert_kwargs = {"tenant": self.tenant}
+                if fresh_dev is not None:
+                    insert_kwargs["device_arrays"] = fresh_dev
                 with self._lock:
                     self.cache.insert(
                         scan, snapshot, meta.sort_key, plan.residual, fresh,
-                        tenant=self.tenant,
+                        **insert_kwargs,
                     )
                 if fresh.num_rows:
                     residual_rows = fresh.num_rows
                     chunks.append(fresh)
+                    if dev_ok:
+                        dev_runs.append((fresh_dev, 0, fresh.num_rows))
         finally:
             if claim is not None:
                 self.cache.release_residual(claim)
@@ -185,6 +240,11 @@ class ScanExecutor:
                 residual_rows=residual_rows,
                 bytes_from_spill=spill_bytes,
                 coalesced_waits=waits,
+                bytes_h2d=dev_ledger.get("bytes_h2d", 0) + plan.bytes_h2d,
+                device_hits=dev_ledger.get("device_hits", 0),
+                gather_fast=dev_ledger.get("gather_fast", 0),
+                gather_fallbacks=dev_ledger.get("gather_fallbacks", 0),
+                device_union_bytes=dev_ledger.get("device_union_bytes", 0),
             )
         )
 
@@ -196,8 +256,41 @@ class ScanExecutor:
         # key is not among the projections
         if sorted_output and out.chunks:
             out = ChunkedTable([out.combine().sort_by(meta.sort_key)])
-        proj = [c for c in phys if c in scan.columns]
-        return out.select(proj)
+        out = out.select(proj)
+        if dev_ok and dev_runs:
+            # assemble the UNION on device too: run layout mirrors the host
+            # chunk order exactly, so device_columns[c] is bitwise-equal to
+            # jnp.asarray(out.column(c)) — property-checked in test_device
+            from repro.core.device import DeviceChunkedTable, device_union
+
+            arrays = device_union(
+                dev_runs, proj, interpret=tier.interpret, ledger=dev_ledger
+            )
+            r = self.reports[-1]
+            r.gather_fast = dev_ledger.get("gather_fast", 0)
+            r.gather_fallbacks = dev_ledger.get("gather_fallbacks", 0)
+            r.device_union_bytes = dev_ledger.get("device_union_bytes", 0)
+            out = DeviceChunkedTable(out.chunks, arrays)
+        return out
+
+    @staticmethod
+    def _to_device(fresh: Table, columns: Sequence[str], ledger: Dict[str, int]):
+        """Upload a fresh residual's columns (the one H2D transfer the
+        residual ever pays: the arrays are handed to the cache insert so
+        future consumers — including post-merge ones — hit device).  None
+        when any column's dtype has no device analog."""
+        from repro.core.device import DeviceTier
+
+        if not all(DeviceTier.supported(fresh.column(c).dtype) for c in columns):
+            return None
+        import jax.numpy as jnp
+
+        out = {}
+        for c in columns:
+            arr = jnp.asarray(fresh.column(c))
+            ledger["bytes_h2d"] = ledger.get("bytes_h2d", 0) + int(arr.nbytes)
+            out[c] = arr
+        return out
 
     # -- accounting ----------------------------------------------------------
     def total_bytes_processed(self) -> int:

@@ -70,6 +70,7 @@ class SpillTier:
         # observability (surfaced through the owning store's stats())
         self.spills = 0
         self.promotions = 0
+        self.device_promotions = 0  # promotions that went straight to device
         self.bytes_spilled = 0
         self.bytes_promoted = 0
 
@@ -134,6 +135,19 @@ class SpillTier:
         tbl = read_ipc(self.store.local_path(entry.data_key), mmap=self.mmap)
         self.promotions += 1
         self.bytes_promoted += tbl.nbytes
+        return tbl
+
+    def load_to_device(self, entry: SpillEntry, elem: CacheElement, device) -> Table:
+        """Promote straight to the device tier: one pass over the mmap'd
+        column buffers uploads them (H2D) while the returned Table keeps the
+        usual zero-copy mmap views for the RAM tier.  With the plan's
+        consumer being a jax node, this is the single host-memory touch the
+        spilled payload ever pays — the serving path then reads the device
+        copy.  Unsupported dtypes simply stay host-only (``pin_table`` skips
+        them)."""
+        tbl = self.load(entry)
+        device.pin_table(elem.elem_id, tbl)
+        self.device_promotions += 1
         return tbl
 
     # -- GC ------------------------------------------------------------------

@@ -4,12 +4,20 @@ Converts a per-row index vector into the kernel's block-run form:
 if every RB-aligned group of indices is a contiguous run starting at an
 RB-aligned source row (the common case — fragments are contiguous row
 ranges), rows move in (RB, CB) tiles; otherwise falls back to RB=1
-(row-granular DMA, still lane-tiled in columns).
+(row-granular DMA, still lane-tiled in columns).  Fallback downgrades are
+counted in :data:`GATHER_STATS` so bench regressions are diagnosable
+(silent RB=1 gathers used to be indistinguishable from the fast path).
+
+The Pallas call itself is wrapped in a memoized ``jax.jit``: eager
+interpret mode replays the grid in Python (milliseconds per step), while
+the jitted interpreter runs it as one XLA loop — mandatory for using the
+kernel on the differential-cache serving path.
 """
 
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Optional
 
 import jax
@@ -18,7 +26,36 @@ import numpy as np
 
 from repro.kernels.fragment_gather.kernel import fragment_gather_call
 
-__all__ = ["fragment_gather"]
+__all__ = ["fragment_gather", "GATHER_STATS", "GatherStats"]
+
+
+class GatherStats:
+    """Process-wide gather path counters (thread-safe increments)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.calls = 0
+        self.fast_path = 0
+        self.fallbacks = 0  # RB=1 downgrades (non-block-aligned indices)
+
+    def count(self, fast: bool) -> None:
+        with self._lock:
+            self.calls += 1
+            if fast:
+                self.fast_path += 1
+            else:
+                self.fallbacks += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "calls": self.calls,
+                "fast_path": self.fast_path,
+                "fallbacks": self.fallbacks,
+            }
+
+
+GATHER_STATS = GatherStats()
 
 
 def _auto_interpret() -> bool:
@@ -35,6 +72,19 @@ def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+@functools.lru_cache(maxsize=256)
+def _compiled_call(row_block: int, col_block: int, out_rows: int, interpret: bool):
+    return jax.jit(
+        functools.partial(
+            fragment_gather_call,
+            row_block=row_block,
+            col_block=col_block,
+            out_rows=out_rows,
+            interpret=interpret,
+        )
+    )
+
+
 def fragment_gather(
     src: jax.Array,  # (Ns, C)
     row_idx,  # (R,) int — host-known fragment layout (numpy or list)
@@ -47,6 +97,17 @@ def fragment_gather(
     row_idx = np.asarray(row_idx, np.int32)
     R = int(row_idx.shape[0])
     Ns, C = src.shape
+    if R == 0:
+        return src[:0]
+    # every index must address a REAL source row: the wrapper pads src up to
+    # the tile multiple below, and an index into that padded tail would
+    # silently gather zeros into the UNION output
+    lo_i, hi_i = int(row_idx.min()), int(row_idx.max())
+    if lo_i < 0 or hi_i >= Ns:
+        raise IndexError(
+            f"row_idx out of range: [{lo_i}, {hi_i}] vs {Ns} source rows "
+            f"(indices into the tile-padded tail would leak zero rows)"
+        )
 
     # try RB-tiled: indices in each RB group contiguous AND tile-aligned
     rb = row_block
@@ -58,18 +119,12 @@ def fragment_gather(
         ok = bool(runs and aligned)
     if not ok:
         rb = 1
+    GATHER_STATS.count(fast=rb > 1)
 
     block_idx = jnp.asarray(row_idx.reshape(-1, rb)[:, 0] // rb, jnp.int32)
     out_rows = R if R % rb == 0 else R  # R % 1 == 0 always in fallback
 
     cb = min(col_block, C) if C >= 128 else C
     src_p = _pad_axis(_pad_axis(src, 0, rb), 1, cb)
-    out = fragment_gather_call(
-        src_p,
-        block_idx,
-        row_block=rb,
-        col_block=cb,
-        out_rows=out_rows,
-        interpret=interpret,
-    )
+    out = _compiled_call(rb, cb, out_rows, interpret)(src_p, block_idx)
     return out[:R, :C]

@@ -94,6 +94,14 @@ class RunResult:
     # because it subscribed to another run's in-flight claim
     bytes_from_spill: int = 0
     coalesced_waits: int = 0
+    # device-tier ledger (all zero without a device tier / on numpy paths)
+    bytes_h2d: int = 0  # host->device bytes this run uploaded
+    bytes_d2h: int = 0  # device->host bytes (jax fn outputs landing back)
+    device_hits: int = 0  # columns/pins served from resident device arrays
+    device_evictions: int = 0  # tier entries LRU-demoted during this run
+    gather_fast: int = 0  # fragment_gather block-run fast-path calls
+    gather_fallbacks: int = 0  # non-RB-aligned gathers (RB=1 / XLA take)
+    device_union_bytes: int = 0  # output bytes assembled on device
 
 
 class Workspace:
@@ -114,6 +122,7 @@ class Workspace:
         tenant: Optional[str] = None,
         enforce_scopes: bool = False,
         strict_contracts: bool = True,
+        device: Optional[Any] = None,
     ):
         # every collaborator is injectable so repro.service can hand many
         # tenant workspaces ONE object store, ONE catalog, ONE scan cache and
@@ -153,6 +162,29 @@ class Workspace:
             else DifferentialStore(max_bytes=model_cache_bytes)
         )
         self._model_lock = self.model_store.lock
+        # device tier (repro.core.device.DeviceTier): pass an instance, or
+        # ``device=True`` for a default-budget tier.  One tier backs BOTH
+        # caches so scan hits and model-output hits share the byte budget.
+        # An injected store that already carries a tier keeps it (service:
+        # many tenant workspaces over one device), and this workspace adopts
+        # it so its executors see the same ledger.
+        if device is True:
+            from repro.core.device import DeviceTier
+
+            device = DeviceTier()
+        self.device = device
+        if self.device is not None:
+            if (
+                isinstance(self.scans.cache, DifferentialStore)
+                and self.scans.cache.device is None
+            ):
+                self.scans.cache.device = self.device
+            if self.model_store.device is None:
+                self.model_store.device = self.device
+        else:
+            self.device = getattr(self.model_store, "device", None) or getattr(
+                self.scans.cache, "device", None
+            )
         self.tenant = tenant
         # plan-time scope enforcement (repro.analysis): reject any plan
         # whose scans request columns outside the consumer's verified or
@@ -195,6 +227,9 @@ class Workspace:
         ledger = self.store.thread_stats()
         before = ledger.snapshot()
         reports_before = len(self.scans.reports)
+        dev_evictions_before = (
+            self.device.device_evictions if self.device is not None else 0
+        )
         # liveness tick: a shared store reclaims signatures no plan has
         # referenced for N runs (plain stores have no such hook).  The scan
         # cache ticks too — its "signatures" are table names, so tables no
@@ -257,6 +292,26 @@ class Workspace:
                 s.get("coalesced_waits", 0) for s in node_stats.values()
             )
             + sum(r.coalesced_waits for r in scan_reports),
+            bytes_h2d=sum(s.get("bytes_h2d", 0) for s in node_stats.values())
+            + sum(r.bytes_h2d for r in scan_reports),
+            bytes_d2h=sum(s.get("bytes_d2h", 0) for s in node_stats.values()),
+            device_hits=sum(s.get("device_hits", 0) for s in node_stats.values())
+            + sum(r.device_hits for r in scan_reports),
+            device_evictions=(
+                self.device.device_evictions - dev_evictions_before
+                if self.device is not None
+                else 0
+            ),
+            gather_fast=sum(s.get("gather_fast", 0) for s in node_stats.values())
+            + sum(r.gather_fast for r in scan_reports),
+            gather_fallbacks=sum(
+                s.get("gather_fallbacks", 0) for s in node_stats.values()
+            )
+            + sum(r.gather_fallbacks for r in scan_reports),
+            device_union_bytes=sum(
+                s.get("device_union_bytes", 0) for s in node_stats.values()
+            )
+            + sum(r.device_union_bytes for r in scan_reports),
         )
 
     # -- plan-time scope enforcement ------------------------------------------
@@ -304,6 +359,7 @@ class Workspace:
         s: SystemScanStep,
         window: Optional[IntervalSet] = None,
         pins: Optional[Dict[str, str]] = None,
+        device_consumer: bool = False,
     ) -> ChunkedTable:
         meta = self.catalog.table(s.table)
         parsed = parse_filter(s.predicate_filter, meta.sort_key)
@@ -316,6 +372,7 @@ class Workspace:
             window=window if window is not None else s.window,
             snapshot_id=snapshot_id,
             predicate=parsed.predicate_fn(),
+            device_consumer=device_consumer,
         )
 
     def _run_full(
@@ -328,14 +385,20 @@ class Workspace:
     ) -> Tuple[Table, Dict[str, int]]:
         kwargs: Dict[str, Any] = {}
         rows = 0
+        use_device = self.device is not None and step.runtime == "jax"
         for arg, (kind, ref) in step.bindings:
             if kind == "scan":
-                kwargs[arg] = self._exec_scan(plan.scans[ref], pins=pins)
+                kwargs[arg] = self._exec_scan(
+                    plan.scans[ref], pins=pins, device_consumer=use_device
+                )
             else:
                 kwargs[arg] = results[ref]
             rows += kwargs[arg].num_rows
-        out = _invoke(fn, step.runtime, kwargs)
-        return out, {"fresh_rows": rows, "cached_rows": 0, "model_cache_bytes": 0}
+        dev_ledger: Dict[str, int] = {}
+        out = _invoke(fn, step.runtime, kwargs, dev_ledger)
+        stats = {"fresh_rows": rows, "cached_rows": 0, "model_cache_bytes": 0}
+        stats.update(dev_ledger)
+        return out, stats
 
     # -- node execution: differential (incremental="rowwise"/"keyed") --------
     def _leaf_snapshot(
@@ -481,10 +544,23 @@ class Workspace:
         # triggered are still this run's doing (the elements stay resident
         # for the final plan, which then reports 0 for them)
         spill_bytes = 0
+        # device serving: a jax-runtime node consumes the hit∪residual UNION
+        # as device arrays (fragment_gather assembly), skipping the H2D copy
+        # its _invoke would otherwise pay.  Bails to numpy whenever any hit
+        # column has no device analog.
+        tier = self.device
+        use_device = tier is not None and step.runtime == "jax"
+        dev_ledger: Dict[str, int] = {}
+        dev_h2d_plans = 0  # spill→device straight-promotion bytes (from plans)
         try:
             with read_pin:
                 while True:
                     hit_chunks: List[Table] = []
+                    # (window lo, provider arrays, row lo, row hi) — rebuilt
+                    # every replan round, the discarded round's plan is no
+                    # longer the store's truth
+                    dev_runs: List[Tuple] = []
+                    dev_ok = use_device
                     cached_rows = 0
                     cache_bytes = 0
                     wait_event = None
@@ -501,6 +577,7 @@ class Workspace:
                             cost_fn=lambda w: w.measure(),
                             usable_fn=usable_fn,
                             tenant=self.tenant,
+                            device_consumer=use_device,
                         )
                         if claimer is not None and not mplan.residual.empty:
                             claim, wait_event = claimer(
@@ -510,6 +587,7 @@ class Workspace:
                                 kind=step.incremental,
                             )
                         spill_bytes += mplan.promoted_spill_bytes
+                        dev_h2d_plans += mplan.bytes_h2d
                         if wait_event is None:
                             for hit in mplan.hits:
                                 for view in hit.element.slice_window(
@@ -518,6 +596,24 @@ class Workspace:
                                     hit_chunks.append(view)
                                     cached_rows += view.num_rows
                                     cache_bytes += view.nbytes
+                                if dev_ok:
+                                    # pin under the SAME lock the views are
+                                    # taken under — a merge after release
+                                    # drops this element's pins
+                                    arrays = tier.pin_columns(
+                                        hit.element,
+                                        hit.element.columns,
+                                        dev_ledger,
+                                    )
+                                    if arrays is None:
+                                        dev_ok = False
+                                        dev_runs = []
+                                    else:
+                                        dev_runs.extend(
+                                            (iv.lo, arrays, lo, hi)
+                                            for iv, lo, hi
+                                            in hit.element.window_runs(hit.window)
+                                        )
                     if wait_event is None:
                         break
                     # another run is computing an overlapping residual: wait
@@ -538,14 +634,23 @@ class Workspace:
                         fresh = hit_chunks[0].slice(0, 0)
                     else:
                         fresh_rows = total_in
-                        out = _invoke(fn, step.runtime, kwargs)
+                        out = _invoke(fn, step.runtime, kwargs, dev_ledger)
                         fresh = self._windowed_output(step, kwargs, out)
+                    fresh_dev = None
+                    if dev_ok and fresh.num_rows:
+                        fresh_dev = _fresh_to_device(fresh, dev_ledger)
+                        if fresh_dev is None:
+                            dev_ok = False
                     if len(snapshots) == 1:
                         (only_snap,) = snapshots.values()
                         pins = pins_for(only_snap, mplan.residual)
                     else:
                         pins = multi_pins_for(snapshots, mplan.residual)
                     with self._model_lock:
+                        # handing the fresh device arrays to the insert lets
+                        # the store's merge replicate device→device — warm
+                        # runs then upload only the residual, never the
+                        # merged payload
                         self.model_store.insert_window(
                             signature=step.signature,
                             table=step.leaf_table,
@@ -555,7 +660,18 @@ class Workspace:
                             pins=pins,
                             usable_fn=usable_fn,
                             tenant=self.tenant,
+                            device_arrays=fresh_dev,
                         )
+                    if dev_ok and fresh_dev is not None:
+                        # fresh rows interleave with hit windows in key
+                        # order: one run per residual interval, like the
+                        # host path's post-concat stable sort
+                        keys = np.asarray(fresh.column(step.sort_key))
+                        for iv in mplan.residual:
+                            lo = int(np.searchsorted(keys, iv.lo, side="left"))
+                            hi = int(np.searchsorted(keys, iv.hi, side="left"))
+                            if hi > lo:
+                                dev_runs.append((iv.lo, fresh_dev, lo, hi))
         finally:
             if claim is not None:
                 self.model_store.release_residual(claim)
@@ -568,13 +684,32 @@ class Workspace:
             out_tbl = assembled.chunks[0]
         else:
             out_tbl = assembled.combine().sort_by(step.sort_key)
-        return out_tbl, {
+        if dev_ok and dev_runs and out_tbl.num_rows:
+            # assemble the same UNION on device: hit/residual windows are
+            # disjoint and each run is internally key-sorted, so runs ordered
+            # by window lo ARE the host stable sort's output — bitwise
+            # (device_columns[c] == jnp.asarray(out_tbl.column(c)))
+            from repro.core.device import DeviceTable, device_union
+
+            dev_runs.sort(key=lambda r: r[0])
+            arrays = device_union(
+                [(prov, lo, hi) for _key, prov, lo, hi in dev_runs],
+                list(out_tbl.column_names),
+                interpret=tier.interpret,
+                ledger=dev_ledger,
+            )
+            out_tbl = DeviceTable(out_tbl, arrays)
+        stats = {
             "fresh_rows": fresh_rows,
             "cached_rows": cached_rows,
             "model_cache_bytes": cache_bytes,
             "bytes_from_spill": spill_bytes,
             "coalesced_waits": waits,
         }
+        stats.update(dev_ledger)
+        if dev_h2d_plans:
+            stats["bytes_h2d"] = stats.get("bytes_h2d", 0) + dev_h2d_plans
+        return out_tbl, stats
 
     def _windowed_output(
         self, step: UserFnStep, inputs: Dict[str, Table], out: Table
@@ -854,7 +989,38 @@ def _to_table(value: Any) -> Table:
     raise TypeError(f"model must return Table/ChunkedTable/dict, got {type(value)}")
 
 
-def _invoke(fn: Callable, runtime: str, kwargs: Dict[str, Any]) -> Table:
+def _fresh_to_device(
+    fresh: Table, ledger: Optional[Dict[str, int]] = None
+) -> Optional[Dict[str, Any]]:
+    """Upload every column of a fresh residual (the one H2D transfer its
+    bytes ever pay — the arrays go to the cache insert, so future consumers
+    and post-merge elements serve from device).  None when any column's
+    dtype has no device analog."""
+    from repro.core.device import DeviceTier
+
+    if not all(
+        DeviceTier.supported(fresh.column(c).dtype) for c in fresh.column_names
+    ):
+        return None
+    import jax.numpy as jnp
+
+    out: Dict[str, Any] = {}
+    h2d = 0
+    for c in fresh.column_names:
+        arr = jnp.asarray(fresh.column(c))
+        h2d += int(arr.nbytes)
+        out[c] = arr
+    if ledger is not None:
+        ledger["bytes_h2d"] = ledger.get("bytes_h2d", 0) + h2d
+    return out
+
+
+def _invoke(
+    fn: Callable,
+    runtime: str,
+    kwargs: Dict[str, Any],
+    ledger: Optional[Dict[str, int]] = None,
+) -> Table:
     if runtime == "numpy":
         prepared = {
             k: (v.combine() if isinstance(v, ChunkedTable) else v)
@@ -864,14 +1030,39 @@ def _invoke(fn: Callable, runtime: str, kwargs: Dict[str, Any]) -> Table:
     if runtime == "jax":
         import jax.numpy as jnp
 
+        def _count(key: str, by: int) -> None:
+            if ledger is not None:
+                ledger[key] = ledger.get(key, 0) + by
+
         prepared = {}
         for k, v in kwargs.items():
-            tbl = v.combine() if isinstance(v, ChunkedTable) else v
-            prepared[k] = {name: jnp.asarray(tbl.column(name)) for name in tbl.column_names}
+            # device-resident inputs (DeviceTable / DeviceChunkedTable) hand
+            # their columns straight to the fn — zero host round-trips; any
+            # column without a device copy falls back to the H2D conversion
+            devcols = getattr(v, "device_columns", None) or {}
+            names = v.column_names
+            cols: Dict[str, Any] = {}
+            host = None
+            for name in names:
+                arr = devcols.get(name)
+                if arr is not None:
+                    _count("device_hits", 1)
+                else:
+                    if host is None:
+                        host = v.combine() if isinstance(v, ChunkedTable) else v
+                    arr = jnp.asarray(host.column(name))
+                    _count("bytes_h2d", int(arr.nbytes))
+                cols[name] = arr
+            prepared[k] = cols
         out = fn(**prepared)
         if not isinstance(out, dict):
             raise TypeError("jax models must return {column: jnp.ndarray}")
-        return Table({k: np.asarray(v) for k, v in out.items()})
+        host_out = {}
+        for k, v in out.items():
+            arr = np.asarray(v)
+            _count("bytes_d2h", int(arr.nbytes))
+            host_out[k] = arr
+        return Table(host_out)
     raise ValueError(f"unknown runtime {runtime!r}")
 
 

@@ -97,6 +97,7 @@ class SharedStore(DifferentialStore):
         spill: Optional[SpillTier] = None,
         spill_root: Optional[str] = None,
         coalesce: bool = True,
+        device=None,
     ):
         # spill_root is the standalone convenience: a directory-backed
         # object store owned by this SharedStore.  Services pass `spill`
@@ -104,7 +105,7 @@ class SharedStore(DifferentialStore):
         # same ledger as everything else.
         if spill is None and spill_root is not None:
             spill = SpillTier(ObjectStore(spill_root))
-        super().__init__(max_bytes=max_bytes, spill=spill)
+        super().__init__(max_bytes=max_bytes, spill=spill, device=device)
         self.liveness_runs = liveness_runs
         self.tenant_quota_bytes = tenant_quota_bytes
         self.coalesce = coalesce
@@ -236,11 +237,18 @@ class SharedStore(DifferentialStore):
         cost_fn: Callable[[IntervalSet], int],
         usable_fn: Optional[UsableFn] = None,
         tenant: Optional[str] = None,
+        device_consumer: bool = False,
     ) -> CachePlan:
         with self.lock:
             self._last_seen[signature] = self.run_seq
             plan = super().plan_window(
-                signature, window, columns, cost_fn, usable_fn, tenant=tenant
+                signature,
+                window,
+                columns,
+                cost_fn,
+                usable_fn,
+                tenant=tenant,
+                device_consumer=device_consumer,
             )
             if tenant is not None:
                 for hit in plan.hits:
@@ -271,11 +279,20 @@ class SharedStore(DifferentialStore):
         pins: Tuple = (),
         usable_fn: Optional[UsableFn] = None,
         tenant: Optional[str] = None,
+        device_arrays: Optional[Dict] = None,
     ) -> Optional[CacheElement]:
         with self.lock:
             self._last_seen[signature] = self.run_seq
             elem = super().insert_window(
-                signature, table, sort_key, window, data, pins, usable_fn, tenant=tenant
+                signature,
+                table,
+                sort_key,
+                window,
+                data,
+                pins,
+                usable_fn,
+                tenant=tenant,
+                device_arrays=device_arrays,
             )
             self._enforce_tenant_quota(tenant)
             return elem
@@ -309,6 +326,20 @@ class SharedStore(DifferentialStore):
                 "cross_tenant_rows": self.cross_tenant_rows,
                 "coalesced_waits": self.coalesced_waits,
                 "tenant_bytes": dict(sorted(per_tenant.items())),
+                # device tier (zeros when no tier is attached)
+                **(
+                    self.device.stats()
+                    if self.device is not None
+                    else {
+                        "device_nbytes": 0,
+                        "device_entries": 0,
+                        "bytes_h2d": 0,
+                        "device_hits": 0,
+                        "device_evictions": 0,
+                        "device_pins": 0,
+                        "bytes_replicated": 0,
+                    }
+                ),
             }
 
     # -- eviction ------------------------------------------------------------

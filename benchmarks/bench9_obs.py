@@ -1,0 +1,264 @@
+"""BENCH_9: observability overhead + cache-decision explainer accuracy.
+
+Two gates:
+
+- **tracing+metrics overhead** — the always-on observability layers
+  (structured spans on the plan/wait/residual/insert/union hot path, plus
+  the metrics registry every ledger is derived from) must cost ≤5% wall
+  time on the BENCH_3 warm edit loop (window edits, an upstream append, a
+  feature add, a code edit).  Identically-seeded workspaces replay the same
+  edit passes, one with the tracer enabled and one with ``Tracer(enabled=
+  False)`` (the registry itself is never optional: report fields are
+  *derived* from it, so it is on in both and its cost is part of the
+  baseline by construction); the configurations run in lockstep *per edit*
+  — a few hundred microseconds apart, so clock-frequency and thermal drift
+  hit both sides equally — with the order alternating every edit and every
+  rep, runs timed individually (catalog fsync jitter stays out of the
+  comparison), and the gate compares per-edit minima summed across the
+  loop so a stray GC pause cannot flip it.  A shadow workspace replays
+  each edit first, untimed, to absorb process-global XLA compiles for
+  never-seen residual shapes.
+- **explainer accuracy** — ``repro.explain``'s 11-edit matrix (cold, rerun,
+  widen, narrow, beyond-data, feature add/remove, append, overwrite, code
+  edit, snapshot travel) must diagnose the injected cause for every edit:
+  11/11.
+
+The cause classifier's cost is measured the same way and reported as
+``explain_overhead_pct`` (informational, not gated — its per-run decision
+events do real diagnostic work on recompute paths and are judged on
+accuracy, not wall time).
+
+Emits ``BENCH_9.json`` with all measurements plus a span-count summary of
+the traced side.  ``--check`` exits non-zero when either gate fails — the
+CI smoke step.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench9_obs [--rows N] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+from benchmarks.workloads import iteration_edits, iteration_project, write_events
+
+__all__ = ["run", "format_table", "OUT_PATH"]
+
+OUT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "bench", "BENCH_9.json"
+)
+
+
+def _workspace(root: str, rows: int, trace: bool, explain: bool):
+    from repro.obs import Explainer, Tracer
+    from repro.pipeline.executor import Workspace
+
+    ws = Workspace(
+        root,
+        rows_per_fragment=2048,
+        tracer=Tracer(enabled=trace),
+        explainer=Explainer(enabled=explain),
+    )
+    write_events(ws.catalog, rows)
+    return ws
+
+
+def _edit_pass(ws, edits) -> List[float]:
+    """One pass over the edit loop; returns per-run wall seconds.  Catalog
+    mutations happen between timings — their fsync jitter has nothing to do
+    with observability and would otherwise dominate the comparison."""
+    times = []
+    for _label, kwargs, mutate in edits:
+        if mutate is not None:
+            mutate(ws.catalog)
+        project = iteration_project(**kwargs)
+        t0 = time.perf_counter()
+        ws.run(project)
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def run(rows: int = 20_000, reps: int = 7) -> Dict:
+    # the timed pass is the full BENCH_3 edit loop — window edits, an
+    # upstream append, a feature add, and a code edit — i.e. the warm
+    # iteration workload the paper targets, not a zero-copy serve microloop.
+    # Passes mutate the catalog, so per-pass cost drifts as appends
+    # accumulate; every workspace replays the SAME history, which keeps
+    # each timing an apples-to-apples tuple.
+    edits = iteration_edits(rows)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # the shadow workspace replays every edit FIRST, untimed: the jax
+        # stage's XLA compile cache is process-global and keyed by shape, and
+        # each pass's append creates never-seen residual shapes — without the
+        # shadow, whichever timed side runs first eats a ~40ms compile that
+        # has nothing to do with observability
+        ws_shadow = _workspace(
+            os.path.join(tmp, "shadow"), rows, trace=False, explain=False
+        )
+        ws_off = _workspace(
+            os.path.join(tmp, "off"), rows, trace=False, explain=False
+        )
+        ws_trace = _workspace(
+            os.path.join(tmp, "trace"), rows, trace=True, explain=False
+        )
+        ws_full = _workspace(
+            os.path.join(tmp, "full"), rows, trace=True, explain=True
+        )
+        timed = [("off", ws_off), ("trace", ws_trace), ("full", ws_full)]
+        # untimed warm-up pass fills every cache (the cold fill is the same
+        # work in every configuration and not what the gate is about)
+        _edit_pass(ws_shadow, edits)
+        for _name, ws in timed:
+            _edit_pass(ws, edits)
+        runs: Dict[str, List[List[float]]] = {name: [] for name, _ in timed}
+        for i in range(reps):
+            # a deployed service exports and drops its trace every scrape
+            # interval; model that here so retained span trees don't turn
+            # the later reps into a GC benchmark (the summary below then
+            # covers the final rep's pass)
+            ws_trace.tracer.clear()
+            ws_full.tracer.clear()
+            gc.collect()
+            rep_times: Dict[str, List[float]] = {name: [] for name, _ in timed}
+            for j, (_label, kwargs, mutate) in enumerate(edits):
+                # lockstep per edit: the three configurations run the same
+                # edit within a few hundred microseconds of each other, so
+                # clock-frequency and thermal drift cannot bias one side
+                if mutate is not None:
+                    mutate(ws_shadow.catalog)
+                ws_shadow.run(iteration_project(**kwargs))
+                order = timed if (i + j) % 2 else timed[::-1]
+                for name, ws in order:
+                    if mutate is not None:
+                        mutate(ws.catalog)
+                    project = iteration_project(**kwargs)
+                    t0 = time.perf_counter()
+                    ws.run(project)
+                    rep_times[name].append(time.perf_counter() - t0)
+            for name, _ws in timed:
+                runs[name].append(rep_times[name])
+        trace_summary = {
+            name: {"count": int(agg["count"]), "total_ms": round(agg["total_s"] * 1e3, 3)}
+            for name, agg in sorted(ws_full.tracer.summary().items())
+        }
+        metrics_sample = {
+            "cache_lookups": int(ws_full.metrics.total("cache_lookups")),
+            "cache_hit_bytes": int(ws_full.metrics.total("cache_hit_bytes")),
+            "residual_rows": int(ws_full.metrics.total("residual_rows")),
+            "runs_total": int(ws_full.metrics.total("runs_total")),
+        }
+
+        # explainer accuracy: the canonical 11-edit matrix
+        from repro.explain import edit_matrix_demo
+
+        matrix = [
+            {"label": label, "expected": expected, "got": got}
+            for label, expected, got, _res in edit_matrix_demo(
+                os.path.join(tmp, "explain")
+            )
+        ]
+
+    # per-edit min composite: for every edit position take the fastest rep,
+    # then sum — each component's minimum sheds its own GC/allocator spikes,
+    # which a whole-pass comparison cannot (one spike anywhere taints it)
+    composite = {
+        name: sum(min(rep[j] for rep in reps_) for j in range(len(edits)))
+        for name, reps_ in runs.items()
+    }
+    overhead_pct = (composite["trace"] / composite["off"] - 1.0) * 100.0
+    explain_pct = (composite["full"] / composite["off"] - 1.0) * 100.0
+    correct = sum(m["expected"] == m["got"] for m in matrix)
+    return {
+        "workload": "observability",
+        "rows": rows,
+        "reps": reps,
+        "warm_passes": {
+            "runs_per_pass": len(edits),
+            "pass_s": {
+                name: [round(sum(r), 6) for r in reps_]
+                for name, reps_ in runs.items()
+            },
+        },
+        "overhead": {
+            "baseline_s": round(composite["off"], 6),
+            "trace_s": round(composite["trace"], 6),
+            "full_s": round(composite["full"], 6),
+            "overhead_pct": round(overhead_pct, 2),
+            "explain_overhead_pct": round(explain_pct, 2),
+        },
+        "explainer": {"matrix": matrix, "correct": correct, "total": len(matrix)},
+        "trace": trace_summary,
+        "metrics": metrics_sample,
+    }
+
+
+def format_table(result: Dict) -> str:
+    o, e = result["overhead"], result["explainer"]
+    lines = [
+        "| edit | expected cause | diagnosed |",
+        "|---|---|---|",
+    ]
+    for m in e["matrix"]:
+        mark = "" if m["got"] == m["expected"] else "  <-- MISMATCH"
+        lines.append(f"| {m['label']} | {m['expected']} | {m['got']}{mark} |")
+    lines.append(
+        f"\nexplainer: {e['correct']}/{e['total']} causes diagnosed correctly"
+    )
+    lines.append(
+        f"warm edit loop ({result['warm_passes']['runs_per_pass']} edits/pass, "
+        f"per-edit min over {result['reps']} reps): baseline "
+        f"{o['baseline_s'] * 1e3:.1f} ms, tracing+metrics {o['trace_s'] * 1e3:.1f} ms "
+        f"-> overhead {o['overhead_pct']:+.2f}% (gate <=5%); +explainer "
+        f"{o['full_s'] * 1e3:.1f} ms ({o['explain_overhead_pct']:+.2f}%, informational)"
+    )
+    spans = result["trace"]
+    total_spans = sum(v["count"] for v in spans.values())
+    lines.append(
+        f"trace: {total_spans} spans across {len(spans)} names "
+        f"(top: {', '.join(sorted(spans, key=lambda n: -spans[n]['count'])[:4])})"
+    )
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--reps", type=int, default=7)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="exit non-zero unless overhead <= 5%% and the explainer "
+        "diagnoses all 11 edits correctly",
+    )
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    result = run(rows=args.rows, reps=args.reps)
+    print(format_table(result))
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"\nartifact -> {os.path.abspath(args.out)}")
+    if args.check:
+        o, e = result["overhead"], result["explainer"]
+        ok = o["overhead_pct"] <= 5.0 and e["correct"] == e["total"]
+        if not ok:
+            print(
+                f"FAIL: overhead {o['overhead_pct']:+.2f}% (need <=5%), "
+                f"explainer {e['correct']}/{e['total']} (need all)"
+            )
+            return 1
+        print(
+            f"OK: obs overhead {o['overhead_pct']:+.2f}% <= 5%, explainer "
+            f"{e['correct']}/{e['total']}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

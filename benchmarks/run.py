@@ -118,6 +118,20 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_8.json"), "w") as f:
         json.dump(r8, f, indent=1)
 
+    _section("BENCH 9 — observability: tracing+metrics overhead, explainer accuracy")
+    from benchmarks import bench9_obs as b9
+
+    r9 = b9.run(rows=20_000 if not args.full else 200_000)
+    print(b9.format_table(r9))
+    artifacts["bench9"] = {
+        "overhead_pct": r9["overhead"]["overhead_pct"],
+        "explain_overhead_pct": r9["overhead"]["explain_overhead_pct"],
+        "explainer_correct": r9["explainer"]["correct"],
+        "explainer_total": r9["explainer"]["total"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_9.json"), "w") as f:
+        json.dump(r9, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

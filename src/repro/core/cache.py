@@ -49,6 +49,8 @@ import numpy as np
 from repro.core.columnar import Table, concat_tables
 from repro.core.intervals import Interval, IntervalSet
 from repro.core.scan import Scan, scan_cost_bytes
+from repro.obs.metrics import MetricAttr, Metrics
+from repro.obs.trace import Tracer, get_tracer
 
 if TYPE_CHECKING:  # annotation-only: a runtime import would close the
     # lake -> fragments -> core -> ... -> lake.catalog package cycle
@@ -308,14 +310,52 @@ class DifferentialStore:
     spill root starts warm (the tier rebuilds the index from manifests).
     """
 
-    def __init__(self, max_bytes: Optional[int] = None, spill=None, device=None):
+    # observability counters (surface in benchmarks / EXPERIMENTS.md).
+    # Each is a registry-backed attribute: ``self.lookups += 1`` call sites
+    # and ``stats()`` readers are unchanged, but the values live in the
+    # store's Metrics registry — the single source of truth a service
+    # scrape (``ServiceReport.metrics_text()``) reads.
+    lookups = MetricAttr("cache_lookups")
+    full_hits = MetricAttr("cache_full_hits")
+    partial_hits = MetricAttr("cache_partial_hits")
+    evictions = MetricAttr("cache_evictions")
+    demotions = MetricAttr("cache_demotions")
+    promotions = MetricAttr("cache_promotions")
+    # cumulative payload bytes promoted from spill = hit bytes served by
+    # the spill tier (the RAM-tier analog is emitted by the executors)
+    bytes_from_spill = MetricAttr("cache_hit_bytes", tier="spill")
+    spill_restored = MetricAttr("spill_restored")
+
+    def __init__(
+        self,
+        max_bytes: Optional[int] = None,
+        spill=None,
+        device=None,
+        metrics: Optional[Metrics] = None,
+        metrics_labels: Optional[Dict[str, str]] = None,
+        tracer: Optional[Tracer] = None,
+    ):
         self.max_bytes = max_bytes
         self.spill = spill
+        # obs wiring must precede any counter use below
+        self.metrics = metrics if metrics is not None else Metrics()
+        self.metrics_labels = dict(metrics_labels or {})
+        self.tracer = tracer if tracer is not None else get_tracer()
+        if spill is not None:
+            # adopt the tier into this store's registry/tracer (unless it
+            # was wired explicitly) so one scrape covers both tiers
+            if spill._metrics is None:
+                spill._metrics = self.metrics
+                spill.metrics_labels = dict(self.metrics_labels)
+            if spill._tracer is None:
+                spill._tracer = self.tracer
         # optional device tier (repro.core.device.DeviceTier): an advisory
         # cache of element columns as jax device arrays.  The RAM tier stays
         # authoritative; the device copy exists so jax consumers skip the
         # H2D transfer.  Set here or attached later (Workspace/service).
         self.device = device
+        if device is not None:
+            device.adopt_obs(self.metrics, self.tracer)
         self._elements: Dict[Hashable, List[CacheElement]] = {}
         self._clock = 0
         # The store's concurrency discipline lives HERE, not in its callers:
@@ -324,15 +364,6 @@ class DifferentialStore:
         # store serialize correctly.  Reentrant because service-layer
         # subclasses compose base operations while already holding it.
         self.lock = threading.RLock()
-        # observability counters (surface in benchmarks / EXPERIMENTS.md)
-        self.lookups = 0
-        self.full_hits = 0
-        self.partial_hits = 0
-        self.evictions = 0
-        self.demotions = 0
-        self.promotions = 0
-        self.bytes_from_spill = 0  # cumulative payload bytes promoted
-        self.spill_restored = 0
         if spill is not None:
             for elem in spill.restore():
                 self._elements.setdefault(elem.signature, []).append(elem)
@@ -573,6 +604,14 @@ class DifferentialStore:
         return False
 
     def _merge_pair(
+        self, a: CacheElement, b: CacheElement, usable_fn: Optional[UsableFn]
+    ) -> CacheElement:
+        with self.tracer.span("cache.merge", signature=str(a.signature)[:16]) as sp:
+            out = self._merge_pair_inner(a, b, usable_fn)
+            sp.attrs["bytes"] = out.nbytes
+        return out
+
+    def _merge_pair_inner(
         self, a: CacheElement, b: CacheElement, usable_fn: Optional[UsableFn]
     ) -> CacheElement:
         # The two sides may have been assembled under DIFFERENT snapshots, so

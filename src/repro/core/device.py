@@ -44,6 +44,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.columnar import ChunkedTable, Table
+from repro.obs.metrics import MetricAttr, Metrics
+from repro.obs.trace import Tracer, get_tracer
 
 __all__ = [
     "ROW_BLOCK",
@@ -98,6 +100,14 @@ class DeviceTier:
     kernel wrapper's convention); tests force ``interpret=True``.
     """
 
+    # ledger (surfaced through SharedStore.stats() / ScanReport / RunResult);
+    # registry-backed — see DifferentialStore's counters
+    bytes_h2d = MetricAttr("device_bytes_h2d")  # host→device bytes uploaded by pins
+    device_hits = MetricAttr("device_hits")  # pin/get requests served resident
+    device_evictions = MetricAttr("device_evictions")  # LRU-demoted entries
+    pins = MetricAttr("device_pins")  # entries uploaded (misses)
+    bytes_replicated = MetricAttr("device_bytes_replicated")  # d2d merge bytes
+
     def __init__(
         self, max_bytes: Optional[int] = None, interpret: Optional[bool] = None
     ):
@@ -107,12 +117,28 @@ class DeviceTier:
         self._entries: Dict[Tuple[int, str], _DeviceEntry] = {}
         self._by_elem: Dict[int, set] = {}
         self._clock = 0
-        # ledger (surfaced through SharedStore.stats() / ScanReport / RunResult)
-        self.bytes_h2d = 0  # host→device bytes uploaded by pins
-        self.device_hits = 0  # pin/get requests served from a resident entry
-        self.device_evictions = 0  # entries LRU-demoted back to the RAM tier
-        self.pins = 0  # entries uploaded (misses)
-        self.bytes_replicated = 0  # device→device bytes built by merge replication
+        self._metrics: Optional[Metrics] = None
+        self._tracer: Optional[Tracer] = None
+        self.metrics_labels: Dict[str, str] = {}
+
+    @property
+    def metrics(self) -> Metrics:
+        if self._metrics is None:
+            self._metrics = Metrics()
+        return self._metrics
+
+    @property
+    def tracer(self) -> Tracer:
+        return self._tracer if self._tracer is not None else get_tracer()
+
+    def adopt_obs(self, metrics: Metrics, tracer: Tracer) -> None:
+        """Join an owner's registry/tracer.  One tier often backs both the
+        scan cache and the model store — the first owner wins, so the tier's
+        counters land in exactly one registry."""
+        if self._metrics is None:
+            self._metrics = metrics
+        if self._tracer is None:
+            self._tracer = tracer
 
     # -- inspection ----------------------------------------------------------
     @property
@@ -175,8 +201,10 @@ class DeviceTier:
             return None
         import jax.numpy as jnp
 
-        arr = _pad_rows(jnp.asarray(col))
-        h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
+        with self.tracer.span("device.h2d", elem=elem.elem_id, column=column) as sp:
+            arr = _pad_rows(jnp.asarray(col))
+            h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
+            sp.attrs["bytes"] = h2d
         return self._insert(
             elem.elem_id, column, arr, int(col.shape[0]), h2d=h2d, ledger=ledger
         )
@@ -203,17 +231,21 @@ class DeviceTier:
         import jax.numpy as jnp
 
         ok = True
-        for c in table.column_names:
-            col = table.column(c)
-            if not self.supported(col.dtype):
-                ok = False
-                continue
-            with self.lock:
-                if (elem_id, c) in self._entries:
+        with self.tracer.span("device.h2d", elem=elem_id) as sp:
+            total = 0
+            for c in table.column_names:
+                col = table.column(c)
+                if not self.supported(col.dtype):
+                    ok = False
                     continue
-            arr = _pad_rows(jnp.asarray(col))
-            h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
-            self._insert(elem_id, c, arr, int(col.shape[0]), h2d=h2d, ledger=ledger)
+                with self.lock:
+                    if (elem_id, c) in self._entries:
+                        continue
+                arr = _pad_rows(jnp.asarray(col))
+                h2d = int(np.dtype(arr.dtype).itemsize) * int(col.shape[0])
+                total += h2d
+                self._insert(elem_id, c, arr, int(col.shape[0]), h2d=h2d, ledger=ledger)
+            sp.attrs["bytes"] = total
         return ok
 
     def adopt(

@@ -16,6 +16,7 @@ post-predicate included) is implemented here rather than in
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -28,6 +29,9 @@ from repro.core.columnar import ChunkedTable, Table
 from repro.core.intervals import IntervalSet
 from repro.core.scan import Scan, read_window, scan_cost_bytes
 from repro.lake.s3sim import ObjectStore
+from repro.obs.explain import Explainer, RunExplanation
+from repro.obs.metrics import Metrics
+from repro.obs.trace import Tracer, get_tracer
 
 if TYPE_CHECKING:  # annotation-only: a runtime import would close the
     # lake -> fragments -> core -> ... -> lake.catalog package cycle
@@ -57,6 +61,7 @@ class ScanReport:
     simulated_seconds: float
     residual_rows: int = 0  # rows fetched fresh from object storage
     bytes_from_spill: int = 0  # payload bytes promoted spill -> RAM for hits
+    bytes_mmap: int = 0  # mmap-promoted spill payload bytes (zero-copy reads)
     coalesced_waits: int = 0  # replans after subscribing to another's claim
     # device-tier ledger (all zero on the numpy path)
     bytes_h2d: int = 0  # host->device bytes this scan uploaded
@@ -80,11 +85,19 @@ class ScanExecutor:
         catalog: Catalog,
         cache: Optional[Union[DifferentialCache, ScanCache, NoCache]] = None,
         tenant: Optional[str] = None,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[Metrics] = None,
+        explainer: Optional[Explainer] = None,
     ):
         self.store = store
         self.catalog = catalog
         self.cache = cache if cache is not None else DifferentialCache()
         self.tenant = tenant  # attribution when the cache is tenant-aware
+        # obs wiring: share the cache's registry/tracer unless given one, so
+        # spill-tier hit bytes and scan-level series land in ONE registry
+        self.tracer = tracer or getattr(self.cache, "tracer", None) or get_tracer()
+        self.metrics = metrics or getattr(self.cache, "metrics", None) or Metrics()
+        self.explainer = explainer if explainer is not None else Explainer()
         self.reports: List[ScanReport] = []
         # the plan+slice / insert critical sections must serialize across
         # EVERY executor sharing this cache object (repro.service gives each
@@ -92,6 +105,12 @@ class ScanExecutor:
         # lock is the cache's own when it has one; baseline caches without a
         # lock fall back to a private one (single-executor use)
         self._lock = getattr(self.cache, "lock", None) or threading.Lock()
+
+    def _claim_timeout(self) -> float:
+        """Max seconds to wait on another executor's residual claim before
+        replanning (and potentially taking the claim over) — configured on
+        the shared cache (``SharedStore(claim_timeout=...)``)."""
+        return float(getattr(self.cache, "claim_timeout", 60.0))
 
     # -- the system function -------------------------------------------------
     def scan(
@@ -103,6 +122,24 @@ class ScanExecutor:
         predicate: Optional[Predicate] = None,
         sorted_output: bool = False,
         device_consumer: bool = False,
+        explain: Optional[RunExplanation] = None,
+    ) -> ChunkedTable:
+        with self.tracer.span("scan", table=table, tenant=self.tenant or ""):
+            return self._scan(
+                table, columns, window, snapshot_id, predicate,
+                sorted_output, device_consumer, explain,
+            )
+
+    def _scan(
+        self,
+        table: str,
+        columns: Sequence[str],
+        window: Optional[IntervalSet],
+        snapshot_id: Optional[str],
+        predicate: Optional[Predicate],
+        sorted_output: bool,
+        device_consumer: bool,
+        explain: Optional[RunExplanation],
     ) -> ChunkedTable:
         meta = self.catalog.table(table)
         snapshot = (
@@ -144,6 +181,7 @@ class ScanExecutor:
         claim = None
         waits = 0
         spill_bytes = 0  # accumulated across replan rounds (see executor)
+        elem_views: List[Tuple] = []  # pre-insert element state, for explain
         try:
             while True:
                 chunks: List[Table] = []
@@ -156,10 +194,25 @@ class ScanExecutor:
                 plan_kwargs = {"tenant": self.tenant}
                 if use_device:
                     plan_kwargs["device_consumer"] = True
-                with self._lock:
+                with self.tracer.span("scan.plan", table=table), self._lock:
                     plan = self.cache.plan(
                         scan, snapshot, meta.sort_key, **plan_kwargs
                     )
+                    if (
+                        explain is not None
+                        and explain.enabled
+                        and not plan.residual.empty
+                    ):
+                        # immutable views of the pre-insert element state,
+                        # captured under the same lock the plan ran under;
+                        # the explainer only consults them on the recompute
+                        # path, so fully-served scans skip the copy
+                        elem_views = [
+                            (e.window, e.pins, e.columns, e.table)
+                            for e in getattr(self.cache, "elements", lambda s: ())(
+                                scan.table
+                            )
+                        ]
                     spill_bytes += plan.promoted_spill_bytes
                     if claimer is not None and not plan.residual.empty:
                         claim, wait_event = claimer(
@@ -193,15 +246,22 @@ class ScanExecutor:
                 if wait_event is None:
                     break
                 waits += 1
-                wait_event.wait(timeout=60.0)
+                t_wait = time.perf_counter()
+                with self.tracer.span("scan.claim_wait", table=table):
+                    wait_event.wait(timeout=self._claim_timeout())
+                self.metrics.histogram("claim_wait_seconds", kind="scan").observe(
+                    time.perf_counter() - t_wait
+                )
             hit_chunks = len(chunks)
 
             residual_rows = 0
             if not plan.residual.empty:
-                fresh = read_window(
-                    self.store, snapshot, plan.residual, phys, meta.sort_key,
-                    schema=meta.schema,
-                )
+                with self.tracer.span("scan.residual", table=table) as res_sp:
+                    fresh = read_window(
+                        self.store, snapshot, plan.residual, phys, meta.sort_key,
+                        schema=meta.schema,
+                    )
+                    res_sp.attrs["rows"] = fresh.num_rows
                 fresh_dev = None
                 if dev_ok and fresh.num_rows:
                     fresh_dev = self._to_device(fresh, proj, dev_ledger)
@@ -210,7 +270,7 @@ class ScanExecutor:
                 insert_kwargs = {"tenant": self.tenant}
                 if fresh_dev is not None:
                     insert_kwargs["device_arrays"] = fresh_dev
-                with self._lock:
+                with self.tracer.span("scan.insert", table=table), self._lock:
                     self.cache.insert(
                         scan, snapshot, meta.sort_key, plan.residual, fresh,
                         **insert_kwargs,
@@ -239,6 +299,7 @@ class ScanExecutor:
                 simulated_seconds=delta.simulated_seconds,
                 residual_rows=residual_rows,
                 bytes_from_spill=spill_bytes,
+                bytes_mmap=delta.bytes_mmap,
                 coalesced_waits=waits,
                 bytes_h2d=dev_ledger.get("bytes_h2d", 0) + plan.bytes_h2d,
                 device_hits=dev_ledger.get("device_hits", 0),
@@ -248,29 +309,68 @@ class ScanExecutor:
             )
         )
 
-        out = ChunkedTable(chunks)
-        if predicate is not None:
-            out = ChunkedTable([c.filter(predicate(c)) for c in out.chunks])
-        # sort while the sort key is still physically present, THEN project
-        # it away unless requested — sorted_output must hold even when the
-        # key is not among the projections
-        if sorted_output and out.chunks:
-            out = ChunkedTable([out.combine().sort_by(meta.sort_key)])
-        out = out.select(proj)
-        if dev_ok and dev_runs:
-            # assemble the UNION on device too: run layout mirrors the host
-            # chunk order exactly, so device_columns[c] is bitwise-equal to
-            # jnp.asarray(out.column(c)) — property-checked in test_device
-            from repro.core.device import DeviceChunkedTable, device_union
+        # the scan-level series the ScanReport fields reconcile against
+        m = self.metrics
+        m.counter("scan_requests", table=table).inc()
+        m.counter("bytes_from_store", table=table).inc(delta.bytes_read)
+        m.counter("store_requests", table=table).inc(delta.get_requests)
+        m.counter("bytes_mmap", table=table).inc(delta.bytes_mmap)
+        m.counter("cache_hit_bytes", tier="ram").inc(bytes_from_cache)
+        m.counter("residual_rows", kind="scan").inc(residual_rows)
+        if waits:
+            m.counter("coalesced_wait_rounds", kind="scan").inc(waits)
 
-            arrays = device_union(
-                dev_runs, proj, interpret=tier.interpret, ledger=dev_ledger
+        if explain is not None and explain.enabled:
+            def current_id() -> Optional[str]:
+                # lazy (only a genuine invalidation pays the pointer read)
+                # and memoized on the run's explanation
+                memo = explain.head_ids
+                if table not in memo:
+                    try:
+                        memo[table] = self.catalog.current_snapshot_id(table)
+                    except (KeyError, OSError):
+                        memo[table] = None
+                return memo[table]
+
+            hit_tier = "ram+spill" if spill_bytes else ("ram" if bytes_from_cache else "store")
+            self.explainer.classify_scan(
+                explain,
+                table=table,
+                window=window,
+                residual=plan.residual,
+                columns=tuple(phys),
+                elements=elem_views,
+                snapshot=snapshot,
+                current_id=current_id,
+                rows=residual_rows,
+                tier=hit_tier,
             )
-            r = self.reports[-1]
-            r.gather_fast = dev_ledger.get("gather_fast", 0)
-            r.gather_fallbacks = dev_ledger.get("gather_fallbacks", 0)
-            r.device_union_bytes = dev_ledger.get("device_union_bytes", 0)
-            out = DeviceChunkedTable(out.chunks, arrays)
+
+        with self.tracer.span("scan.union", table=table, chunks=len(chunks)):
+            out = ChunkedTable(chunks)
+            if predicate is not None:
+                out = ChunkedTable([c.filter(predicate(c)) for c in out.chunks])
+            # sort while the sort key is still physically present, THEN
+            # project it away unless requested — sorted_output must hold even
+            # when the key is not among the projections
+            if sorted_output and out.chunks:
+                out = ChunkedTable([out.combine().sort_by(meta.sort_key)])
+            out = out.select(proj)
+            if dev_ok and dev_runs:
+                # assemble the UNION on device too: run layout mirrors the
+                # host chunk order exactly, so device_columns[c] is
+                # bitwise-equal to jnp.asarray(out.column(c)) —
+                # property-checked in test_device
+                from repro.core.device import DeviceChunkedTable, device_union
+
+                arrays = device_union(
+                    dev_runs, proj, interpret=tier.interpret, ledger=dev_ledger
+                )
+                r = self.reports[-1]
+                r.gather_fast = dev_ledger.get("gather_fast", 0)
+                r.gather_fallbacks = dev_ledger.get("gather_fallbacks", 0)
+                r.device_union_bytes = dev_ledger.get("device_union_bytes", 0)
+                out = DeviceChunkedTable(out.chunks, arrays)
         return out
 
     @staticmethod

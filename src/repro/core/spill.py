@@ -37,6 +37,8 @@ from repro.core.cache import CacheElement, FragmentPin, next_elem_id
 from repro.core.columnar import Table, read_ipc, write_ipc
 from repro.core.intervals import Interval, IntervalSet
 from repro.lake.s3sim import ObjectStore
+from repro.obs.metrics import MetricAttr, Metrics
+from repro.obs.trace import Tracer, get_tracer
 
 __all__ = ["SpillEntry", "SpillTier"]
 
@@ -63,16 +65,40 @@ class SpillTier:
     store, so restart warm-up and byte attribution ride the same root).
     ``mmap=False`` forces eager promotion reads (useful in tests)."""
 
-    def __init__(self, store: ObjectStore, prefix: str = "_spill", mmap: bool = True):
+    # observability (surfaced through the owning store's stats()); the
+    # values live in a Metrics registry — the owning store adopts the tier
+    # into its own registry so one scrape covers both tiers
+    spills = MetricAttr("spill_writes")
+    promotions = MetricAttr("spill_promotions")
+    device_promotions = MetricAttr("spill_device_promotions")
+    bytes_spilled = MetricAttr("spill_bytes_written")
+    bytes_promoted = MetricAttr("spill_bytes_promoted")
+    bytes_mmap = MetricAttr("spill_bytes_mmap")
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        prefix: str = "_spill",
+        mmap: bool = True,
+        metrics: "Metrics" = None,
+        tracer: "Tracer" = None,
+    ):
         self.store = store
         self.prefix = prefix.rstrip("/")
         self.mmap = mmap
-        # observability (surfaced through the owning store's stats())
-        self.spills = 0
-        self.promotions = 0
-        self.device_promotions = 0  # promotions that went straight to device
-        self.bytes_spilled = 0
-        self.bytes_promoted = 0
+        self._metrics = metrics
+        self._tracer = tracer
+        self.metrics_labels: dict = {}
+
+    @property
+    def metrics(self) -> Metrics:
+        if self._metrics is None:
+            self._metrics = Metrics()
+        return self._metrics
+
+    @property
+    def tracer(self) -> Tracer:
+        return self._tracer if self._tracer is not None else get_tracer()
 
     # -- identity ------------------------------------------------------------
     @staticmethod
@@ -90,8 +116,9 @@ class SpillTier:
         eid = uuid.uuid4().hex[:16]
         data_key = f"{self.prefix}/data/{eid}.ripc"
         manifest_key = f"{self.prefix}/manifest/{eid}.json"
-        with self.store.put_stream(data_key) as f:
-            write_ipc(elem.data, f)
+        with self.tracer.span("spill.write", bytes=int(elem.data.nbytes)):
+            with self.store.put_stream(data_key) as f:
+                write_ipc(elem.data, f)
         manifest = {
             "signature": elem.signature,
             "table": elem.table,
@@ -128,13 +155,20 @@ class SpillTier:
     def load(self, entry: SpillEntry) -> Table:
         """Bring a spilled payload back: the IPC header is read eagerly
         (through ``get_range``, so it lands on the ledger) and the column
-        buffers are memory-mapped — zero-copy until touched."""
-        head = self.store.get_range(entry.data_key, 0, 16)
-        (hlen,) = struct.unpack("<Q", head[8:16])
-        self.store.get_range(entry.data_key, 16, hlen)
-        tbl = read_ipc(self.store.local_path(entry.data_key), mmap=self.mmap)
-        self.promotions += 1
-        self.bytes_promoted += tbl.nbytes
+        buffers are memory-mapped — zero-copy until touched.  The mapped
+        payload bytes land on the ledger's ``bytes_mmap`` counter so per-run
+        byte attribution is complete."""
+        with self.tracer.span("spill.promote", key=entry.data_key) as sp:
+            head = self.store.get_range(entry.data_key, 0, 16)
+            (hlen,) = struct.unpack("<Q", head[8:16])
+            self.store.get_range(entry.data_key, 16, hlen)
+            tbl = read_ipc(self.store.local_path(entry.data_key), mmap=self.mmap)
+            body = max(0, self.store.size(entry.data_key) - 16 - int(hlen))
+            self.store.record_mmap(body)
+            self.bytes_mmap += body
+            self.promotions += 1
+            self.bytes_promoted += tbl.nbytes
+            sp.attrs["bytes"] = tbl.nbytes
         return tbl
 
     def load_to_device(self, entry: SpillEntry, elem: CacheElement, device) -> Table:
@@ -146,7 +180,8 @@ class SpillTier:
         copy.  Unsupported dtypes simply stay host-only (``pin_table`` skips
         them)."""
         tbl = self.load(entry)
-        device.pin_table(elem.elem_id, tbl)
+        with self.tracer.span("spill.h2d", elem=elem.elem_id, bytes=tbl.nbytes):
+            device.pin_table(elem.elem_id, tbl)
         self.device_promotions += 1
         return tbl
 

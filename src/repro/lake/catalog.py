@@ -194,6 +194,16 @@ class Catalog:
             raise KeyError(f"no such table {full_name}")
         return self.snapshot(full_name, ptr["current_snapshot"])
 
+    def current_snapshot_id(self, full_name: str) -> str:
+        """The head snapshot id from the pointer alone — no snapshot object
+        is loaded, so this never touches the object store's ledger (the
+        explainer uses it to detect snapshot-travel without perturbing
+        per-run byte attribution)."""
+        ptr = self._read_ptr(full_name)
+        if ptr is None:
+            raise KeyError(f"no such table {full_name}")
+        return ptr["current_snapshot"]
+
     def pointer_state(self, full_name: str) -> Tuple[Snapshot, Dict[str, str]]:
         """One consistent pointer read: ``(current snapshot, properties)``.
         Callers needing both (the incremental materializer) must not issue

@@ -30,6 +30,9 @@ class StoreStats:
     bytes_read: int = 0
     bytes_written: int = 0
     simulated_seconds: float = 0.0
+    # bytes promoted via local_path() + mmap (zero-copy reads outside the
+    # GET path); kept separate from bytes_read so API traffic stays exact
+    bytes_mmap: int = 0
 
     def snapshot(self) -> "StoreStats":
         return StoreStats(
@@ -38,6 +41,7 @@ class StoreStats:
             self.bytes_read,
             self.bytes_written,
             self.simulated_seconds,
+            self.bytes_mmap,
         )
 
     def delta(self, since: "StoreStats") -> "StoreStats":
@@ -47,6 +51,7 @@ class StoreStats:
             self.bytes_read - since.bytes_read,
             self.bytes_written - since.bytes_written,
             self.simulated_seconds - since.simulated_seconds,
+            self.bytes_mmap - since.bytes_mmap,
         )
 
     def reset(self) -> None:
@@ -55,6 +60,7 @@ class StoreStats:
         self.bytes_read = 0
         self.bytes_written = 0
         self.simulated_seconds = 0.0
+        self.bytes_mmap = 0
 
 
 @dataclass(frozen=True)
@@ -105,23 +111,31 @@ class ObjectStore:
 
     def _record(
         self, gets: int = 0, puts: int = 0, read: int = 0, written: int = 0,
-        secs: float = 0.0,
+        secs: float = 0.0, mmapped: int = 0,
     ) -> None:
         """Apply one I/O event to both ledgers (global under the lock, the
         thread-local one lock-free)."""
         with self._lock:
-            self._tally(self.stats, gets, puts, read, written, secs)
-        self._tally(self.thread_stats(), gets, puts, read, written, secs)
+            self._tally(self.stats, gets, puts, read, written, secs, mmapped)
+        self._tally(self.thread_stats(), gets, puts, read, written, secs, mmapped)
 
     @staticmethod
     def _tally(
-        st: StoreStats, gets: int, puts: int, read: int, written: int, secs: float
+        st: StoreStats, gets: int, puts: int, read: int, written: int,
+        secs: float, mmapped: int = 0,
     ) -> None:
         st.get_requests += gets
         st.put_requests += puts
         st.bytes_read += read
         st.bytes_written += written
         st.simulated_seconds += secs
+        st.bytes_mmap += mmapped
+
+    def record_mmap(self, nbytes: int) -> None:
+        """Account bytes a caller read through :meth:`local_path` (mmap
+        promotion).  Zero-copy reads bypass the GET path, so they carry no
+        request count or simulated latency — only the byte attribution."""
+        self._record(mmapped=nbytes)
 
     # -- paths -------------------------------------------------------------
     def _path(self, key: str) -> str:
@@ -180,10 +194,10 @@ class ObjectStore:
 
     def local_path(self, key: str) -> str:
         """Filesystem path of an existing object, for zero-copy (mmap)
-        readers.  Bytes touched through the returned path are NOT on the
-        ledger — callers pair this with explicit :meth:`get_range` reads for
-        whatever they touch eagerly (the spill tier reads the IPC header
-        through the API and memory-maps the column payloads)."""
+        readers.  Bytes touched through the returned path are not GETs —
+        callers account them via :meth:`record_mmap` (the spill tier reads
+        the IPC header through the API, memory-maps the column payloads,
+        and records the payload size as ``bytes_mmap``)."""
         path = self._path(key)
         if not os.path.exists(path):
             raise FileNotFoundError(f"no such object {key!r}")

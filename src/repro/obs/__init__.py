@@ -1,0 +1,36 @@
+"""repro.obs — structured tracing, metrics, and cache-decision explanation.
+
+Three zero-dependency layers threaded through the planner/executor/service
+hot path:
+
+- :mod:`repro.obs.trace` — a thread-safe span tracer with per-run trace
+  trees, exportable as Chrome-trace/Perfetto JSON (``python -m repro.trace``).
+- :mod:`repro.obs.metrics` — a labelled counter/gauge/histogram registry
+  that is the single source of truth behind ``ScanReport`` / ``RunResult``
+  / ``SharedStore.stats()`` / ``ServiceReport``, with Prometheus-style
+  text exposition.
+- :mod:`repro.obs.explain` — structured decision events for every window
+  the planner serves or recomputes, with the *cause* (code-edit, append,
+  overwrite/pin-stale, snapshot-travel, scope-narrowed, …), surfaced as
+  ``RunResult.explain()`` and ``python -m repro.explain``.
+"""
+
+from repro.obs.trace import NULL_TRACER, Span, Tracer, get_tracer, set_tracer
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricAttr, Metrics
+from repro.obs.explain import Decision, Explainer, RunExplanation
+
+__all__ = [
+    "Counter",
+    "Decision",
+    "Explainer",
+    "Gauge",
+    "Histogram",
+    "MetricAttr",
+    "Metrics",
+    "NULL_TRACER",
+    "RunExplanation",
+    "Span",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+]

@@ -69,6 +69,7 @@ from repro.core.intervals import NEG_INF, POS_INF, Interval, IntervalSet
 from repro.core.planner import ScanExecutor
 from repro.lake.catalog import Catalog, Snapshot
 from repro.lake.s3sim import ObjectStore
+from repro.obs import Decision, Explainer, Metrics, RunExplanation, Tracer, get_tracer
 from repro.pipeline.dag import build_dag
 from repro.pipeline.dsl import Project
 from repro.pipeline.filters import parse_filter
@@ -102,6 +103,20 @@ class RunResult:
     gather_fast: int = 0  # fragment_gather block-run fast-path calls
     gather_fallbacks: int = 0  # non-RB-aligned gathers (RB=1 / XLA take)
     device_union_bytes: int = 0  # output bytes assembled on device
+    # spill-tier mmap promotions: payload bytes page-faulted in from local
+    # spill files instead of travelling through simulated GETs
+    bytes_mmap: int = 0
+    # the run's cache-decision trail (repro.obs.explain.RunExplanation);
+    # None when the workspace's explainer is disabled
+    explanation: Optional[Any] = field(default=None, repr=False, compare=False)
+
+    def explain(self) -> str:
+        """One line per node/scan decision this run made — the action
+        (serve/recompute) and the classified cause — plus the run's single
+        highest-precedence primary cause."""
+        if self.explanation is None:
+            return "explainer disabled"
+        return self.explanation.render()
 
 
 class Workspace:
@@ -123,6 +138,9 @@ class Workspace:
         enforce_scopes: bool = False,
         strict_contracts: bool = True,
         device: Optional[Any] = None,
+        metrics: Optional[Metrics] = None,
+        tracer: Optional[Tracer] = None,
+        explainer: Optional[Explainer] = None,
     ):
         # every collaborator is injectable so repro.service can hand many
         # tenant workspaces ONE object store, ONE catalog, ONE scan cache and
@@ -144,11 +162,42 @@ class Workspace:
             if catalog is not None
             else Catalog(self.store, rows_per_fragment=rows_per_fragment)
         )
+        # ONE observability registry and tracer span the workspace: an
+        # injected store's registry wins (the service wires every tenant
+        # workspace to its shared one), so a single scrape covers the scan
+        # cache, the model store, their spill/device tiers and the run loop
+        self.metrics = (
+            metrics
+            or getattr(model_store, "metrics", None)
+            or getattr(cache, "metrics", None)
+            or Metrics()
+        )
+        self.tracer = (
+            tracer
+            or getattr(model_store, "tracer", None)
+            or getattr(cache, "tracer", None)
+            or get_tracer()
+        )
+        # the explainer is per-workspace by default: its cross-run signature
+        # memory is keyed by node name, which is only meaningful within one
+        # tenant's pipeline history
+        self.explainer = explainer if explainer is not None else Explainer()
         self.scans = ScanExecutor(
             self.store,
             self.catalog,
-            cache=cache if cache is not None else DifferentialCache(),
+            cache=(
+                cache
+                if cache is not None
+                else DifferentialCache(
+                    metrics=self.metrics,
+                    metrics_labels={"store": "scan"},
+                    tracer=self.tracer,
+                )
+            ),
             tenant=tenant,
+            tracer=self.tracer,
+            metrics=self.metrics,
+            explainer=self.explainer,
         )
         # intermediate @model outputs, keyed by node signature; windows are
         # sort-key windows of the node's rowwise chain.  Plan+slice and
@@ -159,7 +208,12 @@ class Workspace:
         self.model_store = (
             model_store
             if model_store is not None
-            else DifferentialStore(max_bytes=model_cache_bytes)
+            else DifferentialStore(
+                max_bytes=model_cache_bytes,
+                metrics=self.metrics,
+                metrics_labels={"store": "model"},
+                tracer=self.tracer,
+            )
         )
         self._model_lock = self.model_store.lock
         # device tier (repro.core.device.DeviceTier): pass an instance, or
@@ -247,32 +301,44 @@ class Workspace:
         # pin fragments whose rows its input never contained
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot] = {}
         pins = snapshot_pins or {}
-        for step in plan.steps:
-            fn = dag.project[step.model].fn
-            if step.incremental in ("rowwise", "keyed"):
-                out, stats = self._run_incremental(
-                    step, plan, fn, results, leaf_snapshots, pins
-                )
-            else:
-                out, stats = self._run_full(step, plan, fn, results, pins)
-            results[step.model] = out
-            node_stats[step.model] = stats
-            if step.materialize:
-                # the leaf snapshot this run's rows were derived from is the
-                # publication's validity anchor (see _materialize); the
-                # single-leaf provenance property cannot describe a join, so
-                # multi-leaf nodes republish in full
-                leaf_snap = (
-                    self._leaf_snapshot(step, leaf_snapshots, pins)
-                    if step.incremental in ("rowwise", "keyed")
-                    and len(step.leaf_pairs) == 1
-                    else None
-                )
-                self._materialize(step, out, leaf_snap)
+        expl = self.explainer.begin_run(tenant=self.tenant)
+        with self.tracer.span(
+            "run", tenant=self.tenant or "", nodes=len(plan.steps)
+        ):
+            for step in plan.steps:
+                fn = dag.project[step.model].fn
+                with self.tracer.span(
+                    "node", model=step.model, incremental=step.incremental
+                ):
+                    if step.incremental in ("rowwise", "keyed"):
+                        out, stats = self._run_incremental(
+                            step, plan, fn, results, leaf_snapshots, pins, expl
+                        )
+                    else:
+                        out, stats = self._run_full(
+                            step, plan, fn, results, pins, expl
+                        )
+                    results[step.model] = out
+                    node_stats[step.model] = stats
+                    if step.materialize:
+                        # the leaf snapshot this run's rows were derived from
+                        # is the publication's validity anchor (see
+                        # _materialize); the single-leaf provenance property
+                        # cannot describe a join, so multi-leaf nodes
+                        # republish in full
+                        leaf_snap = (
+                            self._leaf_snapshot(step, leaf_snapshots, pins)
+                            if step.incremental in ("rowwise", "keyed")
+                            and len(step.leaf_pairs) == 1
+                            else None
+                        )
+                        with self.tracer.span("publish", model=step.model):
+                            self._materialize(step, out, leaf_snap)
+        self.explainer.finish_run(expl)
 
         delta = ledger.delta(before)
         scan_reports = self.scans.reports[reports_before:]
-        return RunResult(
+        result = RunResult(
             outputs=results,
             bytes_from_store=delta.bytes_read,
             bytes_from_cache=sum(r.bytes_from_cache for r in scan_reports),
@@ -312,7 +378,23 @@ class Workspace:
                 s.get("device_union_bytes", 0) for s in node_stats.values()
             )
             + sum(r.device_union_bytes for r in scan_reports),
+            bytes_mmap=delta.bytes_mmap,
+            explanation=expl if expl.enabled else None,
         )
+        # run-level registry rollup: RunResult keeps exact per-run
+        # attribution; these counters are the service-wide monotonic view
+        # one Prometheus scrape can watch
+        m, ten = self.metrics, self.tenant or ""
+        m.counter("runs_total", tenant=ten).inc()
+        m.counter("run_bytes_from_store", tenant=ten).inc(result.bytes_from_store)
+        m.counter("run_bytes_from_cache", tenant=ten).inc(
+            result.bytes_from_cache + result.bytes_from_model_cache
+        )
+        m.counter("run_rows_to_user_fns", tenant=ten).inc(result.rows_to_user_fns)
+        m.counter("run_bytes_from_spill", tenant=ten).inc(result.bytes_from_spill)
+        m.counter("run_coalesced_waits", tenant=ten).inc(result.coalesced_waits)
+        m.counter("run_bytes_mmap", tenant=ten).inc(result.bytes_mmap)
+        return result
 
     # -- plan-time scope enforcement ------------------------------------------
     def _enforce_scopes(self, dag, plan: PhysicalPlan, sort_keys) -> None:
@@ -360,6 +442,7 @@ class Workspace:
         window: Optional[IntervalSet] = None,
         pins: Optional[Dict[str, str]] = None,
         device_consumer: bool = False,
+        explain: Optional[RunExplanation] = None,
     ) -> ChunkedTable:
         meta = self.catalog.table(s.table)
         parsed = parse_filter(s.predicate_filter, meta.sort_key)
@@ -373,6 +456,7 @@ class Workspace:
             snapshot_id=snapshot_id,
             predicate=parsed.predicate_fn(),
             device_consumer=device_consumer,
+            explain=explain,
         )
 
     def _run_full(
@@ -382,6 +466,7 @@ class Workspace:
         fn: Callable,
         results: Dict[str, Table],
         pins: Dict[str, str],
+        expl: RunExplanation,
     ) -> Tuple[Table, Dict[str, int]]:
         kwargs: Dict[str, Any] = {}
         rows = 0
@@ -389,13 +474,32 @@ class Workspace:
         for arg, (kind, ref) in step.bindings:
             if kind == "scan":
                 kwargs[arg] = self._exec_scan(
-                    plan.scans[ref], pins=pins, device_consumer=use_device
+                    plan.scans[ref],
+                    pins=pins,
+                    device_consumer=use_device,
+                    explain=expl,
                 )
             else:
                 kwargs[arg] = results[ref]
             rows += kwargs[arg].num_rows
         dev_ledger: Dict[str, int] = {}
         out = _invoke(fn, step.runtime, kwargs, dev_ledger)
+        if expl.enabled:
+            expl.record(
+                Decision(
+                    run_id=expl.run_id,
+                    node=step.model,
+                    kind="full",
+                    action="recompute",
+                    window=step.window.to_pairs(),
+                    residual=step.window.to_pairs(),
+                    cause="not-incremental",
+                    detail="no incremental contract — recomputed in full",
+                    root=step.model,
+                    rows=rows,
+                    signature=str(step.signature or "")[:16],
+                )
+            )
         stats = {"fresh_rows": rows, "cached_rows": 0, "model_cache_bytes": 0}
         stats.update(dev_ledger)
         return out, stats
@@ -449,6 +553,7 @@ class Workspace:
         results: Dict[str, Table],
         residual: IntervalSet,
         snapshots: Dict[str, Snapshot],
+        expl: RunExplanation,
     ) -> Table:
         """One input of the node restricted to the residual window, sorted by
         the sort key and always carrying the sort-key column.  For a
@@ -470,7 +575,7 @@ class Workspace:
                 predicate_filter=s.predicate_filter,
                 snapshot_id=snapshots[s.table].snapshot_id,
             )
-            chunked = self._exec_scan(s_with_key, window=residual)
+            chunked = self._exec_scan(s_with_key, window=residual, explain=expl)
             if not chunked.chunks:
                 # zero rows in the residual (e.g. a window widened beyond the
                 # data): keep the input schema-complete so the fn and the
@@ -490,10 +595,11 @@ class Workspace:
         results: Dict[str, Table],
         residual: IntervalSet,
         snapshots: Dict[str, Snapshot],
+        expl: RunExplanation,
     ) -> Dict[str, Table]:
         return {
             arg: self._residual_input(
-                binding, step, plan, results, residual, snapshots
+                binding, step, plan, results, residual, snapshots, expl
             )
             for arg, binding in step.bindings
         }
@@ -506,6 +612,7 @@ class Workspace:
         results: Dict[str, Table],
         leaf_snapshots: Dict[Tuple[str, Optional[str]], Snapshot],
         snap_pins: Dict[str, str],
+        expl: RunExplanation,
     ) -> Tuple[Table, Dict[str, int]]:
         snapshots = self._leaf_snapshots_for(step, leaf_snapshots, snap_pins)
         if step.window.empty:
@@ -513,7 +620,7 @@ class Workspace:
             # disjoint filters): run the fn once on empty, schema-complete
             # inputs — nothing to cache or serve
             kwargs = self._residual_inputs(
-                step, plan, results, IntervalSet.empty_set(), snapshots
+                step, plan, results, IntervalSet.empty_set(), snapshots, expl
             )
             out = _invoke(fn, step.runtime, kwargs)
             return self._windowed_output(step, kwargs, out), {
@@ -552,6 +659,9 @@ class Workspace:
         use_device = tier is not None and step.runtime == "jax"
         dev_ledger: Dict[str, int] = {}
         dev_h2d_plans = 0  # spill→device straight-promotion bytes (from plans)
+        # immutable pre-plan element views (window, pins, columns, table),
+        # captured under the plan lock for the explainer's cause diagnosis
+        elem_views: List[Tuple] = []
         try:
             with read_pin:
                 while True:
@@ -564,7 +674,9 @@ class Workspace:
                     cached_rows = 0
                     cache_bytes = 0
                     wait_event = None
-                    with self._model_lock:
+                    with self.tracer.span(
+                        "node.plan", model=step.model
+                    ), self._model_lock:
                         # cost is row-extent, not fragment bytes: serving ANY
                         # cached rows saves user-function compute, even inside
                         # a partially-covered fragment (unlike a physical
@@ -579,6 +691,15 @@ class Workspace:
                             tenant=self.tenant,
                             device_consumer=use_device,
                         )
+                        if expl.enabled and not mplan.residual.empty:
+                            # pre-insert element views, captured under the
+                            # plan's lock acquisition; the explainer only
+                            # consults them on the recompute path, so fully-
+                            # served runs skip the copy
+                            elem_views = [
+                                (e.window, e.pins, e.columns, e.table)
+                                for e in self.model_store.elements(step.signature)
+                            ]
                         if claimer is not None and not mplan.residual.empty:
                             claim, wait_event = claimer(
                                 step.signature,
@@ -618,24 +739,40 @@ class Workspace:
                         break
                     # another run is computing an overlapping residual: wait
                     # (no lock held) and replan — its insert becomes our hit.
-                    # The timeout is defensive; owners release in a finally.
+                    # The timeout matches the store's claim lease, so a dead
+                    # owner's claim expires before the first waiter gives up;
+                    # owners release in a finally.
                     waits += 1
-                    wait_event.wait(timeout=60.0)
+                    t_wait = time.perf_counter()
+                    with self.tracer.span("node.claim_wait", model=step.model):
+                        wait_event.wait(
+                            timeout=float(
+                                getattr(self.model_store, "claim_timeout", 60.0)
+                            )
+                        )
+                    self.metrics.histogram(
+                        "claim_wait_seconds", kind=step.incremental
+                    ).observe(time.perf_counter() - t_wait)
 
                 fresh: Optional[Table] = None
                 fresh_rows = 0
                 if not mplan.residual.empty:
-                    kwargs = self._residual_inputs(
-                        step, plan, results, mplan.residual, snapshots
-                    )
-                    total_in = sum(t.num_rows for t in kwargs.values())
-                    if total_in == 0 and hit_chunks:
-                        # nothing to compute; keep the output schema from a hit view
-                        fresh = hit_chunks[0].slice(0, 0)
-                    else:
-                        fresh_rows = total_in
-                        out = _invoke(fn, step.runtime, kwargs, dev_ledger)
-                        fresh = self._windowed_output(step, kwargs, out)
+                    with self.tracer.span(
+                        "node.residual", model=step.model
+                    ) as res_sp:
+                        kwargs = self._residual_inputs(
+                            step, plan, results, mplan.residual, snapshots, expl
+                        )
+                        total_in = sum(t.num_rows for t in kwargs.values())
+                        if total_in == 0 and hit_chunks:
+                            # nothing to compute; keep the output schema from
+                            # a hit view
+                            fresh = hit_chunks[0].slice(0, 0)
+                        else:
+                            fresh_rows = total_in
+                            out = _invoke(fn, step.runtime, kwargs, dev_ledger)
+                            fresh = self._windowed_output(step, kwargs, out)
+                        res_sp.attrs["rows"] = fresh_rows
                     fresh_dev = None
                     if dev_ok and fresh.num_rows:
                         fresh_dev = _fresh_to_device(fresh, dev_ledger)
@@ -646,7 +783,9 @@ class Workspace:
                         pins = pins_for(only_snap, mplan.residual)
                     else:
                         pins = multi_pins_for(snapshots, mplan.residual)
-                    with self._model_lock:
+                    with self.tracer.span(
+                        "node.insert", model=step.model
+                    ), self._model_lock:
                         # handing the fresh device arrays to the insert lets
                         # the store's merge replicate device→device — warm
                         # runs then upload only the residual, never the
@@ -676,29 +815,76 @@ class Workspace:
             if claim is not None:
                 self.model_store.release_residual(claim)
 
-        chunks = hit_chunks + ([fresh] if fresh is not None else [])
-        assembled = ChunkedTable(chunks)
-        if len(assembled.chunks) == 1:
-            # zero-copy fast path: a single chunk (one cache view, or one
-            # fresh residual) is already sorted by the key
-            out_tbl = assembled.chunks[0]
-        else:
-            out_tbl = assembled.combine().sort_by(step.sort_key)
-        if dev_ok and dev_runs and out_tbl.num_rows:
-            # assemble the same UNION on device: hit/residual windows are
-            # disjoint and each run is internally key-sorted, so runs ordered
-            # by window lo ARE the host stable sort's output — bitwise
-            # (device_columns[c] == jnp.asarray(out_tbl.column(c)))
-            from repro.core.device import DeviceTable, device_union
+        if expl.enabled:
+            def current_ids() -> Dict[str, Optional[str]]:
+                # the catalog head is a pointer-only read (unaccounted), so
+                # the travel check never perturbs the run's byte ledger;
+                # resolved lazily (only a genuine invalidation pays it) and
+                # memoized per run (every node asks about the same tables)
+                memo = expl.head_ids
+                for t in snapshots:
+                    if t not in memo:
+                        try:
+                            memo[t] = self.catalog.current_snapshot_id(t)
+                        except (KeyError, OSError):
+                            memo[t] = None
+                return {t: memo[t] for t in snapshots}
 
-            dev_runs.sort(key=lambda r: r[0])
-            arrays = device_union(
-                [(prov, lo, hi) for _key, prov, lo, hi in dev_runs],
-                list(out_tbl.column_names),
-                interpret=tier.interpret,
-                ledger=dev_ledger,
+            self.explainer.classify_node(
+                expl,
+                node=step.model,
+                kind=step.incremental,
+                sig_parts=step.sig_parts,
+                signature=step.signature,
+                window=step.window,
+                residual=mplan.residual,
+                elements=elem_views,
+                snapshots=snapshots,
+                current_ids=current_ids,
+                rows=fresh_rows,
+                tier="ram+spill" if spill_bytes else ("ram" if cached_rows else ""),
             )
-            out_tbl = DeviceTable(out_tbl, arrays)
+        self.metrics.counter("residual_rows", kind=step.incremental).inc(
+            fresh_rows
+        )
+        if cache_bytes:
+            self.metrics.counter("cache_hit_bytes", tier="ram").inc(cache_bytes)
+        if waits:
+            self.metrics.counter(
+                "coalesced_wait_rounds", kind=step.incremental
+            ).inc(waits)
+
+        chunks = hit_chunks + ([fresh] if fresh is not None else [])
+        # span the union only when there is one: the single-chunk serve is a
+        # zero-copy view and a span around it would just be tracer tax
+        union_span = (
+            self.tracer.span("node.union", model=step.model, chunks=len(chunks))
+            if len(chunks) != 1 or (dev_ok and dev_runs)
+            else contextlib.nullcontext()
+        )
+        with union_span:
+            assembled = ChunkedTable(chunks)
+            if len(assembled.chunks) == 1:
+                # zero-copy fast path: a single chunk (one cache view, or one
+                # fresh residual) is already sorted by the key
+                out_tbl = assembled.chunks[0]
+            else:
+                out_tbl = assembled.combine().sort_by(step.sort_key)
+            if dev_ok and dev_runs and out_tbl.num_rows:
+                # assemble the same UNION on device: hit/residual windows are
+                # disjoint and each run is internally key-sorted, so runs
+                # ordered by window lo ARE the host stable sort's output —
+                # bitwise (device_columns[c] == jnp.asarray(out_tbl.column(c)))
+                from repro.core.device import DeviceTable, device_union
+
+                dev_runs.sort(key=lambda r: r[0])
+                arrays = device_union(
+                    [(prov, lo, hi) for _key, prov, lo, hi in dev_runs],
+                    list(out_tbl.column_names),
+                    interpret=tier.interpret,
+                    ledger=dev_ledger,
+                )
+                out_tbl = DeviceTable(out_tbl, arrays)
         stats = {
             "fresh_rows": fresh_rows,
             "cached_rows": cached_rows,

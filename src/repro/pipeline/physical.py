@@ -110,6 +110,12 @@ class UserFnStep:
     # every (table, snapshot_id) leaf under the node's windowed chains;
     # (leaf_table, leaf_snapshot_id) is leaf_pairs[0] when non-empty
     leaf_pairs: Tuple[Tuple[str, Optional[str]], ...] = ()
+    # structured mirror of the tuple `signature` digests, consumed by
+    # repro.obs.explain to diagnose WHICH part changed between runs.  Scan
+    # entries carry one trailing non-signature field (the raw requested
+    # columns) so scope-narrowed serves are recognizable; everything else
+    # maps 1:1 onto the digest inputs.
+    sig_parts: tuple = ()
 
     @property
     def window(self) -> IntervalSet:
@@ -158,6 +164,7 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
         mdef: ModelDef = dag.project[name]
         bindings: List[Tuple[str, Tuple[str, object]]] = []
         sig_inputs: List[tuple] = []
+        part_inputs: List[tuple] = []  # named/structured mirror of sig_inputs
         in_windows: List[IntervalSet] = []
         in_sort_keys: List[Optional[str]] = []
         in_leaf_pairs: List[Tuple[str, Optional[str]]] = []
@@ -165,6 +172,7 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
             if ref.name in dag.project.models:
                 bindings.append((arg, ("model", ref.name)))
                 sig_inputs.append(("model", sigs[ref.name]))
+                part_inputs.append(("model", ref.name, sigs[ref.name]))
                 in_windows.append(windows[ref.name])
                 in_sort_keys.append(node_sort_key[ref.name])
                 in_leaf_pairs.extend(leaves_of[ref.name])
@@ -188,6 +196,7 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 )
                 bindings.append((arg, ("scan", len(scans))))
                 scans.append(step)
+                sig_cols = _signature_columns(mdef, cols, parsed, sort_key)
                 sig_inputs.append(
                     # NOTE: the window is absent on purpose — it is the
                     # differential dimension, not part of the node identity.
@@ -196,21 +205,39 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                     (
                         "scan",
                         ref.name,
-                        _signature_columns(mdef, cols, parsed, sort_key),
+                        sig_cols,
                         parsed.predicate_signature(),
                         ref.snapshot_id,
+                    )
+                )
+                part_inputs.append(
+                    (
+                        "scan",
+                        ref.name,
+                        sig_cols,
+                        parsed.predicate_signature(),
+                        ref.snapshot_id,
+                        mdef.read_scope is not None,
+                        cols,  # raw requested columns: NOT in the digest
                     )
                 )
                 in_windows.append(parsed.window)
                 in_sort_keys.append(sort_key)
                 in_leaf_pairs.append((ref.name, ref.snapshot_id))
+        fingerprint = code_fingerprint(mdef.fn)
         sigs[name] = _digest(
             (
-                code_fingerprint(mdef.fn),
+                fingerprint,
                 mdef.runtime,
                 mdef.incremental,
                 tuple(sig_inputs),
             )
+        )
+        sig_parts = (
+            ("code", fingerprint),
+            ("runtime", mdef.runtime),
+            ("incremental", mdef.incremental),
+            ("inputs", tuple(part_inputs)),
         )
         if mdef.incremental in ("rowwise", "keyed") and in_windows:
             # an incremental node's output is windowed by the shared sort
@@ -266,6 +293,7 @@ def compile_plan(dag: Dag, sort_keys: Dict[str, str]) -> PhysicalPlan:
                 leaf_table=pairs[0][0] if pairs else None,
                 leaf_snapshot_id=pairs[0][1] if pairs else None,
                 leaf_pairs=tuple(pairs),
+                sig_parts=sig_parts,
             )
         )
     return PhysicalPlan(scans=scans, steps=steps)

@@ -32,6 +32,7 @@ from typing import Any, Deque, Dict, List, Optional, Union
 
 from repro.lake.catalog import Catalog
 from repro.lake.s3sim import ObjectStore
+from repro.obs import Metrics, Tracer, get_tracer
 from repro.pipeline.dsl import Project
 from repro.pipeline.executor import RunResult, Workspace
 from repro.core.spill import SpillTier
@@ -59,6 +60,10 @@ class RunHandle:
     result: Optional[RunResult] = None
     error: Optional[BaseException] = None
     wall_seconds: float = 0.0
+    # admission timestamp (perf_counter_ns, comparable across threads):
+    # the worker that dequeues this handle turns it into the queue-wait
+    # histogram observation and trace span
+    admit_ns: int = 0
     _done: threading.Event = field(default_factory=threading.Event, repr=False)
 
     def wait(self, timeout: Optional[float] = None) -> "RunHandle":
@@ -80,6 +85,16 @@ class ServiceReport:
     model_store: Dict[str, Any]
     scan_cache: Dict[str, Any]
     commit_conflicts: int
+    # the service's live metrics registry (repro.obs.Metrics) — the single
+    # source the per-store stats above are derived from
+    metrics: Optional[Any] = None
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the service's whole registry —
+        both stores, their spill/device tiers, the queue and the run loop."""
+        if self.metrics is None:
+            return ""
+        return self.metrics.to_text()
 
     def to_json(self) -> Dict[str, Any]:
         return {
@@ -121,9 +136,16 @@ class PipelineService:
         spill: bool = False,
         coalesce: bool = True,
         enforce_scopes: bool = False,
+        claim_timeout: float = 60.0,
+        tracer: Optional[Tracer] = None,
     ):
         self.store = ObjectStore(root)
         self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
+        # ONE registry and tracer for the whole service: both shared stores,
+        # their spill tiers, every tenant workspace and the queue all record
+        # into it, so report().metrics_text() is one consistent scrape
+        self.metrics = Metrics()
+        self.tracer = tracer if tracer is not None else get_tracer()
         # spill tiers live behind the SERVICE's object store (under _spill/),
         # so spill traffic is on the same ledger as everything else and a
         # new service over the same root restores the tiers' manifests and
@@ -134,6 +156,10 @@ class PipelineService:
             liveness_runs=liveness_runs,
             spill=SpillTier(self.store, prefix="_spill/scan") if spill else None,
             coalesce=coalesce,
+            claim_timeout=claim_timeout,
+            metrics=self.metrics,
+            metrics_labels={"store": "scan"},
+            tracer=self.tracer,
         )
         self.model_store = SharedStore(
             max_bytes=model_cache_bytes,
@@ -141,6 +167,10 @@ class PipelineService:
             tenant_quota_bytes=tenant_quota_bytes,
             spill=SpillTier(self.store, prefix="_spill/model") if spill else None,
             coalesce=coalesce,
+            claim_timeout=claim_timeout,
+            metrics=self.metrics,
+            metrics_labels={"store": "model"},
+            tracer=self.tracer,
         )
         self.max_queued = max_queued
         self.max_commit_retries = max_commit_retries
@@ -196,6 +226,8 @@ class PipelineService:
                     enforce_scopes=(
                         self.enforce_scopes if untrusted is None else untrusted
                     ),
+                    metrics=self.metrics,
+                    tracer=self.tracer,
                 )
                 self._sessions[tenant_id] = TenantSession(
                     tenant_id,
@@ -213,11 +245,18 @@ class PipelineService:
             if self._shutdown:
                 raise RuntimeError("service is shut down")
             if self.max_queued is not None and self._queued_count >= self.max_queued:
+                self.metrics.counter("queue_rejected", tenant=tenant_id).inc()
                 raise QueueFull(
                     f"admission queue at max_queued={self.max_queued}"
                 )
             self._seq += 1
-            handle = RunHandle(run_id=self._seq, tenant=tenant_id, project=project)
+            handle = RunHandle(
+                run_id=self._seq,
+                tenant=tenant_id,
+                project=project,
+                admit_ns=time.perf_counter_ns(),
+            )
+            self.metrics.counter("queue_submitted", tenant=tenant_id).inc()
             if tenant_id not in self._queues:
                 self._queues[tenant_id] = deque()
                 self._rr.append(tenant_id)
@@ -258,16 +297,36 @@ class PipelineService:
                     self._cond.wait()
                     handle = self._next_runnable()
                 handle.state = RUNNING
+            # the queue wait is recorded BEFORE the run span opens so it
+            # lands as its own root interval (it is not part of the run)
+            sched_ns = time.perf_counter_ns()
+            if handle.admit_ns:
+                self.metrics.histogram(
+                    "queue_wait_seconds", tenant=handle.tenant
+                ).observe((sched_ns - handle.admit_ns) / 1e9)
+                self.tracer.add_span(
+                    "service.queue_wait",
+                    handle.admit_ns,
+                    sched_ns,
+                    tenant=handle.tenant,
+                    run_id=handle.run_id,
+                )
             t0 = time.perf_counter()
             try:
-                session = self.session(handle.tenant)
-                handle.result = session.run(handle.project)
+                with self.tracer.span(
+                    "service.run", tenant=handle.tenant, run_id=handle.run_id
+                ):
+                    session = self.session(handle.tenant)
+                    handle.result = session.run(handle.project)
                 handle.state = DONE
             except BaseException as exc:  # a failed run must never kill a worker
                 handle.error = exc
                 handle.state = FAILED
             finally:
                 handle.wall_seconds = time.perf_counter() - t0
+                self.metrics.counter(
+                    "service_runs_total", state=handle.state
+                ).inc()
                 with self._cond:
                     self._active.discard(handle.tenant)
                     # retire the handle into the compact ledger; the caller's
@@ -362,4 +421,5 @@ class PipelineService:
             model_store=self.model_store.stats(),
             scan_cache=self.scan_cache.stats(),
             commit_conflicts=conflicts,
+            metrics=self.metrics,
         )

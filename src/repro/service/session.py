@@ -81,14 +81,23 @@ class TenantSession:
     def run(self, project: Project, verbose: bool = False) -> RunResult:
         """Execute ``project`` against the session's pinned view, replaying
         on :class:`CommitConflict` (writing runs racing another tenant)."""
+        tracer = self.workspace.tracer
         with self._run_lock:
             for attempt in range(self.max_commit_retries + 1):
                 try:
-                    result = self.workspace.run(
-                        project, verbose=verbose, snapshot_pins=self.pins
-                    )
+                    with tracer.span(
+                        "session.attempt",
+                        tenant=self.tenant_id,
+                        attempt=attempt,
+                    ):
+                        result = self.workspace.run(
+                            project, verbose=verbose, snapshot_pins=self.pins
+                        )
                 except CommitConflict:
                     self.commit_conflicts += 1
+                    self.workspace.metrics.counter(
+                        "commit_conflicts", tenant=self.tenant_id
+                    ).inc()
                     if attempt == self.max_commit_retries:
                         raise
                     continue

@@ -36,6 +36,7 @@ evicted elements ("no torn reads").  Claim waits happen with NO lock held.
 from __future__ import annotations
 
 import threading
+import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple, Union
@@ -53,6 +54,8 @@ from repro.core.columnar import Table
 from repro.core.intervals import IntervalSet
 from repro.core.spill import SpillTier
 from repro.lake.s3sim import ObjectStore
+from repro.obs.metrics import MetricAttr, Metrics
+from repro.obs.trace import Tracer
 
 __all__ = ["SharedStore", "SharedScanCache", "ResidualClaim"]
 
@@ -77,6 +80,9 @@ class ResidualClaim:
     snapshot_id: Optional[str] = None
     kind: str = "window"
     event: threading.Event = field(default_factory=threading.Event)
+    # lease clock: claims older than the store's claim_timeout are treated
+    # as dead (owner crashed / hung) and may be taken over by a planner
+    created: float = field(default_factory=time.monotonic)
 
 
 class SharedStore(DifferentialStore):
@@ -89,6 +95,15 @@ class SharedStore(DifferentialStore):
     the pinned working set.
     """
 
+    # service observability (surfaced in ServiceReport / BENCH_4/5);
+    # registry-backed — see DifferentialStore's counters
+    liveness_evictions = MetricAttr("cache_liveness_evictions")
+    quota_evictions = MetricAttr("cache_quota_evictions")
+    cross_tenant_hits = MetricAttr("cache_cross_tenant_hits")
+    cross_tenant_rows = MetricAttr("cache_cross_tenant_rows")
+    coalesced_waits = MetricAttr("coalesced_waits")
+    claim_timeouts = MetricAttr("claim_timeouts")  # dead claims taken over
+
     def __init__(
         self,
         max_bytes: Optional[int] = None,
@@ -98,6 +113,10 @@ class SharedStore(DifferentialStore):
         spill_root: Optional[str] = None,
         coalesce: bool = True,
         device=None,
+        claim_timeout: float = 60.0,
+        metrics: Optional[Metrics] = None,
+        metrics_labels: Optional[Dict[str, str]] = None,
+        tracer: Optional[Tracer] = None,
     ):
         # spill_root is the standalone convenience: a directory-backed
         # object store owned by this SharedStore.  Services pass `spill`
@@ -105,20 +124,24 @@ class SharedStore(DifferentialStore):
         # same ledger as everything else.
         if spill is None and spill_root is not None:
             spill = SpillTier(ObjectStore(spill_root))
-        super().__init__(max_bytes=max_bytes, spill=spill, device=device)
+        super().__init__(
+            max_bytes=max_bytes,
+            spill=spill,
+            device=device,
+            metrics=metrics,
+            metrics_labels=metrics_labels,
+            tracer=tracer,
+        )
         self.liveness_runs = liveness_runs
         self.tenant_quota_bytes = tenant_quota_bytes
         self.coalesce = coalesce
+        # max seconds a residual claim may stay unreleased before planners
+        # treat the owner as dead; also the executors' per-round wait bound
+        self.claim_timeout = float(claim_timeout)
         self._readers: Dict[Hashable, int] = {}  # signature -> active readers
         self._last_seen: Dict[Hashable, int] = {}  # signature -> run_seq
         self._claims: Dict[Hashable, List[ResidualClaim]] = {}
         self.run_seq = 0
-        # service observability (surfaced in ServiceReport / BENCH_4/5)
-        self.liveness_evictions = 0
-        self.quota_evictions = 0
-        self.cross_tenant_hits = 0
-        self.cross_tenant_rows = 0
-        self.coalesced_waits = 0
 
     # -- run lifecycle -------------------------------------------------------
     def begin_run(self) -> None:
@@ -191,6 +214,19 @@ class SharedStore(DifferentialStore):
         if not self.coalesce:
             return None, None
         with self.lock:
+            # lease expiry: a claim unreleased for claim_timeout seconds is
+            # dead (its owner crashed or hung past the wait bound).  Retire
+            # it and wake its subscribers — they replan with the dead claim
+            # gone, so the first one through takes the residual over.
+            lst = self._claims.get(signature)
+            if lst is not None:
+                now = time.monotonic()
+                for c in [c for c in lst if now - c.created > self.claim_timeout]:
+                    lst.remove(c)
+                    self.claim_timeouts += 1
+                    c.event.set()
+                if not lst:
+                    del self._claims[signature]
             need = frozenset(columns)
             me = threading.get_ident()
             for c in self._claims.get(signature, ()):
@@ -325,6 +361,7 @@ class SharedStore(DifferentialStore):
                 "cross_tenant_hits": self.cross_tenant_hits,
                 "cross_tenant_rows": self.cross_tenant_rows,
                 "coalesced_waits": self.coalesced_waits,
+                "claim_timeouts": self.claim_timeouts,
                 "tenant_bytes": dict(sorted(per_tenant.items())),
                 # device tier (zeros when no tier is attached)
                 **(

@@ -132,6 +132,22 @@ def main() -> int:
     with open(os.path.join(OUT_DIR, "BENCH_9.json"), "w") as f:
         json.dump(r9, f, indent=1)
 
+    _section("BENCH 10 — chaos: retried transients, integrity, crash-warm restart")
+    from benchmarks import bench10_chaos as b10
+
+    r10 = b10.run(rows=20_000 if not args.full else 200_000)
+    print(b10.format_table(r10))
+    artifacts["bench10"] = {
+        "runs_completed": r10["chaos_loop"]["completed"],
+        "corruption_detected": r10["chaos_loop"]["corruption_detected"],
+        "corrupt_bytes_served": r10["chaos_loop"]["corrupt_bytes_served"],
+        "retry_rows_ratio": r10["retry_warmth"]["rows_ratio"],
+        "recovered_bytes": r10["crash_restart"]["recovered_bytes"],
+        "overhead_pct": r10["overhead"]["overhead_pct"],
+    }
+    with open(os.path.join(OUT_DIR, "BENCH_10.json"), "w") as f:
+        json.dump(r10, f, indent=1)
+
     _section("Kernel micro-benchmarks (interpret-mode correctness + timing)")
     from benchmarks import kernel_bench as kb
 

@@ -286,7 +286,10 @@ def write_events(
 
 
 def iteration_project(
-    hi: int, columns: Sequence[str] = ("v1", "v2"), gain: float = 1.0
+    hi: int,
+    columns: Sequence[str] = ("v1", "v2"),
+    gain: float = 1.0,
+    materialize: bool = False,
 ):
     """A 4-stage incremental feature pipeline (numpy + jax runtimes):
 
@@ -295,7 +298,9 @@ def iteration_project(
 
     ``hi`` is the window edit, ``columns`` the feature-set edit, ``gain`` the
     code edit (a closed-over constant of the last stage — changing it changes
-    only that stage's code fingerprint)."""
+    only that stage's code fingerprint); ``materialize`` publishes ``final``
+    back to the catalog (``models.final``) — the chaos bench faults that
+    publish to exercise run-level retry after the compute finished."""
     from repro.pipeline.dsl import Model, Project, model, runtime
 
     p = Project("iteration")
@@ -335,7 +340,7 @@ def iteration_project(
             for k, v in data.items()
         }
 
-    @model(project=p, incremental="rowwise")
+    @model(project=p, incremental="rowwise", materialize=materialize)
     @runtime("numpy")
     def final(data=Model("feats")):
         out = {n: data.column(n) for n in data.column_names}

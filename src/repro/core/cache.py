@@ -325,6 +325,11 @@ class DifferentialStore:
     # the spill tier (the RAM-tier analog is emitted by the executors)
     bytes_from_spill = MetricAttr("cache_hit_bytes", tier="spill")
     spill_restored = MetricAttr("spill_restored")
+    # crash-warmness + robustness ledgers: payload bytes parked by the
+    # write-through/checkpoint modes, and elements quarantined out of a plan
+    # because their spilled payload failed integrity verification
+    writethrough_bytes = MetricAttr("spill_writethrough_bytes")
+    plan_quarantines = MetricAttr("plan_quarantines")
 
     def __init__(
         self,
@@ -334,9 +339,30 @@ class DifferentialStore:
         metrics: Optional[Metrics] = None,
         metrics_labels: Optional[Dict[str, str]] = None,
         tracer: Optional[Tracer] = None,
+        spill_mode: Optional[str] = None,
+        checkpoint_every: int = 8,
+        spill_failure_threshold: int = 3,
     ):
+        assert spill_mode in (None, "write_through", "checkpoint")
+        assert spill_mode is None or spill is not None, "spill_mode needs a spill tier"
         self.max_bytes = max_bytes
         self.spill = spill
+        # crash-warmness discipline: "write_through" parks a spill copy of
+        # every element as it lands (a crash loses at most the in-flight
+        # insert); "checkpoint" parks resident un-spilled elements every
+        # ``checkpoint_every`` inserts; None (default) spills only on
+        # eviction/demote_all — the pre-existing clean-shutdown behavior.
+        self.spill_mode = spill_mode
+        self.checkpoint_every = int(checkpoint_every)
+        self._inserts_since_checkpoint = 0
+        # graceful degradation: after ``spill_failure_threshold`` CONSECUTIVE
+        # spill-write failures the store flips to RAM-only (degraded=True,
+        # ``cache_degraded`` gauge) — evictions drop instead of demoting, and
+        # write-through stops paying the failing tier. A cache that cannot
+        # spill serves smaller windows; it does not crash runs.
+        self.spill_failure_threshold = int(spill_failure_threshold)
+        self._spill_failures = 0
+        self.degraded = False
         # obs wiring must precede any counter use below
         self.metrics = metrics if metrics is not None else Metrics()
         self.metrics_labels = dict(metrics_labels or {})
@@ -406,69 +432,87 @@ class DifferentialStore:
         element reduces cost — the greedy choice keeps the element count (and
         hence the final UNION) small, exactly the paper's argument.
         """
+        from repro.core.spill import SpillCorruption  # deferred: spill imports cache
+
         self.lookups += 1
         self._clock += 1
         need = set(columns)
         baseline = cost_fn(window)
 
-        candidates: List[Tuple[CacheElement, IntervalSet]] = []
-        for e in self._elements.get(signature, ()):  # pre-filter (paper: namespace/table/projection match)
-            if not need.issubset(set(e.columns)):
-                continue
-            usable = usable_fn(e) if usable_fn is not None else e.window
-            if usable.empty:
-                continue
-            candidates.append((e, usable))
-
-        remaining = window
-        cost = baseline
-        hits: List[CacheHit] = []
-        used_ids: set = set()
+        # plan → promote, replanned from scratch whenever a chosen element's
+        # spilled payload fails integrity verification: the element is
+        # quarantined (GC'd, counted) and the next round simply cannot pick
+        # it — its window falls into the residual and is recomputed instead
+        # of ever serving the corrupt bytes
         while True:
-            best: Optional[Tuple[CacheElement, IntervalSet, IntervalSet, int]] = None
-            for e, usable in candidates:
-                if e.elem_id in used_ids:
+            candidates: List[Tuple[CacheElement, IntervalSet]] = []
+            for e in self._elements.get(signature, ()):  # pre-filter (paper: namespace/table/projection match)
+                if not need.issubset(set(e.columns)):
                     continue
-                covered = remaining.intersect(usable)
-                if covered.empty:
+                usable = usable_fn(e) if usable_fn is not None else e.window
+                if usable.empty:
                     continue
-                new_remaining = remaining.difference(covered)
-                new_cost = cost_fn(new_remaining)
-                if new_cost < cost and (best is None or new_cost < best[3]):
-                    best = (e, covered, new_remaining, new_cost)
-            if best is None:
-                break
-            e, covered, remaining, cost = best
-            used_ids.add(e.elem_id)
-            e.last_used = self._clock
-            hits.append(CacheHit(e, covered))
-            if remaining.empty:
-                break
+                candidates.append((e, usable))
+
+            remaining = window
+            cost = baseline
+            hits: List[CacheHit] = []
+            used_ids: set = set()
+            while True:
+                best: Optional[Tuple[CacheElement, IntervalSet, IntervalSet, int]] = None
+                for e, usable in candidates:
+                    if e.elem_id in used_ids:
+                        continue
+                    covered = remaining.intersect(usable)
+                    if covered.empty:
+                        continue
+                    new_remaining = remaining.difference(covered)
+                    new_cost = cost_fn(new_remaining)
+                    if new_cost < cost and (best is None or new_cost < best[3]):
+                        best = (e, covered, new_remaining, new_cost)
+                if best is None:
+                    break
+                e, covered, remaining, cost = best
+                used_ids.add(e.elem_id)
+                e.last_used = self._clock
+                hits.append(CacheHit(e, covered))
+                if remaining.empty:
+                    break
+
+            # spilled windows ARE hits: promote the chosen elements' payloads
+            # back into the RAM tier (mmap — zero-copy until touched) so the
+            # caller can slice them under the same lock acquisition
+            promoted = 0
+            bytes_h2d = 0
+            corrupt: Optional[CacheElement] = None
+            for h in hits:
+                e = h.element
+                if e.data is None:
+                    try:
+                        if device_consumer and self.device is not None:
+                            # the plan's consumer is a jax node: promote straight to
+                            # device — the mmap'd IPC pages are uploaded once (H2D)
+                            # while the RAM tier gets its usual zero-copy mmap view
+                            before_h2d = self.device.bytes_h2d
+                            e.data = self.spill.load_to_device(e.spill, e, self.device)
+                            bytes_h2d += self.device.bytes_h2d - before_h2d
+                        else:
+                            e.data = self.spill.load(e.spill)
+                    except (SpillCorruption, FileNotFoundError):
+                        corrupt = e
+                        break
+                    self.promotions += 1
+                    promoted += e.data.nbytes
+                    self.bytes_from_spill += e.data.nbytes
+            if corrupt is not None:
+                self._quarantine_element(corrupt)
+                continue
+            break
 
         if hits and remaining.empty:
             self.full_hits += 1
         elif hits:
             self.partial_hits += 1
-        # spilled windows ARE hits: promote the chosen elements' payloads
-        # back into the RAM tier (mmap — zero-copy until touched) so the
-        # caller can slice them under the same lock acquisition
-        promoted = 0
-        bytes_h2d = 0
-        for h in hits:
-            e = h.element
-            if e.data is None:
-                if device_consumer and self.device is not None:
-                    # the plan's consumer is a jax node: promote straight to
-                    # device — the mmap'd IPC pages are uploaded once (H2D)
-                    # while the RAM tier gets its usual zero-copy mmap view
-                    before_h2d = self.device.bytes_h2d
-                    e.data = self.spill.load_to_device(e.spill, e, self.device)
-                    bytes_h2d += self.device.bytes_h2d - before_h2d
-                else:
-                    e.data = self.spill.load(e.spill)
-                self.promotions += 1
-                promoted += e.data.nbytes
-                self.bytes_from_spill += e.data.nbytes
         if promoted:
             # promotions grew the RAM tier: demote back down to budget, but
             # never THIS plan's hits — the caller slices them right after,
@@ -522,6 +566,7 @@ class DifferentialStore:
             self.device.adopt(elem.elem_id, device_arrays, data.num_rows)
         self._elements.setdefault(signature, []).append(elem)
         self._merge_group(signature, usable_fn)
+        self._checkpoint_group(signature)
         self._evict()
         return elem
 
@@ -547,6 +592,32 @@ class DifferentialStore:
             for e in self.elements():
                 if e.data is not None:
                     self._demote(e)
+
+    def _checkpoint_group(self, signature: Hashable) -> None:
+        """Crash-warmness pass after an insert: park spill *copies* of
+        resident elements (payloads stay in RAM — re-demotion is then free
+        and a crash restart rebuilds the index from the manifests).
+        ``write_through`` covers the inserted signature every time;
+        ``checkpoint`` sweeps every signature each ``checkpoint_every``-th
+        insert.  Spill failures degrade (see :meth:`_spill_elem`), never
+        raise — crash-warmness is best-effort by design."""
+        if self.spill is None or self.spill_mode is None or self.degraded:
+            return
+        if self.spill_mode == "write_through":
+            todo = self._elements.get(signature, ())
+        else:
+            self._inserts_since_checkpoint += 1
+            if self._inserts_since_checkpoint < self.checkpoint_every:
+                return
+            self._inserts_since_checkpoint = 0
+            todo = self.elements()
+        for e in list(todo):
+            if e.data is None or e.spill is not None or not self.spill.spillable(e):
+                continue
+            if self._spill_elem(e):
+                self.writethrough_bytes += int(e.data.nbytes)
+            elif self.degraded:
+                return  # the tier just failed out from under us; stop paying it
 
     # -- internals -----------------------------------------------------------
     def _merge_group(self, signature: Hashable, usable_fn: Optional[UsableFn]) -> None:
@@ -685,19 +756,61 @@ class DifferentialStore:
             self.spill.drop(elem.spill)
             elem.spill = None
 
+    def _quarantine_element(self, elem: CacheElement) -> None:
+        """Remove an element whose spilled payload failed verification: GC
+        its spill objects (``spill_quarantined``), forget its device pins,
+        and drop it from the index so no later plan can choose it.  Its
+        window simply recomputes as a miss — corrupt bytes are never
+        served."""
+        self.plan_quarantines += 1
+        if elem.spill is not None and self.spill is not None:
+            self.spill.quarantine(elem.spill)
+            elem.spill = None
+        group = self._elements.get(elem.signature)
+        if group is not None and elem in group:
+            group.remove(elem)
+        self._drop_device(elem)
+
+    def _spill_elem(self, elem: CacheElement) -> bool:
+        """One guarded spill write: counts consecutive failures and flips the
+        store into ``degraded`` (RAM-only) past the threshold.  Returns
+        whether the element now has a spill copy."""
+        try:
+            elem.spill = self.spill.spill(elem)
+        except Exception:
+            self._spill_failures += 1
+            self.metrics.counter("spill_write_failures").inc()
+            if (
+                not self.degraded
+                and self._spill_failures >= self.spill_failure_threshold
+            ):
+                self.degraded = True
+                self.metrics.gauge("cache_degraded").set(1)
+            return False
+        self._spill_failures = 0
+        return True
+
     def _demote(self, elem: CacheElement) -> None:
         """Move ``elem``'s payload out of the RAM tier.  With a spill tier
         (and a spillable element) the payload is parked as an IPC file — or
         simply dereferenced when a clean spill copy already exists; without
-        one, the element is dropped entirely (the pre-spill behavior).
+        one — or once the spill tier is ``degraded`` — the element is dropped
+        entirely (the pre-spill behavior).
 
         Always safe for concurrent readers: handed-out slices are views over
         immutable buffers that outlive the store's reference."""
-        if self.spill is not None and (
-            elem.spill is not None or self.spill.spillable(elem)
+        if (
+            self.spill is not None
+            and not (self.degraded and elem.spill is None)
+            and (elem.spill is not None or self.spill.spillable(elem))
         ):
-            if elem.spill is None:
-                elem.spill = self.spill.spill(elem)
+            if elem.spill is None and not self._spill_elem(elem):
+                # the tier refused the payload: fall back to dropping (the
+                # degradation ladder, not an error — the run goes on)
+                self._elements[elem.signature].remove(elem)
+                self._drop_spill_entry(elem)
+                self._drop_device(elem)
+                return
             elem.data = None
             self.demotions += 1
         else:

@@ -181,6 +181,7 @@ class ScanExecutor:
         claim = None
         waits = 0
         spill_bytes = 0  # accumulated across replan rounds (see executor)
+        quarantined = 0  # spill payloads failing integrity checks, ditto
         elem_views: List[Tuple] = []  # pre-insert element state, for explain
         try:
             while True:
@@ -195,9 +196,11 @@ class ScanExecutor:
                 if use_device:
                     plan_kwargs["device_consumer"] = True
                 with self.tracer.span("scan.plan", table=table), self._lock:
+                    q0 = getattr(self.cache, "plan_quarantines", 0)
                     plan = self.cache.plan(
                         scan, snapshot, meta.sort_key, **plan_kwargs
                     )
+                    quarantined += getattr(self.cache, "plan_quarantines", 0) - q0
                     if (
                         explain is not None
                         and explain.enabled
@@ -344,6 +347,7 @@ class ScanExecutor:
                 current_id=current_id,
                 rows=residual_rows,
                 tier=hit_tier,
+                quarantined=quarantined,
             )
 
         with self.tracer.span("scan.union", table=table, chunks=len(chunks)):

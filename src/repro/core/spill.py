@@ -31,7 +31,8 @@ from __future__ import annotations
 import json
 import struct
 import uuid
-from typing import List
+import zlib
+from typing import List, Optional
 
 from repro.core.cache import CacheElement, FragmentPin, next_elem_id
 from repro.core.columnar import Table, read_ipc, write_ipc
@@ -40,18 +41,56 @@ from repro.lake.s3sim import ObjectStore
 from repro.obs.metrics import MetricAttr, Metrics
 from repro.obs.trace import Tracer, get_tracer
 
-__all__ = ["SpillEntry", "SpillTier"]
+__all__ = ["SpillCorruption", "SpillEntry", "SpillTier"]
+
+
+class SpillCorruption(RuntimeError):
+    """A spilled payload failed integrity verification (missing, truncated,
+    or checksum mismatch).  Raised *instead of* returning bytes: the cache
+    quarantines the element and recomputes the window — corrupt data is
+    never served."""
+
+
+class _CRC32Writer:
+    """File-object shim that accumulates a crc32 of everything written, so
+    the spill checksum costs one streaming pass — no second buffer copy."""
+
+    __slots__ = ("_f", "crc")
+
+    def __init__(self, f):
+        self._f = f
+        self.crc = 0
+
+    def write(self, b) -> int:
+        self.crc = zlib.crc32(b, self.crc)
+        return self._f.write(b)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
 
 
 class SpillEntry:
-    """One spilled element: where its payload and manifest live."""
+    """One spilled element: where its payload and manifest live.
 
-    __slots__ = ("data_key", "manifest_key", "nbytes")
+    ``checksum``/``stored_nbytes`` carry the end-to-end integrity facts
+    (crc32 + on-store size of the IPC file); ``None`` on entries restored
+    from pre-checksum manifests, which load unverified (back-compat)."""
 
-    def __init__(self, data_key: str, manifest_key: str, nbytes: int):
+    __slots__ = ("data_key", "manifest_key", "nbytes", "checksum", "stored_nbytes")
+
+    def __init__(
+        self,
+        data_key: str,
+        manifest_key: str,
+        nbytes: int,
+        checksum: Optional[int] = None,
+        stored_nbytes: Optional[int] = None,
+    ):
         self.data_key = data_key
         self.manifest_key = manifest_key
         self.nbytes = nbytes  # payload bytes as they were in RAM
+        self.checksum = checksum
+        self.stored_nbytes = stored_nbytes
 
     def __repr__(self) -> str:  # pragma: no cover - debug sugar
         return f"SpillEntry({self.data_key}, {self.nbytes}B)"
@@ -74,6 +113,14 @@ class SpillTier:
     bytes_spilled = MetricAttr("spill_bytes_written")
     bytes_promoted = MetricAttr("spill_bytes_promoted")
     bytes_mmap = MetricAttr("spill_bytes_mmap")
+    # integrity ledger: payloads that failed verification and were GC'd
+    # (quarantined), and the raw count of corruption events detected —
+    # the chaos gate asserts detected ≥ 1 with ZERO corrupt bytes served
+    quarantined = MetricAttr("spill_quarantined")
+    corruption = MetricAttr("corruption_detected")
+    # payloads no surviving manifest references (e.g. the manifest upload
+    # itself was torn): swept at restore so they cannot accrete forever
+    orphans = MetricAttr("spill_orphans_deleted")
 
     def __init__(
         self,
@@ -82,10 +129,17 @@ class SpillTier:
         mmap: bool = True,
         metrics: "Metrics" = None,
         tracer: "Tracer" = None,
+        restore_verify: str = "size",
     ):
+        assert restore_verify in ("off", "size", "full")
         self.store = store
         self.prefix = prefix.rstrip("/")
         self.mmap = mmap
+        # restart warm-up verification depth: "size" (default) catches torn
+        # and missing payloads in O(manifests); "full" re-checksums every
+        # payload (one read pass per spilled element); "off" trusts disk —
+        # promotion still verifies the crc either way.
+        self.restore_verify = restore_verify
         self._metrics = metrics
         self._tracer = tracer
         self.metrics_labels: dict = {}
@@ -118,7 +172,9 @@ class SpillTier:
         manifest_key = f"{self.prefix}/manifest/{eid}.json"
         with self.tracer.span("spill.write", bytes=int(elem.data.nbytes)):
             with self.store.put_stream(data_key) as f:
-                write_ipc(elem.data, f)
+                w = _CRC32Writer(f)
+                stored = write_ipc(elem.data, w)
+                checksum = w.crc
         manifest = {
             "signature": elem.signature,
             "table": elem.table,
@@ -136,6 +192,10 @@ class SpillTier:
             "owner": elem.owner,
             "nbytes": int(elem.data.nbytes),
             "data_key": data_key,
+            # end-to-end integrity: crc32 + size of the IPC file as written;
+            # load()/restore() refuse payloads that no longer match
+            "checksum": int(checksum),
+            "stored_nbytes": int(stored),
         }
         try:
             self.store.put(manifest_key, json.dumps(manifest).encode())
@@ -149,7 +209,55 @@ class SpillTier:
             raise
         self.spills += 1
         self.bytes_spilled += int(elem.data.nbytes)
-        return SpillEntry(data_key, manifest_key, int(elem.data.nbytes))
+        return SpillEntry(
+            data_key,
+            manifest_key,
+            int(elem.data.nbytes),
+            checksum=int(checksum),
+            stored_nbytes=int(stored),
+        )
+
+    # -- integrity -----------------------------------------------------------
+    def verify(self, entry: SpillEntry, full: bool = True) -> None:
+        """Check a spilled payload against its recorded size and (``full``)
+        crc32; raises :class:`SpillCorruption` — and counts the detection —
+        on any mismatch.  Entries from pre-checksum manifests pass (there is
+        nothing to verify against)."""
+        try:
+            path = self.store.local_path(entry.data_key)
+        except FileNotFoundError:
+            self.corruption += 1
+            raise SpillCorruption(f"spill payload missing: {entry.data_key}")
+        if entry.stored_nbytes is not None:
+            import os
+
+            actual = os.path.getsize(path)
+            if actual != entry.stored_nbytes:
+                self.corruption += 1
+                raise SpillCorruption(
+                    f"spill payload truncated: {entry.data_key} "
+                    f"({actual}B on store, {entry.stored_nbytes}B written)"
+                )
+        if full and entry.checksum is not None:
+            crc = 0
+            with open(path, "rb") as f:
+                while True:
+                    chunk = f.read(1 << 20)
+                    if not chunk:
+                        break
+                    crc = zlib.crc32(chunk, crc)
+            if crc != entry.checksum:
+                self.corruption += 1
+                raise SpillCorruption(
+                    f"spill payload checksum mismatch: {entry.data_key}"
+                )
+
+    def quarantine(self, entry: SpillEntry) -> None:
+        """GC a payload that failed verification and count it.  The element
+        it backed is the caller's to drop — the window recomputes as a miss
+        instead of serving the bad bytes."""
+        self.quarantined += 1
+        self.drop(entry)
 
     # -- promote -------------------------------------------------------------
     def load(self, entry: SpillEntry) -> Table:
@@ -157,10 +265,24 @@ class SpillTier:
         (through ``get_range``, so it lands on the ledger) and the column
         buffers are memory-mapped — zero-copy until touched.  The mapped
         payload bytes land on the ledger's ``bytes_mmap`` counter so per-run
-        byte attribution is complete."""
+        byte attribution is complete.  The payload is verified (size + crc)
+        *before* any byte is parsed — a corrupt or torn file raises
+        :class:`SpillCorruption` rather than ever reaching a consumer."""
         with self.tracer.span("spill.promote", key=entry.data_key) as sp:
+            self.verify(entry)
             head = self.store.get_range(entry.data_key, 0, 16)
             (hlen,) = struct.unpack("<Q", head[8:16])
+            # the head travelled over the (faultable) GET path *after* the
+            # at-rest verify: a transport-corrupted header must not steer
+            # the parse — magic + a sane header length or it's corruption
+            if head[:8] != b"RIPC0001" or (
+                entry.stored_nbytes is not None
+                and 16 + hlen > entry.stored_nbytes
+            ):
+                self.corruption += 1
+                raise SpillCorruption(
+                    f"spill payload header corrupt: {entry.data_key}"
+                )
             self.store.get_range(entry.data_key, 16, hlen)
             tbl = read_ipc(self.store.local_path(entry.data_key), mmap=self.mmap)
             body = max(0, self.store.size(entry.data_key) - 16 - int(hlen))
@@ -191,6 +313,8 @@ class SpillTier:
         liveness eviction).  Readers holding mmap views of the payload keep
         them — the unlinked file's pages survive until the views die."""
         for key in (entry.data_key, entry.manifest_key):
+            if not key:  # quarantined manifests may never have named a payload
+                continue
             try:
                 self.store.delete(key)
             except FileNotFoundError:  # pragma: no cover - already gone
@@ -200,13 +324,26 @@ class SpillTier:
     def restore(self) -> List[CacheElement]:
         """Rebuild demoted elements from every manifest under this tier's
         prefix.  Manifest bytes are read through the store API (accounted);
-        payloads stay spilled until a plan promotes them."""
+        payloads stay spilled until a plan promotes them.
+
+        A crash can leave this prefix in any state — manifests whose payload
+        is missing, truncated (``restore_verify="size"``), bit-rotted
+        (``"full"``), or whose JSON never finished uploading are *skipped and
+        GC'd* (``spill_quarantined``), never trusted: a poisoned spill root
+        costs cache warmth, not correctness and not a crashed restart."""
         out: List[CacheElement] = []
         for key in self.store.list(f"{self.prefix}/manifest/"):
-            m = json.loads(self.store.get(key))
-            entry = SpillEntry(m["data_key"], key, int(m["nbytes"]))
-            out.append(
-                CacheElement(
+            entry = None
+            try:
+                m = json.loads(self.store.get(key))
+                entry = SpillEntry(
+                    m["data_key"],
+                    key,
+                    int(m["nbytes"]),
+                    checksum=m.get("checksum"),
+                    stored_nbytes=m.get("stored_nbytes"),
+                )
+                elem = CacheElement(
                     elem_id=next_elem_id(),
                     table=m["table"],
                     sort_key=m["sort_key"],
@@ -228,7 +365,29 @@ class SpillTier:
                     owner=m["owner"],
                     spill=entry,
                 )
-            )
+                if self.restore_verify != "off":
+                    self.verify(entry, full=self.restore_verify == "full")
+            except SpillCorruption:
+                self.quarantine(entry)
+                continue
+            except (KeyError, TypeError, ValueError):
+                # unparseable or structurally-wrong manifest (e.g. a torn
+                # manifest upload): corrupt metadata, same discipline
+                self.corruption += 1
+                self.quarantine(entry or SpillEntry("", key, 0))
+                continue
+            out.append(elem)
+        # orphan sweep: a torn manifest upload leaves a payload no manifest
+        # names (the data_key is unrecoverable from the broken JSON) — GC it
+        # here or it leaks on every crashed restart
+        referenced = {e.spill.data_key for e in out}
+        for key in self.store.list(f"{self.prefix}/data/"):
+            if key not in referenced:
+                self.orphans += 1
+                try:
+                    self.store.delete(key)
+                except FileNotFoundError:  # pragma: no cover - racing GC
+                    pass
         return out
 
     @property

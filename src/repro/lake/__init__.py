@@ -2,7 +2,13 @@
 fragments (the Parquet analogue), and an Iceberg-style catalog with
 snapshot isolation and atomic commits."""
 
-from repro.lake.s3sim import ObjectStore, StoreStats, LatencyModel
+from repro.lake.s3sim import ObjectStore, StoreStats, LatencyModel, TransientStoreError
+from repro.lake.faults import (
+    FaultPlan,
+    FaultyObjectStore,
+    InjectedCrash,
+    RetryPolicy,
+)
 from repro.lake.fragments import FragmentMeta, write_fragment, read_fragment_columns
 from repro.lake.catalog import Catalog, TableMeta, Snapshot
 
@@ -10,6 +16,11 @@ __all__ = [
     "ObjectStore",
     "StoreStats",
     "LatencyModel",
+    "TransientStoreError",
+    "FaultPlan",
+    "FaultyObjectStore",
+    "InjectedCrash",
+    "RetryPolicy",
     "FragmentMeta",
     "write_fragment",
     "read_fragment_columns",

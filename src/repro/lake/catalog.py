@@ -14,6 +14,19 @@ Semantics reproduced from the paper's requirements:
 
 Metadata lives in the object store as write-once JSON blobs plus one
 atomically-replaced pointer file per table (the Iceberg "version hint").
+
+**Crash consistency.**  A materializing publish is many physical writes
+(one per fragment) followed by one atomic pointer swap; a crash anywhere
+before the swap leaves orphaned fragment objects, and a crash between the
+swap and cleanup leaves a stale intent.  Every publish therefore journals
+an *intent* — the full list of fragment keys it is about to write — to
+``_catalog/_journal/`` BEFORE the first data put, and deletes it after the
+commit lands.  :meth:`Catalog.recover_journal`, run at restart, resolves
+each surviving intent against the table's snapshot chain: keys all
+referenced ⇒ the commit landed (roll forward = drop the intent); otherwise
+the commit never happened and the orphaned objects are GC'd.  Readers are
+safe either way — they only follow the pointer — so the journal's job is
+purely to keep a chaotic store from leaking unreachable bytes.
 """
 
 from __future__ import annotations
@@ -95,7 +108,11 @@ class Catalog:
         # pointer files live OUTSIDE the write-once store (they must be
         # replaceable); everything else is immutable blobs inside it.
         self._meta_dir = os.path.join(store.root, "_catalog")
-        os.makedirs(self._meta_dir, exist_ok=True)
+        self._journal_dir = os.path.join(self._meta_dir, "_journal")
+        os.makedirs(self._journal_dir, exist_ok=True)
+        # late-wired observability sink (repro.obs.Metrics): journal
+        # recovery counts what it rolled forward / GC'd when present
+        self.metrics = None
         self._snapshots: Dict[str, Snapshot] = {}  # id -> snapshot (cache)
         self._tables: Dict[str, TableMeta] = {}
 
@@ -277,16 +294,129 @@ class Catalog:
             self._write_ptr(full_name, ptr)
             return snap
 
-    def _fragmentize(self, full_name: str, data: Table, sort_key: str) -> List[FragmentMeta]:
+    def _plan_fragments(
+        self, full_name: str, data: Table, sort_key: str
+    ) -> List[Tuple[str, str, Table]]:
+        """Chunk ``data`` and assign fragment ids/keys WITHOUT writing —
+        the publish journal must know every key before the first put."""
         data = data.sort_by(sort_key)
-        out: List[FragmentMeta] = []
+        out: List[Tuple[str, str, Table]] = []
         n = data.num_rows
         for start in range(0, n, self.rows_per_fragment):
             chunk = data.slice(start, min(start + self.rows_per_fragment, n))
             fid = uuid.uuid4().hex[:16]
             key = f"data/{full_name}/frag-{fid}.bin"
-            out.append(write_fragment(self.store, key, fid, chunk, sort_key))
+            out.append((fid, key, chunk))
         return out
+
+    # -- publish journal (crash consistency) --------------------------------
+    def _begin_publish(self, full_name: str, keys: List[str]) -> str:
+        """Journal the intent to write ``keys`` — atomically published (tmp +
+        replace) BEFORE any fragment put, so a crash at any later point
+        leaves an intent that names every possibly-orphaned object."""
+        intent_id = uuid.uuid4().hex[:16]
+        path = os.path.join(self._journal_dir, f"{intent_id}.json")
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump({"intent_id": intent_id, "table": full_name, "keys": keys}, f)
+        os.replace(tmp, path)
+        return intent_id
+
+    def _end_publish(self, intent_id: str) -> None:
+        try:
+            os.remove(os.path.join(self._journal_dir, f"{intent_id}.json"))
+        except FileNotFoundError:  # pragma: no cover - already recovered
+            pass
+
+    def _publish(
+        self,
+        full_name: str,
+        planned: List[Tuple[str, str, Table]],
+        dropped_ids: frozenset,
+        operation: str,
+        expected_parent: Optional[str],
+        properties: Optional[Dict[str, str]] = None,
+        schema: Optional[Dict[str, str]] = None,
+        sort_key: Optional[str] = None,
+    ) -> Snapshot:
+        """The journaled write path every commit with data goes through:
+        intent → fragment puts → commit → intent delete.  A crash (or a
+        retry-exhausted store error) anywhere in the middle leaves the
+        intent for :meth:`recover_journal`; a :class:`CommitConflict` is a
+        *clean* in-process failure, so its freshly written fragments are
+        GC'd inline rather than lingering until the next restart."""
+        keys = [key for _fid, key, _chunk in planned]
+        intent = self._begin_publish(full_name, keys) if keys else None
+        try:
+            frags = [
+                write_fragment(self.store, key, fid, chunk, sort_key)
+                for fid, key, chunk in planned
+            ]
+            snap = self._commit(
+                full_name, frags, dropped_ids, operation,
+                expected_parent, properties, schema,
+            )
+        except CommitConflict:
+            for key in keys:
+                if self.store.exists(key):
+                    self.store.delete(key)
+            if intent is not None:
+                self._end_publish(intent)
+            raise
+        if intent is not None:
+            self._end_publish(intent)
+        return snap
+
+    def _referenced_keys(self, full_name: str) -> set:
+        """Every fragment key reachable from the table's snapshot chain
+        (current AND historical — time-travel readers still hold the past)."""
+        try:
+            snaps = self.history(full_name)
+        except (KeyError, FileNotFoundError):
+            return set()
+        return {f.key for snap in snaps for f in snap.fragments}
+
+    def recover_journal(self) -> Dict[str, int]:
+        """Resolve intents a crashed publish left behind; run at restart,
+        before serving traffic.  For each intent: if every key it names is
+        referenced by its table's snapshot chain, the commit landed and the
+        crash hit between the pointer swap and cleanup — roll forward by
+        dropping the intent.  Otherwise the commit never happened:
+        delete whichever fragment objects made it to the store (orphans no
+        snapshot will ever reference) along with the intent."""
+        stats = {"completed": 0, "rolled_back": 0, "orphans_deleted": 0}
+        if not os.path.isdir(self._journal_dir):
+            return stats
+        for fn in sorted(os.listdir(self._journal_dir)):
+            if not fn.endswith(".json"):
+                continue
+            path = os.path.join(self._journal_dir, fn)
+            try:
+                with open(path) as f:
+                    intent = json.load(f)
+                table, keys = intent["table"], list(intent["keys"])
+            except (ValueError, KeyError, OSError):
+                # unreadable intent: intents publish atomically BEFORE any
+                # data put, so a half-written one precedes all writes and
+                # there is nothing to GC
+                os.remove(path)
+                continue
+            referenced = self._referenced_keys(table)
+            if keys and all(k in referenced for k in keys):
+                stats["completed"] += 1
+            else:
+                for k in keys:
+                    if k not in referenced and self.store.exists(k):
+                        self.store.delete(k)
+                        stats["orphans_deleted"] += 1
+                stats["rolled_back"] += 1
+            os.remove(path)
+        m = self.metrics
+        if m is not None and (stats["completed"] or stats["rolled_back"]):
+            m.counter("journal_rolled_forward").inc(stats["completed"])
+            m.counter("journal_rolled_back").inc(stats["rolled_back"])
+            m.counter("journal_orphans_deleted").inc(stats["orphans_deleted"])
+        return stats
 
     def append(
         self,
@@ -296,9 +426,10 @@ class Catalog:
         properties: Optional[Dict[str, str]] = None,
     ) -> Snapshot:
         meta = self.table(full_name)
-        frags = self._fragmentize(full_name, data, meta.sort_key)
-        return self._commit(
-            full_name, frags, frozenset(), "append", expected_parent, properties
+        planned = self._plan_fragments(full_name, data, meta.sort_key)
+        return self._publish(
+            full_name, planned, frozenset(), "append", expected_parent,
+            properties, sort_key=meta.sort_key,
         )
 
     def overwrite_range(
@@ -342,7 +473,7 @@ class Catalog:
             for f in cur.fragments
             if any(f.overlaps(lo, hi) for lo, hi in ranges)
         )
-        new_frags: List[FragmentMeta] = []
+        planned: List[Tuple[str, str, Table]] = []
         # rewrite surviving rows of dropped fragments (outside every window)
         from repro.lake.fragments import read_fragment_columns
 
@@ -355,9 +486,10 @@ class Catalog:
             for lo, hi in ranges:
                 keep &= (keys < lo) | (keys >= hi)
             if keep.any():
-                new_frags.extend(self._fragmentize(full_name, tbl.filter(keep), meta.sort_key))
+                planned.extend(self._plan_fragments(full_name, tbl.filter(keep), meta.sort_key))
         if data is not None and data.num_rows:
-            new_frags.extend(self._fragmentize(full_name, data, meta.sort_key))
-        return self._commit(
-            full_name, new_frags, dropped, "overwrite", expected_parent, properties, schema
+            planned.extend(self._plan_fragments(full_name, data, meta.sort_key))
+        return self._publish(
+            full_name, planned, dropped, "overwrite", expected_parent,
+            properties, schema, sort_key=meta.sort_key,
         )

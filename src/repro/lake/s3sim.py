@@ -18,7 +18,16 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, Optional
 
-__all__ = ["StoreStats", "LatencyModel", "ObjectStore"]
+__all__ = ["StoreStats", "LatencyModel", "ObjectStore", "TransientStoreError"]
+
+
+class TransientStoreError(IOError):
+    """A request-scoped store failure (timeout, 500, throttle) that a retry
+    is expected to cure.  ``retryable`` is the duck-typed marker the store's
+    retry loop keys on, so injection layers can raise their own exception
+    types without an import cycle."""
+
+    retryable = True
 
 
 @dataclass
@@ -88,11 +97,24 @@ class ObjectStore:
     metadata commits).
     """
 
-    def __init__(self, root: str, latency: Optional[LatencyModel] = None):
+    def __init__(
+        self,
+        root: str,
+        latency: Optional[LatencyModel] = None,
+        retry=None,
+    ):
         self.root = root
         os.makedirs(root, exist_ok=True)
         self.stats = StoreStats()
         self.latency = latency or LatencyModel()
+        # retry discipline around the raw I/O primitives: None (default)
+        # means fail fast — the raw ops never raise TransientStoreError, so
+        # plain stores pay zero overhead.  A RetryPolicy (repro.lake.faults)
+        # bounds attempts with backoff; `metrics`/`tracer` are optional
+        # late-wired observability sinks for retry/giveup accounting.
+        self.retry = retry
+        self.metrics = None
+        self.tracer = None
         self._lock = threading.Lock()
         self._sizes: Dict[str, int] = {}
         # per-thread ledger: with many concurrent runs sharing one store
@@ -151,18 +173,72 @@ class ObjectStore:
             self._sizes[key] = os.path.getsize(self._path(key))
         return self._sizes[key]
 
+    # -- retry discipline ----------------------------------------------------
+    def _attempt(self, op: str, key: str, fn):
+        """Run one logical operation through the retry policy.  Errors whose
+        type carries ``retryable = True`` (:class:`TransientStoreError` and
+        friends) are retried with backoff up to ``retry.max_attempts``; the
+        loop is bypassed entirely when no policy is configured."""
+        retry = self.retry
+        if retry is None:
+            return fn()
+        attempt = 1
+        while True:
+            try:
+                return fn()
+            except Exception as e:
+                if not getattr(e, "retryable", False):
+                    raise
+                if attempt >= retry.max_attempts:
+                    self._note_retry("store_giveups", op, key)
+                    raise
+                self._note_retry("store_retries", op, key)
+                delay = retry.delay(attempt)
+                tracer = self.tracer
+                if tracer is not None:
+                    with tracer.span(
+                        "store.retry", op=op, attempt=attempt, key=key
+                    ) as sp:
+                        sp.attrs["delay_s"] = round(delay, 6)
+                        retry.sleep(delay)
+                else:
+                    retry.sleep(delay)
+                attempt += 1
+
+    def _note_retry(self, counter: str, op: str, key: str) -> None:
+        m = self.metrics
+        if m is not None:
+            m.counter(counter, op=op).inc()
+
+    # -- raw primitives (the per-attempt physical ops; fault layers override)
+    # put/publish return the *published* object size: a torn upload lands
+    # short, and the size index must answer like a HEAD on the real object
+    # or integrity checks downstream would be blinded.
+    def _read_range_raw(self, key: str, start: int, length: int) -> bytes:
+        with open(self._path(key), "rb") as f:
+            f.seek(start)
+            return f.read(length)
+
+    def _put_raw(self, key: str, path: str, data: bytes) -> int:
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic publish
+        return len(data)
+
+    def _publish_raw(self, key: str, tmp: str, path: str, size: int) -> int:
+        os.replace(tmp, path)  # atomic publish
+        return size
+
     # -- I/O ----------------------------------------------------------------
     def put(self, key: str, data: bytes) -> None:
         path = self._path(key)
         if os.path.exists(path):
             raise FileExistsError(f"object {key!r} is immutable")
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            f.write(data)
-        os.replace(tmp, path)  # atomic publish
+        published = self._attempt("put", key, lambda: self._put_raw(key, path, data))
         with self._lock:
-            self._sizes[key] = len(data)
+            self._sizes[key] = published
         self._record(puts=1, written=len(data))
 
     @contextmanager
@@ -171,7 +247,9 @@ class ObjectStore:
         the caller fills incrementally (e.g. ``write_ipc`` spilling a cache
         element without a second in-memory copy of its buffers).  On clean
         exit the object is atomically published and the written bytes are
-        accounted; on error the partial upload is discarded."""
+        accounted; on error the partial upload is discarded.  The publish
+        step (not the local streaming) is the retried physical operation —
+        the tmp upload survives across attempts."""
         path = self._path(key)
         if os.path.exists(path):
             raise FileExistsError(f"object {key!r} is immutable")
@@ -181,15 +259,17 @@ class ObjectStore:
             with open(tmp, "wb") as f:
                 yield f
                 size = f.tell()
+            published = self._attempt(
+                "put", key, lambda: self._publish_raw(key, tmp, path, size)
+            )
         except BaseException:
             try:
                 os.remove(tmp)
             except OSError:
                 pass
             raise
-        os.replace(tmp, path)  # atomic publish
         with self._lock:
-            self._sizes[key] = size
+            self._sizes[key] = published
         self._record(puts=1, written=size)
 
     def local_path(self, key: str) -> str:
@@ -205,9 +285,9 @@ class ObjectStore:
 
     def get_range(self, key: str, start: int, length: int) -> bytes:
         """Range-byte GET — the paper's atomic physical operation."""
-        with open(self._path(key), "rb") as f:
-            f.seek(start)
-            data = f.read(length)
+        data = self._attempt(
+            "get", key, lambda: self._read_range_raw(key, start, length)
+        )
         self._record(gets=1, read=len(data), secs=self.latency.seconds(len(data)))
         return data
 

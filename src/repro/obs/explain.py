@@ -27,6 +27,8 @@ cause                     meaning
 ``snapshot-travel``       the run reads a pinned/older snapshot than the
                           catalog head
 ``evicted``               signature unchanged but no cached windows remain
+``spill-corrupt``         a spilled payload failed integrity verification and
+                          was quarantined — the window recomputed as a miss
 ``pin-change``            an explicit snapshot pin in the plan changed
 ``contract-change``       runtime/incrementality contract changed
 ``input-change``          inputs were added, removed, or rebound
@@ -65,6 +67,7 @@ CAUSES = (
     "overwrite",
     "snapshot-travel",
     "evicted",
+    "spill-corrupt",
     "pin-change",
     "contract-change",
     "input-change",
@@ -75,6 +78,7 @@ CAUSES = (
 # Higher-precedence causes win when a run recomputes for several reasons at
 # once (primary_cause); upstream-edit is attributed to its root instead.
 _PRECEDENCE = (
+    "spill-corrupt",
     "snapshot-travel",
     "overwrite",
     "append",
@@ -248,6 +252,7 @@ class Explainer:
         current_ids: Any,
         rows: int = 0,
         tier: str = "",
+        quarantined: int = 0,
     ) -> str:
         """Classify one incremental model node's plan outcome and record the
         decision.  ``elements`` are immutable views ``(window, pins, columns,
@@ -257,10 +262,37 @@ class Explainer:
         the run resolved; ``current_ids`` the catalog-head snapshot ids for
         travel detection — a dict, or a zero-arg callable resolved only when
         an invalidation actually needs it (keeps catalog pointer reads off
-        the warm serve path)."""
+        the warm serve path).  ``quarantined`` counts spill payloads the plan
+        quarantined for failing integrity verification — the definitive cause
+        of the recompute when set."""
         if not expl.enabled:
             return ""
         last = self._last_parts.get(node)
+        if quarantined and not residual.empty:
+            cause = "spill-corrupt"
+            detail = (
+                f"{quarantined} spilled payload(s) failed integrity "
+                "verification and were quarantined — recomputed as a miss"
+            )
+            action, root = "recompute", node
+            self._last_parts[node] = sig_parts
+            expl.record(
+                Decision(
+                    run_id=expl.run_id,
+                    node=node,
+                    kind=kind,
+                    action=action,
+                    window=window.to_pairs(),
+                    residual=residual.to_pairs(),
+                    cause=cause,
+                    detail=detail,
+                    root=root,
+                    tier=tier,
+                    rows=rows,
+                    signature=str(signature)[:16],
+                )
+            )
+            return cause
         if residual.empty:
             cause, detail = "cached", "every window served from cache"
             if last is not None and last != sig_parts and _strip_raw(last) == _strip_raw(sig_parts):
@@ -324,12 +356,14 @@ class Explainer:
         current_id: Any,
         rows: int = 0,
         tier: str = "",
+        quarantined: int = 0,
     ) -> str:
         """Classify one leaf-scan plan outcome (cache keyed by table name —
         the signature never changes, so causes are purely window/snapshot/
         projection shaped).  ``current_id`` may be the catalog-head snapshot
         id or a zero-arg callable returning it (resolved lazily, like
-        :meth:`classify_node`'s ``current_ids``)."""
+        :meth:`classify_node`'s ``current_ids``).  ``quarantined`` marks
+        integrity-quarantined spill payloads — the definitive cause."""
         if not expl.enabled:
             return ""
         if residual.empty:
@@ -338,7 +372,13 @@ class Explainer:
         else:
             action = "recompute"
             eligible = [e for e in elements if set(columns) <= set(e[2])]
-            if not elements:
+            if quarantined:
+                cause = "spill-corrupt"
+                detail = (
+                    f"{quarantined} spilled payload(s) failed integrity "
+                    "verification and were quarantined — recomputed as a miss"
+                )
+            elif not elements:
                 cause, detail = "cold", "first scan of this table"
             elif not eligible:
                 missing = sorted(

@@ -162,6 +162,12 @@ class Workspace:
             if catalog is not None
             else Catalog(self.store, rows_per_fragment=rows_per_fragment)
         )
+        if catalog is None:
+            # this workspace owns the catalog lifecycle, so restart recovery
+            # is its job: resolve publish intents a crashed run left behind
+            # (no-op — zero reads — when the journal is empty).  Injected
+            # catalogs are recovered by their owner (the service).
+            self.catalog.recover_journal()
         # ONE observability registry and tracer span the workspace: an
         # injected store's registry wins (the service wires every tenant
         # workspace to its shared one), so a single scrape covers the scan
@@ -651,6 +657,10 @@ class Workspace:
         # triggered are still this run's doing (the elements stay resident
         # for the final plan, which then reports 0 for them)
         spill_bytes = 0
+        # spill payloads the plan quarantined (checksum/size mismatch) and
+        # replanned around — the explainer reports those residuals as
+        # corruption-driven, not cache-miss-driven
+        quarantined = 0
         # device serving: a jax-runtime node consumes the hit∪residual UNION
         # as device arrays (fragment_gather assembly), skipping the H2D copy
         # its _invoke would otherwise pay.  Bails to numpy whenever any hit
@@ -682,6 +692,7 @@ class Workspace:
                         # a partially-covered fragment (unlike a physical
                         # scan, which must re-read the whole fragment's
                         # column chunks either way)
+                        q0 = getattr(self.model_store, "plan_quarantines", 0)
                         mplan = self.model_store.plan_window(
                             signature=step.signature,
                             window=step.window,
@@ -690,6 +701,9 @@ class Workspace:
                             usable_fn=usable_fn,
                             tenant=self.tenant,
                             device_consumer=use_device,
+                        )
+                        quarantined += (
+                            getattr(self.model_store, "plan_quarantines", 0) - q0
                         )
                         if expl.enabled and not mplan.residual.empty:
                             # pre-insert element views, captured under the
@@ -843,6 +857,7 @@ class Workspace:
                 current_ids=current_ids,
                 rows=fresh_rows,
                 tier="ram+spill" if spill_bytes else ("ram" if cached_rows else ""),
+                quarantined=quarantined,
             )
         self.metrics.counter("residual_rows", kind=step.incremental).inc(
             fresh_rows

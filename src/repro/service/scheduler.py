@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Union
 
 from repro.lake.catalog import Catalog
+from repro.lake.faults import FaultPlan, FaultyObjectStore, RetryPolicy
 from repro.lake.s3sim import ObjectStore
 from repro.obs import Metrics, Tracer, get_tracer
 from repro.pipeline.dsl import Project
@@ -49,6 +50,21 @@ class QueueFull(RuntimeError):
     """Admission rejected: the service's queue is at ``max_queued``."""
 
 
+def _is_transient(exc: Optional[BaseException]) -> bool:
+    """Is this failure rooted in a retryable store error?  Walks the cause/
+    context chain for the duck-typed ``retryable`` marker (see
+    :class:`~repro.lake.s3sim.TransientStoreError`) — a giveup surfaces
+    wrapped in whatever layer it unwound through, so the root, not the
+    surface type, carries the classification."""
+    seen: set = set()
+    while exc is not None and id(exc) not in seen:
+        seen.add(id(exc))
+        if getattr(exc, "retryable", False):
+            return True
+        exc = exc.__cause__ or exc.__context__
+    return False
+
+
 @dataclass
 class RunHandle:
     """One submitted pipeline run; the service's unit of scheduling."""
@@ -60,6 +76,11 @@ class RunHandle:
     result: Optional[RunResult] = None
     error: Optional[BaseException] = None
     wall_seconds: float = 0.0
+    # graceful-degradation ledger: how many attempts this run took, and the
+    # user-function rows each attempt fed (a transient retry against the
+    # cache the failed attempt partially warmed feeds strictly fewer rows)
+    attempts: int = 0
+    attempt_fresh_rows: List[int] = field(default_factory=list)
     # admission timestamp (perf_counter_ns, comparable across threads):
     # the worker that dequeues this handle turns it into the queue-wait
     # histogram observation and trace span
@@ -118,6 +139,14 @@ class PipelineService:
     shutdown flushes every resident element).  ``coalesce`` (default on)
     makes concurrent runs planning the same residual compute it exactly
     once.  Use as a context manager or call :meth:`shutdown`.
+
+    Chaos/robustness knobs: ``fault_plan`` swaps in a fault-injecting store
+    (``repro.lake.faults``), ``store_retry`` bounds per-request retries
+    below every consumer, ``max_run_attempts`` + ``run_retry`` retry whole
+    transient-failed runs with backoff (exhausted runs are quarantined),
+    and ``spill_mode`` ("write_through" | "checkpoint") makes the spill
+    tiers crash-warm instead of flush-on-shutdown-warm.  Startup recovers
+    the catalog's publish journal (``journal_recovery`` holds the tally).
     """
 
     def __init__(
@@ -138,14 +167,42 @@ class PipelineService:
         enforce_scopes: bool = False,
         claim_timeout: float = 60.0,
         tracer: Optional[Tracer] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        store_retry: Optional[RetryPolicy] = None,
+        max_run_attempts: int = 1,
+        run_retry: Optional[RetryPolicy] = None,
+        spill_mode: Optional[str] = None,
     ):
-        self.store = ObjectStore(root)
+        # chaos wiring: a FaultPlan swaps in the fault-injecting store (its
+        # default RetryPolicy absorbs transients below every consumer);
+        # store_retry also applies to plain stores (flaky real backends)
+        if fault_plan is not None:
+            self.store: ObjectStore = FaultyObjectStore(
+                root, plan=fault_plan, retry=store_retry
+            )
+        else:
+            self.store = ObjectStore(root, retry=store_retry)
         self.catalog = Catalog(self.store, rows_per_fragment=rows_per_fragment)
         # ONE registry and tracer for the whole service: both shared stores,
         # their spill tiers, every tenant workspace and the queue all record
         # into it, so report().metrics_text() is one consistent scrape
         self.metrics = Metrics()
         self.tracer = tracer if tracer is not None else get_tracer()
+        self.store.metrics = self.metrics
+        self.store.tracer = self.tracer
+        self.catalog.metrics = self.metrics
+        # restart recovery, before any traffic: roll forward / GC publish
+        # intents a crashed predecessor left in the journal
+        self.journal_recovery = self.catalog.recover_journal()
+        # run-level degradation: transient-rooted failures are retried with
+        # backoff up to max_run_attempts; runs still failing then are
+        # quarantined (counted, FAILED) instead of wedging a worker
+        self.max_run_attempts = int(max_run_attempts)
+        self.run_retry = (
+            run_retry
+            if run_retry is not None
+            else RetryPolicy(max_attempts=max(self.max_run_attempts, 1))
+        )
         # spill tiers live behind the SERVICE's object store (under _spill/),
         # so spill traffic is on the same ledger as everything else and a
         # new service over the same root restores the tiers' manifests and
@@ -160,6 +217,7 @@ class PipelineService:
             metrics=self.metrics,
             metrics_labels={"store": "scan"},
             tracer=self.tracer,
+            spill_mode=spill_mode if spill else None,
         )
         self.model_store = SharedStore(
             max_bytes=model_cache_bytes,
@@ -171,6 +229,7 @@ class PipelineService:
             metrics=self.metrics,
             metrics_labels={"store": "model"},
             tracer=self.tracer,
+            spill_mode=spill_mode if spill else None,
         )
         self.max_queued = max_queued
         self.max_commit_retries = max_commit_retries
@@ -313,15 +372,7 @@ class PipelineService:
                 )
             t0 = time.perf_counter()
             try:
-                with self.tracer.span(
-                    "service.run", tenant=handle.tenant, run_id=handle.run_id
-                ):
-                    session = self.session(handle.tenant)
-                    handle.result = session.run(handle.project)
-                handle.state = DONE
-            except BaseException as exc:  # a failed run must never kill a worker
-                handle.error = exc
-                handle.state = FAILED
+                self._execute(handle)
             finally:
                 handle.wall_seconds = time.perf_counter() - t0
                 self.metrics.counter(
@@ -353,6 +404,57 @@ class PipelineService:
                     self._cond.notify_all()
                 handle._done.set()
 
+    def _execute(self, handle: RunHandle) -> None:
+        """Run the handle to DONE or FAILED, retrying transient-rooted
+        failures (a store giveup after its own retry budget) with backoff
+        up to ``max_run_attempts``.  Each failed attempt's partial work is
+        not wasted: residuals it inserted before dying are cache hits for
+        the retry, which therefore feeds strictly fewer rows to the user
+        functions.  A run still transient-failing at the budget is *poison*
+        — counted ``runs_quarantined`` and FAILED, never requeued — so one
+        wedged input cannot occupy a worker forever.  Deterministic
+        failures (user bugs, contract violations) fail on attempt one."""
+        rows_metric = lambda: self.metrics.total("residual_rows")
+        while True:
+            handle.attempts += 1
+            rows0 = rows_metric()
+            try:
+                with self.tracer.span(
+                    "service.run",
+                    tenant=handle.tenant,
+                    run_id=handle.run_id,
+                    attempt=handle.attempts,
+                ):
+                    session = self.session(handle.tenant)
+                    handle.result = session.run(handle.project)
+                handle.attempt_fresh_rows.append(
+                    int(handle.result.rows_to_user_fns)
+                )
+                handle.state = DONE
+                return
+            except BaseException as exc:  # a failed run must never kill a worker
+                handle.attempt_fresh_rows.append(rows_metric() - rows0)
+                transient = _is_transient(exc)
+                if transient and handle.attempts < self.max_run_attempts:
+                    self.metrics.counter("run_retries", tenant=handle.tenant).inc()
+                    delay = self.run_retry.delay(handle.attempts)
+                    with self.tracer.span(
+                        "run.retry",
+                        tenant=handle.tenant,
+                        run_id=handle.run_id,
+                        attempt=handle.attempts,
+                    ) as sp:
+                        sp.attrs["delay_s"] = round(delay, 6)
+                        self.run_retry.sleep(delay)
+                    continue
+                if transient and self.max_run_attempts > 1:
+                    self.metrics.counter(
+                        "runs_quarantined", tenant=handle.tenant
+                    ).inc()
+                handle.error = exc
+                handle.state = FAILED
+                return
+
     @staticmethod
     def _summary(h: RunHandle) -> Dict[str, Any]:
         entry: Dict[str, Any] = {
@@ -361,6 +463,8 @@ class PipelineService:
             "state": h.state,
             "wall_seconds": round(h.wall_seconds, 6),
         }
+        if h.attempts > 1:
+            entry["attempts"] = h.attempts
         if h.result is not None:
             r = h.result
             entry.update(

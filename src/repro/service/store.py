@@ -117,6 +117,9 @@ class SharedStore(DifferentialStore):
         metrics: Optional[Metrics] = None,
         metrics_labels: Optional[Dict[str, str]] = None,
         tracer: Optional[Tracer] = None,
+        spill_mode: Optional[str] = None,
+        checkpoint_every: int = 8,
+        spill_failure_threshold: int = 3,
     ):
         # spill_root is the standalone convenience: a directory-backed
         # object store owned by this SharedStore.  Services pass `spill`
@@ -131,6 +134,9 @@ class SharedStore(DifferentialStore):
             metrics=metrics,
             metrics_labels=metrics_labels,
             tracer=tracer,
+            spill_mode=spill_mode,
+            checkpoint_every=checkpoint_every,
+            spill_failure_threshold=spill_failure_threshold,
         )
         self.liveness_runs = liveness_runs
         self.tenant_quota_bytes = tenant_quota_bytes
@@ -362,6 +368,11 @@ class SharedStore(DifferentialStore):
                 "cross_tenant_rows": self.cross_tenant_rows,
                 "coalesced_waits": self.coalesced_waits,
                 "claim_timeouts": self.claim_timeouts,
+                # robustness ledger (repro.lake.faults / integrity layer)
+                "degraded": self.degraded,
+                "spill_quarantined": self.spill.quarantined if self.spill else 0,
+                "corruption_detected": self.spill.corruption if self.spill else 0,
+                "writethrough_bytes": self.writethrough_bytes,
                 "tenant_bytes": dict(sorted(per_tenant.items())),
                 # device tier (zeros when no tier is attached)
                 **(

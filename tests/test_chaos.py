@@ -1,0 +1,447 @@
+"""Chaos edit-matrix suite (ISSUE 10): the differential cache under an
+object store that fails.
+
+Every test drives real pipelines through seeded :class:`FaultPlan`s —
+transient request failures, latency spikes, torn (truncated) uploads,
+at-rest bit rot, and process crashes mid-publish — and holds the line on
+ONE property: outputs stay **bitwise-equal to a fault-free run**, and zero
+corrupt bytes are ever served (corruption is detected, quarantined and
+recomputed, never returned).  Plans are seeded and op-count-keyed, so every
+chaos schedule here is exactly reproducible.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from edit_matrix import assert_outputs_bitwise_equal, standard_matrix, sweep
+from repro.core.cache import DifferentialCache, DifferentialStore
+from repro.core.spill import SpillCorruption, SpillTier
+from repro.dist.fault import SimClock
+from repro.lake import (
+    FaultPlan,
+    FaultyObjectStore,
+    InjectedCrash,
+    RetryPolicy,
+    TransientStoreError,
+)
+from repro.lake.catalog import Catalog
+from repro.lake.s3sim import ObjectStore
+from repro.obs import Metrics
+from repro.pipeline import Workspace
+from repro.service import PipelineService
+
+from test_incremental import SCHEMA, events_table, feature_project
+from test_service import (
+    TABLE,
+    cold_reference,
+    pipeline_project,
+    write_events,
+)
+
+
+def _retry(clock, attempts=6):
+    """Store-level retry with an instant simulated clock."""
+    return RetryPolicy(max_attempts=attempts, base_delay_s=0.001, clock=clock)
+
+
+def _seed_catalog(catalog):
+    catalog.create_table("ns", "raw", SCHEMA, "eventTime")
+    catalog.append("ns.raw", events_table(0, 1000))
+
+
+# ------------------------------------------------------------ fault plan unit
+def test_fault_plan_is_deterministic_and_seed_sensitive():
+    mk = lambda seed: FaultPlan(seed=seed, transient_rate=0.3, latency_spike_rate=0.2)
+    a, b, c = mk(11), mk(11), mk(12)
+    seq = lambda p: [
+        (d.transient, d.latency_s > 0)
+        for d in (p.decide("get", "k") for _ in range(64))
+    ]
+    sa, sb, sc = seq(a), seq(b), seq(c)
+    assert sa == sb  # same seed, same workload => identical schedule
+    assert sa != sc  # a different seed is a different schedule
+    assert any(t for t, _ in sa) and any(s for _, s in sa)
+
+
+def test_retry_absorbs_transients_and_counts_them(tmp_path):
+    clock = SimClock()
+    plan = FaultPlan(seed=5, transient_rate=0.4)
+    store = FaultyObjectStore(str(tmp_path), plan=plan, retry=_retry(clock))
+    store.metrics = m = Metrics()
+    for i in range(30):
+        store.put(f"k/{i}", b"x" * 64)
+    for i in range(30):
+        assert store.get_range(f"k/{i}", 0, 64) == b"x" * 64
+    assert plan.transients_injected > 0
+    assert m.total("store_retries") == plan.transients_injected
+    assert m.total("store_giveups") == 0
+    assert clock.time() > 0  # backoff elapsed on the simulated clock only
+
+
+def test_giveup_after_retry_budget(tmp_path):
+    plan = FaultPlan(seed=0, transient_rate=1.0)  # every attempt fails
+    store = FaultyObjectStore(
+        str(tmp_path), plan=plan, retry=_retry(SimClock(), attempts=3)
+    )
+    store.metrics = m = Metrics()
+    with pytest.raises(TransientStoreError):
+        store.put("k", b"payload")
+    assert m.total("store_retries") == 2
+    assert m.total("store_giveups") == 1
+
+
+# ------------------------------------------- the 11-edit matrix under faults
+def test_edit_matrix_under_transient_faults(tmp_path):
+    """The canonical 11-edit sweep with transients + latency spikes on every
+    request: the retry layer must absorb all of it — same answers, same
+    zero-recompute guarantees, bitwise-equal to plain cold references."""
+    clock = SimClock()
+    plan = FaultPlan(seed=42, transient_rate=0.15, latency_spike_rate=0.1)
+
+    def setup(root):
+        # the warm workspace lives on the faulted store; every cold
+        # reference runs fault-free, so equality proves no fault leaked
+        if root.endswith("em-warm"):
+            store = FaultyObjectStore(root, plan=plan, retry=_retry(clock))
+        else:
+            store = ObjectStore(root)
+        ws = Workspace(root, store=store)
+        _seed_catalog(ws.catalog)
+        return ws
+
+    append = lambda c: c.append("ns.raw", events_table(1000, 1100, seed=9))
+    overwrite = lambda c: c.overwrite_range(
+        "ns.raw", 100, 200, events_table(100, 200, seed=77)
+    )
+    edits = standard_matrix(
+        base=dict(hi=499),
+        widen=dict(hi=999),
+        narrow=dict(hi=299),
+        beyond=dict(hi=4999),
+        feature_add=dict(hi=4999, columns=("c1", "c2", "c3")),
+        feature_remove=dict(hi=4999),
+        code_edit=dict(hi=4999, gain=2.0),
+        append=append,
+        overwrite=overwrite,
+    )
+    sweep(tmp_path, setup, feature_project, edits)
+    assert plan.transients_injected > 0, "the chaos schedule never fired"
+    assert plan.spikes_injected > 0
+
+
+def test_edit_matrix_with_corrupted_and_torn_spill(tmp_path):
+    """Mid-sweep, one spilled model payload rots at rest and one spill
+    upload tears: both must be quarantined + recomputed (explainer cause
+    ``spill-corrupt``), with every answer still bitwise-equal."""
+    root = str(tmp_path / "em-warm")
+    store = ObjectStore(root)
+    metrics = Metrics()
+    model_store = DifferentialStore(
+        spill=SpillTier(store, prefix="_spill/model"),
+        metrics=metrics,
+        metrics_labels={"store": "model"},
+    )
+
+    def setup(r):
+        if r == root:
+            ws = Workspace(r, store=store, model_store=model_store)
+        else:
+            ws = Workspace(r)
+        try:
+            _seed_catalog(ws.catalog)
+        except FileExistsError:
+            pass  # the warm root persists across the two half-sweeps
+        return ws
+
+    edits = standard_matrix(
+        base=dict(hi=499),
+        widen=dict(hi=999),
+        narrow=dict(hi=299),
+        beyond=dict(hi=4999),
+        feature_add=dict(hi=4999, columns=("c1", "c2", "c3")),
+        feature_remove=dict(hi=4999),
+        code_edit=dict(hi=4999, gain=2.0),
+        append=lambda c: c.append("ns.raw", events_table(1000, 1100, seed=9)),
+        overwrite=lambda c: c.overwrite_range(
+            "ns.raw", 100, 200, events_table(100, 200, seed=77)
+        ),
+    )
+    head, tail = edits[:5], edits[5:]
+    sweep(tmp_path, setup, feature_project, head)
+
+    # park every resident element in the spill tier, then damage two
+    # payloads on disk: one bit-flipped (rot), one truncated (torn upload)
+    model_store.demote_all()
+    payloads = [k for k in store.list("_spill/model") if not k.endswith(".json")]
+    assert len(payloads) >= 2, payloads
+    flip_path = store.local_path(payloads[0])
+    with open(flip_path, "r+b") as f:
+        f.seek(os.path.getsize(flip_path) // 2)
+        b = f.read(1)
+        f.seek(-1, 1)
+        f.write(bytes([b[0] ^ 0x01]))
+    torn_path = store.local_path(payloads[1])
+    with open(torn_path, "r+b") as f:
+        f.truncate(os.path.getsize(torn_path) // 2)
+
+    before = metrics.total("corruption_detected")
+    sweep(tmp_path, setup, feature_project, tail)
+    assert metrics.total("corruption_detected") >= before + 2
+    assert metrics.total("spill_quarantined") >= 2
+    # the quarantined keys were GC'd, not left to poison a later restart
+    left = set(store.list("_spill/model"))
+    assert payloads[0] not in left and payloads[1] not in left
+
+
+def test_crash_restart_mid_sequence(tmp_path):
+    """A crash mid-append (fragment puts done, commit never lands) must
+    leave the lake exactly as before the edit: restart recovery GCs the
+    orphans, the replayed edit commits cleanly, and the continued sweep
+    stays bitwise-equal to cold references that never saw a crash."""
+    root = str(tmp_path / "em-warm")
+    clock = SimClock()
+    # the seed commit writes fragments 0..7 (1000 rows / 128); the edit's
+    # append is the next data put — crash exactly there
+    plan = FaultPlan(seed=2, crash_puts=(8,), key_prefix="data/")
+    store = FaultyObjectStore(root, plan=plan, retry=_retry(clock))
+    ws = Workspace(root, store=store, rows_per_fragment=128)
+    _seed_catalog(ws.catalog)
+
+    ws.run(feature_project(hi=499))
+    ws.run(feature_project(hi=999))
+    with pytest.raises(InjectedCrash):
+        ws.catalog.append("ns.raw", events_table(1000, 1100, seed=9))
+    assert plan.crashes_injected == 1
+    journal = os.path.join(root, "_catalog", "_journal")
+    assert os.listdir(journal), "the wounded publish must leave its intent"
+
+    # restart: fresh objects over the same root; Workspace construction
+    # runs journal recovery, so the half-written fragments are GC'd
+    ws2 = Workspace(root)
+    assert not os.listdir(journal)
+    assert ws2.catalog.current_snapshot("ns.raw").sequence == 1  # seed only
+    # the edit replays cleanly and the sweep continues, bitwise-equal
+    ws2.catalog.append("ns.raw", events_table(1000, 1100, seed=9))
+    warm = ws2.run(feature_project(hi=4999))
+    cold_ws = Workspace(str(tmp_path / "cold"))
+    _seed_catalog(cold_ws.catalog)
+    cold_ws.catalog.append("ns.raw", events_table(1000, 1100, seed=9))
+    assert_outputs_bitwise_equal(warm, cold_ws.run(feature_project(hi=4999)))
+
+
+def test_crash_mid_materialize_publish_rolls_back(tmp_path):
+    """materialize=True is the multi-write publish the journal exists for:
+    kill it mid-fragment-write, restart, and the replayed run must publish
+    the same table a never-crashed service would."""
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 2000)
+    clock = SimClock()
+    plan = FaultPlan(seed=4, crash_puts=(2,), key_prefix="data/models.")
+    with PipelineService(
+        root, workers=1, rows_per_fragment=256,
+        fault_plan=plan, store_retry=_retry(clock),
+    ) as svc:
+        h = svc.submit("alice", pipeline_project(hi=1599, materialize=True)).wait()
+        assert h.state == "FAILED"
+        assert isinstance(h.error, InjectedCrash)
+        assert plan.crashes_injected == 1
+
+    # restart over the same root: recovery GCs the torn publish's orphans
+    with PipelineService(root, workers=1, rows_per_fragment=256) as svc2:
+        rec = svc2.journal_recovery
+        assert rec["rolled_back"] == 1 and rec["orphans_deleted"] >= 1
+        h2 = svc2.submit("alice", pipeline_project(hi=1599, materialize=True)).wait()
+        assert h2.state == "DONE"
+        published = svc2.catalog.current_snapshot("models.scored")
+
+    ref_root = str(tmp_path / "ref")
+    write_events(Catalog(ObjectStore(ref_root), rows_per_fragment=256), 0, 2000)
+    with PipelineService(ref_root, workers=1, rows_per_fragment=256) as ref:
+        ref.submit("alice", pipeline_project(hi=1599, materialize=True)).wait()
+        ref_pub = ref.catalog.current_snapshot("models.scored")
+        # identical rows published (fragment ids are uuids; compare content)
+        assert sum(f.row_count for f in published.fragments) == sum(
+            f.row_count for f in ref_pub.fragments
+        )
+
+
+# --------------------------------------------------- service-level degradation
+def test_run_level_retry_recovers_store_giveups(tmp_path):
+    """When the store's own retry budget is exhausted (giveups unwind whole
+    runs), the service classifies the failure transient and replays the run
+    with backoff — completing it bitwise-equal to a fault-free reference."""
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 2000)
+    clock = SimClock()
+    plan = FaultPlan(seed=8, transient_rate=0.02, key_prefix="data/")
+    with PipelineService(
+        root, workers=1, rows_per_fragment=256,
+        fault_plan=plan,
+        store_retry=RetryPolicy(max_attempts=1, clock=clock),  # giveup per fault
+        max_run_attempts=10,
+        run_retry=RetryPolicy(max_attempts=10, base_delay_s=0.001, clock=clock),
+    ) as svc:
+        h = svc.submit("alice", pipeline_project(hi=1599)).wait()
+        assert h.state == "DONE"
+        assert h.attempts > 1, "the schedule must actually force a retry"
+        assert svc.metrics.total("run_retries") == h.attempts - 1
+        assert svc.metrics.total("runs_quarantined") == 0
+        res = h.result
+    assert_outputs_bitwise_equal(
+        res, cold_reference(tmp_path, "ref", pipeline_project(hi=1599))
+    )
+
+
+def test_poison_run_quarantined_and_user_bugs_not_retried(tmp_path):
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 500)
+    clock = SimClock()
+    plan = FaultPlan(seed=0, transient_rate=1.0, key_prefix="data/")
+    with PipelineService(
+        root, workers=1, rows_per_fragment=256,
+        fault_plan=plan,
+        store_retry=RetryPolicy(max_attempts=2, clock=clock),
+        max_run_attempts=3,
+        run_retry=RetryPolicy(max_attempts=3, base_delay_s=0.001, clock=clock),
+    ) as svc:
+        # poison: every data read transient-fails forever => all attempts
+        # burn out => quarantined, FAILED, the worker moves on
+        h = svc.submit("alice", pipeline_project(hi=399)).wait()
+        assert h.state == "FAILED" and h.attempts == 3
+        assert svc.metrics.total("runs_quarantined") == 1
+
+    # a deterministic user bug must fail on attempt one — retrying a crash
+    # that will always recur is not graceful, it is slow.  Fault-free
+    # service: the bug, not the store, is the only failure source.
+    from repro.pipeline.dsl import Model, Project, model, runtime
+
+    p = Project("bad")
+
+    @model(project=p, incremental="rowwise")
+    @runtime("numpy")
+    def boom(data=Model(TABLE, columns=["eventTime"], filter="eventTime <= 10")):
+        raise ValueError("user bug")
+
+    with PipelineService(
+        root + "2", workers=1, rows_per_fragment=256, max_run_attempts=3,
+        run_retry=RetryPolicy(max_attempts=3, base_delay_s=0.001, clock=clock),
+    ) as svc2:
+        write_events(svc2.catalog, 0, 500)
+        h2 = svc2.submit("alice", p).wait()
+        assert h2.state == "FAILED" and h2.attempts == 1
+        assert isinstance(h2.error, ValueError)
+        assert svc2.metrics.total("runs_quarantined") == 0
+
+
+def test_degraded_ram_only_fallback_when_spill_keeps_failing(tmp_path):
+    """A spill tier that cannot write must not take the service down: after
+    the failure threshold the store flags itself degraded, stops demoting,
+    and keeps serving from RAM — runs still complete correctly."""
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 1000)
+    clock = SimClock()
+    plan = FaultPlan(seed=0, transient_rate=1.0, key_prefix="_spill/")
+    with PipelineService(
+        root, workers=1, rows_per_fragment=256,
+        fault_plan=plan,
+        store_retry=RetryPolicy(max_attempts=2, clock=clock),
+        spill=True, spill_mode="write_through",
+    ) as svc:
+        h = svc.submit("alice", pipeline_project(hi=799)).wait()
+        assert h.state == "DONE"
+        res = h.result
+        # each store counts CONSECUTIVE failures separately; a second run's
+        # write-through attempts push the model store past the threshold
+        h2 = svc.submit("alice", pipeline_project(hi=999)).wait()
+        assert h2.state == "DONE"
+        assert svc.model_store.degraded, "spill writes all fail => degraded"
+        assert svc.metrics.total("cache_degraded") >= 1
+        assert svc.metrics.total("spill_write_failures") >= 3
+        assert svc.model_store.stats()["degraded"] is True
+    assert_outputs_bitwise_equal(
+        res, cold_reference(tmp_path, "ref", pipeline_project(hi=799), rows=1000)
+    )
+
+
+def test_write_through_spill_survives_crash_restart(tmp_path):
+    """spill_mode='write_through' parks a spill copy at insert time, so a
+    service killed WITHOUT the clean demote-all shutdown still restarts
+    warm (satellite of ISSUE 10; PR 5 follow-up f)."""
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 2000)
+    svc = PipelineService(
+        root, workers=1, rows_per_fragment=256,
+        spill=True, spill_mode="write_through",
+    )
+    r1 = svc.submit("alice", pipeline_project(hi=1599)).wait().result
+    assert svc.metrics.total("spill_writethrough_bytes") > 0
+    svc.shutdown(wait=False)  # crash: no demote_all flush
+
+    with PipelineService(
+        root, workers=1, rows_per_fragment=256, spill=True
+    ) as svc2:
+        h = svc2.submit("bob", pipeline_project(hi=1599)).wait()
+        assert h.state == "DONE"
+        r2 = h.result
+        assert svc2.metrics.total("spill_restored") > 0
+        # warm across the crash: the restarted run recomputes nothing
+        assert r2.rows_to_user_fns == 0
+        assert r2.bytes_from_spill > 0
+    assert_outputs_bitwise_equal(r1, r2)
+
+
+# -------------------------------------------------- threaded multi-tenant chaos
+def test_multi_tenant_threaded_chaos(tmp_path):
+    """Four tenants hammer one shared store through worker threads while
+    the object store throws transients and latency spikes: every run must
+    complete and agree bitwise with a fault-free single-tenant reference."""
+    root = str(tmp_path / "svc")
+    write_events(Catalog(ObjectStore(root), rows_per_fragment=256), 0, 2000)
+    clock = SimClock()
+    plan = FaultPlan(seed=13, transient_rate=0.1, latency_spike_rate=0.05)
+    tenants = ["alice", "bob", "carol", "dave"]
+    his = [799, 999, 1199, 1599]
+    with PipelineService(
+        root, workers=4, rows_per_fragment=256,
+        fault_plan=plan, store_retry=_retry(clock, attempts=8),
+        max_run_attempts=4,
+        run_retry=RetryPolicy(max_attempts=4, base_delay_s=0.001, clock=clock),
+    ) as svc:
+        handles = [
+            svc.submit(t, pipeline_project(hi=hi))
+            for t, hi in zip(tenants, his)
+            for _ in range(2)
+        ]
+        for h in handles:
+            h.wait(timeout=120)
+            assert h.state == "DONE", repr(h.error)
+        results = {h.run_id: h.result for h in handles}
+    assert plan.transients_injected > 0
+    for (t, hi), h in zip(
+        [(t, hi) for t, hi in zip(tenants, his) for _ in range(2)], handles
+    ):
+        ref = cold_reference(tmp_path, f"ref-{t}-{h.run_id}", pipeline_project(hi=hi))
+        assert_outputs_bitwise_equal(results[h.run_id], ref)
+
+
+# --------------------------------------------------------- bench10 acceptance
+def test_bench10_acceptance():
+    """The chaos bench's hard invariants at unit-test scale (the wall-time
+    overhead gate itself runs in CI at full scale; here we only sanity-check
+    the measurement plumbing)."""
+    from benchmarks import bench10_chaos as b10
+
+    result = b10.run(rows=2000, reps=1)
+    c = result["chaos_loop"]
+    assert c["completed"] == c["edits"] and c["bitwise_equal"]
+    assert c["corruption_detected"] >= 1 and c["corrupt_bytes_served"] == 0
+    assert result["retry_warmth"]["rows_ratio"] >= 3.0
+    cr = result["crash_restart"]
+    assert cr["recovered_bytes"] > 0 and cr["replay_fresh_rows"] == 0
+    assert result["overhead"]["baseline_s"] > 0
+    assert "overhead_pct" in result["overhead"]
+    table = b10.format_table(result)
+    assert "corrupt bytes served: 0" in table

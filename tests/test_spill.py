@@ -241,6 +241,53 @@ def test_restart_warm_from_manifests(tmp_path):
         np.testing.assert_array_equal(views[0].column(col), ref.column(col))
 
 
+def test_restore_skips_and_gcs_damaged_manifests(tmp_path):
+    """Regression (ISSUE 10 satellite): a crash can leave the spill prefix
+    with manifests whose payload is gone or truncated, or whose own JSON
+    never finished uploading.  restore() used to trust every manifest and
+    blow up the whole restart; it must skip + GC the bad entries, count them
+    as quarantined, and restore the rest."""
+    import json
+
+    root = str(tmp_path / "spill")
+    store = SharedStore(spill_root=root)
+    spans = {"siga": (0, 100), "sigb": (100, 200), "sigc": (200, 300), "sigd": (300, 400)}
+    for i, (sig, (lo, hi)) in enumerate(spans.items()):
+        _insert(store, sig, lo, hi, seed=i, tenant="alice")
+    store.demote_all()
+
+    raw = ObjectStore(root)
+    manifests = sorted(raw.list("_spill/manifest/"))
+    assert len(manifests) == 4
+
+    def rewrite(key, data):
+        raw.delete(key)
+        raw.put(key, data)
+
+    # payload deleted outright
+    raw.delete(json.loads(raw.get(manifests[0]))["data_key"])
+    # payload truncated (torn upload)
+    dk = json.loads(raw.get(manifests[1]))["data_key"]
+    rewrite(dk, raw.get(dk)[:-7])
+    # the manifest itself never finished uploading
+    torn = raw.get(manifests[2])
+    rewrite(manifests[2], torn[: len(torn) // 2])
+    survivor_sig = json.loads(raw.get(manifests[3]))["signature"]
+
+    fresh = SharedStore(spill_root=root)
+    assert fresh.spill_restored == 1
+    assert {e.signature for e in fresh.elements()} == {survivor_sig}
+    assert fresh.stats()["spill_quarantined"] == 3
+    # the damaged entries are GC'd, not left to poison the next restart —
+    # including the payload orphaned by the torn manifest upload
+    assert raw.list("_spill/manifest/") == [manifests[3]]
+    assert len(raw.list("_spill/data/")) == 1
+    assert fresh.spill.orphans == 1
+    # the survivor still serves its window
+    plan = _plan(fresh, survivor_sig, *spans[survivor_sig])
+    assert plan.fully_cached
+
+
 def test_service_restart_is_warm_and_bitwise_equal(tmp_path):
     """A restarted service over a populated spill root replays the workload
     with (far) fewer store bytes and bitwise-identical outputs — the
